@@ -1,0 +1,87 @@
+"""Paper reproduction: accuracy + runtime vs N for every engine.
+
+Mirrors Thistle §3.1 exactly:
+  * insert the full passage corpus into the database,
+  * for each (query, passage) pair run the query; correct iff top-1 is the
+    paired passage,
+  * total time = insert + query, at N in {100, 1000, 10000}.
+
+The embedding tower is swappable: the default "bow-hash" (hashed bag-of-
+words, the signal our procedural MARCO-like generator carries) runs the full
+sweep in seconds on CPU; --encoder sbert uses the trained mini-SBERT from
+examples/train_sbert.py. The paper's SBERT-dominates-runtime finding is
+reproduced by bench_throughput.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import VectorDB
+from repro.data import MarcoLike
+
+ENGINES = [
+    ("flat", "cosine", {}),                      # paper: Iterative cosine
+    ("flat", "l2", {}),                          # paper: Iterative euclidean
+    ("graph", "cosine", {"beam": 32, "n_hops": 6}),   # paper: HNSW cosine
+    ("graph", "l2", {"beam": 32, "n_hops": 6}),       # paper: HNSW euclidean
+    ("ivf", "cosine", {"nprobe": 8}),            # TPU-adapted HNSW (a)
+    ("lsh", "cosine", {"n_bits": 128, "n_tables": 4, "shortlist": 32}),
+    ("int8", "cosine", {}),                      # beyond paper
+]
+
+
+def bow_hash_encoder(dim: int = 256):
+    def encode(tok_rows: np.ndarray) -> np.ndarray:
+        out = np.zeros((len(tok_rows), dim), np.float32)
+        rows = np.repeat(np.arange(len(tok_rows)), tok_rows.shape[1])
+        cols = (tok_rows.astype(np.int64) * 2654435761 % dim).reshape(-1)
+        vals = (tok_rows > 0).astype(np.float32).reshape(-1)
+        np.add.at(out, (rows, cols), vals)
+        norms = np.linalg.norm(out, axis=-1, keepdims=True)
+        return out / np.maximum(norms, 1e-9)
+
+    return encode
+
+
+def run(sizes=(100, 1000, 10_000), noise: float = 0.15, encoder=None, seed=0):
+    rows = []
+    enc = encoder or bow_hash_encoder()
+    for N in sizes:
+        data = MarcoLike(n_passages=N, noise=noise, seed=seed)
+        p_emb = enc(data.passages)
+        q_emb = enc(data.queries())
+        for engine, metric, kw in ENGINES:
+            t0 = time.perf_counter()
+            db = VectorDB(engine, metric=metric, **kw).load(p_emb)
+            ready = getattr(db.index, "corpus", None)
+            if ready is None:
+                ready = db.index.codes
+            jax.block_until_ready(ready)
+            t_insert = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            _, ids = db.query(q_emb, k=1)
+            ids = np.asarray(ids)
+            t_query = time.perf_counter() - t0
+            acc = float((ids[:, 0] == np.arange(N)).mean())
+            rows.append({"engine": engine, "metric": metric, "N": N,
+                         "top1_acc": acc, "insert_s": t_insert,
+                         "query_s": t_query, "total_s": t_insert + t_query})
+    return rows
+
+
+def main(quick: bool = False):
+    sizes = (100, 1000) if quick else (100, 1000, 10_000)
+    rows = run(sizes=sizes)
+    print("name,engine,metric,N,top1_acc,insert_s,query_s,total_s")
+    for r in rows:
+        print(f"index,{r['engine']},{r['metric']},{r['N']},{r['top1_acc']:.4f},"
+              f"{r['insert_s']:.4f},{r['query_s']:.4f},{r['total_s']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

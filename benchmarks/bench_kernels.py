@@ -1,0 +1,65 @@
+"""Kernel-level benchmark: oracle-vs-kernel agreement + CPU twin walltimes.
+
+Interpret-mode Pallas timing is not meaningful (Python per-block execution);
+what we CAN measure on CPU is (a) correctness vs oracle across sizes, and
+(b) the jnp twin implementations' walltime scaling, which bounds the fused
+kernels' arithmetic. TPU-side numbers come from the dry-run roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import hamming, topk_distance
+from repro.kernels import ref as R
+
+
+def _timeit(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def topk_agreement():
+    rows = []
+    rng = np.random.default_rng(0)
+    for (N, d, Q, k) in [(2048, 64, 8, 10), (8192, 128, 4, 10)]:
+        c = jnp.asarray(rng.normal(size=(N, d)).astype(np.float32))
+        q = jnp.asarray(rng.normal(size=(Q, d)).astype(np.float32))
+        s, i = topk_distance(c, q, k=k, metric="dot", blk_n=512, interpret=True)
+        rs, ri = R.topk_distance_ref(c, q, k=k, metric="dot")
+        ok = bool((np.asarray(i) == np.asarray(ri)).all())
+        oracle_t = _timeit(jax.jit(lambda c, q: R.topk_distance_ref(c, q, k=k)), c, q)
+        rows.append({"N": N, "d": d, "match": ok, "oracle_s": oracle_t})
+    return rows
+
+
+def hamming_agreement():
+    rng = np.random.default_rng(1)
+    rows = []
+    for (T, Q, N, W) in [(4, 8, 4096, 4)]:
+        qc = jnp.asarray(rng.integers(0, 2**32, (T, Q, W), dtype=np.uint64).astype(np.uint32))
+        cc = jnp.asarray(rng.integers(0, 2**32, (T, N, W), dtype=np.uint64).astype(np.uint32))
+        out = hamming(qc, cc, blk_n=512, interpret=True)
+        ref = R.hamming_ref(qc, cc)
+        ok = bool((np.asarray(out) == np.asarray(ref)).all())
+        oracle_t = _timeit(jax.jit(R.hamming_ref), qc, cc)
+        rows.append({"N": N, "match": ok, "oracle_s": oracle_t})
+    return rows
+
+
+def main(quick: bool = False):
+    print("name,case,match,oracle_s")
+    for r in topk_agreement():
+        print(f"kernels,topk_N{r['N']}d{r['d']},{r['match']},{r['oracle_s']:.4f}")
+    for r in hamming_agreement():
+        print(f"kernels,hamming_N{r['N']},{r['match']},{r['oracle_s']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Embedding throughput — the paper's ">99% of wall time was SBERT" finding.
+
+Measures (CPU walltime; the TPU numbers live in the dry-run roofline):
+  * encoder forward tokens/s at several batch sizes (mini-SBERT smoke),
+  * end-to-end insert pipeline split: embed time vs index time — reproducing
+    the paper's observation that the DB machinery is noise next to the
+    encoder forward,
+  * dense vs chunked attention walltime at growing sequence length.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import VectorDB
+from repro.data import MarcoLike
+from repro.models import encoder as enc_lib
+
+
+def _timeit(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def encoder_throughput():
+    cfg = get_arch("thistle-sbert").smoke
+    params = enc_lib.init(cfg, jax.random.PRNGKey(0))
+    enc = jax.jit(lambda t: enc_lib.encode(params, cfg, t))
+    rows = []
+    for B in (8, 32, 128):
+        toks = jnp.ones((B, 48), jnp.int32)
+        dt = _timeit(enc, toks)
+        rows.append({"batch": B, "tokens_per_s": B * 48 / dt, "sec_per_batch": dt})
+    return rows
+
+
+def insert_split(N: int = 1000):
+    """Embed-vs-index wall time split for a full corpus insert."""
+    cfg = get_arch("thistle-sbert").smoke
+    params = enc_lib.init(cfg, jax.random.PRNGKey(0))
+    enc = jax.jit(lambda t: enc_lib.encode(params, cfg, t))
+    data = MarcoLike(n_passages=N, vocab_size=cfg.vocab_size)
+    toks = jnp.asarray(data.passages[:, :48] % cfg.vocab_size)
+    enc(toks[:128])  # compile
+    t0 = time.perf_counter()
+    embs = []
+    for i in range(0, N, 128):
+        chunk = toks[i:i + 128]
+        if chunk.shape[0] < 128:
+            chunk = jnp.pad(chunk, ((0, 128 - chunk.shape[0]), (0, 0)))
+        embs.append(np.asarray(enc(chunk)))
+    emb = np.concatenate(embs)[:N]
+    t_embed = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    db = VectorDB("flat").load(emb)
+    _ = db.query(emb[:1], k=1)
+    t_index = time.perf_counter() - t0
+    return {"N": N, "embed_s": t_embed, "index_s": t_index,
+            "embed_frac": t_embed / (t_embed + t_index)}
+
+
+def attention_scaling():
+    from repro.models.attention import _chunked_attention, _dense_attention
+    rows = []
+    for S in (256, 512, 1024):
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, S, 2, 2, 64))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, S, 2, 64))
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, S, 2, 64))
+        dense = jax.jit(lambda q, k, v: _dense_attention(
+            q, k, v, scale=0.125, causal=True, window=None, q_offset=0))
+        chunk = jax.jit(lambda q, k, v: _chunked_attention(
+            q, k, v, scale=0.125, causal=True, window=None, q_offset=0,
+            q_chunk=128, k_chunk=128))
+        rows.append({"seq": S, "dense_s": _timeit(dense, q, k, v),
+                     "chunked_s": _timeit(chunk, q, k, v)})
+    return rows
+
+
+def main(quick: bool = False):
+    print("name,key,value")
+    for r in encoder_throughput():
+        print(f"throughput,encoder_b{r['batch']}_tok_per_s,{r['tokens_per_s']:.1f}")
+    s = insert_split(300 if quick else 1000)
+    print(f"throughput,insert_embed_s,{s['embed_s']:.3f}")
+    print(f"throughput,insert_index_s,{s['index_s']:.3f}")
+    print(f"throughput,insert_embed_frac,{s['embed_frac']:.4f}")
+    for r in attention_scaling():
+        print(f"throughput,attn_s{r['seq']}_dense_s,{r['dense_s']:.4f}")
+        print(f"throughput,attn_s{r['seq']}_chunked_s,{r['chunked_s']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: build a Thistle-style vector DB, load texts, query, compare
+engines — the paper's core loop in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import VectorDB
+from repro.data import MarcoLike, simple_tokenizer
+
+
+def bow_hash_encoder(texts, dim: int = 256):
+    """text -> hashed bag-of-words embedding (swap in SBERT from
+    examples/train_sbert.py for the neural path)."""
+    toks = np.stack([simple_tokenizer(t, 30_000, 48) for t in texts])
+    out = np.zeros((len(toks), dim), np.float32)
+    rows = np.repeat(np.arange(len(toks)), toks.shape[1])
+    cols = (toks.astype(np.int64) * 2654435761 % dim).reshape(-1)
+    np.add.at(out, (rows, cols), (toks > 0).astype(np.float32).reshape(-1))
+    return out / np.maximum(np.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+
+
+def main():
+    data = MarcoLike(n_passages=500, noise=0.15, seed=0)
+    passages = data.passage_texts()
+    queries = data.query_texts()
+
+    def encoder(texts):
+        return bow_hash_encoder(list(texts))
+
+    print(f"corpus: {len(passages)} passages")
+    for engine in ("flat", "ivf", "graph", "lsh", "int8"):
+        db = VectorDB(engine, metric="cosine")
+        db.load_texts(passages, encoder)
+        scores, ids, hits = db.query_texts(queries[:200], encoder, k=3)
+        acc = float(np.mean(np.asarray(ids)[:, 0] == np.arange(200)))
+        print(f"  {engine:6s} top-1 accuracy on 200 queries: {acc:.3f}")
+
+    db = VectorDB("flat", metric="cosine").load_texts(passages, encoder)
+    q = queries[7]
+    scores, ids, hits = db.query_texts([q], encoder, k=3)
+    print(f"\nquery: {q[:60]}...")
+    for s, h in zip(np.asarray(scores)[0], hits[0]):
+        print(f"  {s:.3f}  {h[:60]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (CheckpointStore, latest_step, restore,
+                                    restore_resharded, save)
+
+__all__ = ["CheckpointStore", "save", "restore", "restore_resharded", "latest_step"]

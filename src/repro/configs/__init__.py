@@ -1,0 +1,6 @@
+from repro.configs.base import (EncoderConfig, GNNConfig, LMConfig, MLAConfig,
+                                MoEConfig, RecsysConfig)
+from repro.configs.registry import ASSIGNED, get_arch, get_config, list_archs
+
+__all__ = ["LMConfig", "EncoderConfig", "GNNConfig", "RecsysConfig", "MLAConfig",
+           "MoEConfig", "get_arch", "get_config", "list_archs", "ASSIGNED"]

@@ -1,0 +1,19 @@
+"""graphsage-reddit [arXiv:1706.02216].
+
+2 layers, d_hidden=128, mean aggregator, fanout 25-10 (paper's S1·S2).
+Per-shape graph dimensions (cora / reddit / ogbn-products / molecules) live
+in launch/shapes.py; d_in/n_classes here default to the reddit cell.
+"""
+from repro.configs.base import GNNConfig
+
+FULL = GNNConfig(
+    name="graphsage-reddit",
+    n_layers=2, d_hidden=128, d_in=602, n_classes=41,
+    aggregator="mean", sample_sizes=(25, 10),
+)
+
+SMOKE = GNNConfig(
+    name="graphsage-reddit-smoke",
+    n_layers=2, d_hidden=16, d_in=8, n_classes=4,
+    aggregator="mean", sample_sizes=(4, 3),
+)

@@ -1,0 +1,62 @@
+"""Architecture registry: ``--arch <id>`` resolution for every entry point.
+
+ARCHS maps the assigned public ids (plus the paper's own encoder) to their
+FULL (dry-run / production) and SMOKE (CPU test) configs and their family,
+which selects the step builders and sharding rules in repro.launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+_MODULES = {
+    "stablelm-1.6b": ("repro.configs.stablelm_1_6b", "lm"),
+    "h2o-danube-1.8b": ("repro.configs.h2o_danube_1_8b", "lm"),
+    "stablelm-3b": ("repro.configs.stablelm_3b", "lm"),
+    "deepseek-v2-lite-16b": ("repro.configs.deepseek_v2_lite_16b", "lm"),
+    "deepseek-v3-671b": ("repro.configs.deepseek_v3_671b", "lm"),
+    "graphsage-reddit": ("repro.configs.graphsage_reddit", "gnn"),
+    "sasrec": ("repro.configs.sasrec", "recsys"),
+    "autoint": ("repro.configs.autoint", "recsys"),
+    "deepfm": ("repro.configs.deepfm", "recsys"),
+    "fm": ("repro.configs.fm", "recsys"),
+    "thistle-sbert": ("repro.configs.thistle_sbert", "encoder"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    arch_id: str
+    family: str  # lm | encoder | gnn | recsys
+    full: object
+    smoke: object
+
+
+def _load(arch_id: str) -> ArchEntry:
+    mod_name, family = _MODULES[arch_id]
+    mod = importlib.import_module(mod_name)
+    return ArchEntry(arch_id, family, mod.FULL, mod.SMOKE)
+
+
+_CACHE: Dict[str, ArchEntry] = {}
+
+
+def get_arch(arch_id: str) -> ArchEntry:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    if arch_id not in _CACHE:
+        _CACHE[arch_id] = _load(arch_id)
+    return _CACHE[arch_id]
+
+
+def get_config(arch_id: str, *, smoke: bool = False):
+    e = get_arch(arch_id)
+    return e.smoke if smoke else e.full
+
+
+def list_archs():
+    return sorted(_MODULES)
+
+
+ASSIGNED = [a for a in _MODULES if a != "thistle-sbert"]

@@ -1,0 +1,24 @@
+"""Thistle's contribution: a vector database with interchangeable engines.
+
+Engines (all load/query, per the paper's Rust trait):
+  flat  — exact kNN (paper "Iterative"), cosine / l2 / dot
+  ivf   — k-means inverted file (TPU-adapted HNSW, hierarchy-as-quantizer)
+  graph — kNN-graph batched beam search (TPU-adapted HNSW, dense walks)
+  lsh   — random-hyperplane signatures + Hamming shortlist
+  int8  — quantized exact (beyond paper)
+"""
+from repro.core.db import ENGINES, DistributedVectorDB, VectorDB, register_engine
+from repro.core.distances import METRICS, pairwise_scores, l2_normalize
+from repro.core.flat import FlatIndex, flat_search
+from repro.core.graph import GraphIndex, beam_search, build_knn_graph
+from repro.core.ivf import IVFIndex, ivf_search, kmeans
+from repro.core.lsh import LSHIndex, lsh_search, sign_codes, hamming_distance
+from repro.core.quant import Int8FlatIndex, int8_search, quantize_rows
+
+__all__ = [
+    "ENGINES", "METRICS", "VectorDB", "DistributedVectorDB", "register_engine",
+    "FlatIndex", "IVFIndex", "GraphIndex", "LSHIndex", "Int8FlatIndex",
+    "flat_search", "ivf_search", "beam_search", "lsh_search", "int8_search",
+    "kmeans", "build_knn_graph", "sign_codes", "hamming_distance",
+    "pairwise_scores", "l2_normalize", "quantize_rows",
+]

@@ -1,0 +1,121 @@
+"""VectorDB — Thistle's load/query trait as the framework's deployment API.
+
+    db = VectorDB(engine="flat|int8|ivf|lsh|graph", metric="cosine|l2|dot")
+    db.load(vectors)                      # or db.load_texts(texts, encoder)
+    scores, ids = db.query(q, k=10)       # or db.query_texts(["..."], k=10)
+
+Mirrors the paper's Rust Trait interface (load + query per engine) with a
+registry so new engines compose in. Under a mesh, ``DistributedVectorDB``
+shards corpus rows across every device and runs the SPMD merge program in
+``repro.core.distributed``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Type
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import distances as D
+from repro.core import distributed as dist
+from repro.core.flat import FlatIndex
+from repro.core.graph import GraphIndex
+from repro.core.ivf import IVFIndex
+from repro.core.lsh import LSHIndex
+from repro.core.quant import Int8FlatIndex
+
+ENGINES: Dict[str, Type] = {
+    "flat": FlatIndex,      # paper: Iterative (exact), cosine + l2
+    "ivf": IVFIndex,        # paper: HNSW adaptation (a) — coarse quantizer
+    "graph": GraphIndex,    # paper: HNSW adaptation (b) — graph beam search
+    "lsh": LSHIndex,        # paper: LSH
+    "int8": Int8FlatIndex,  # beyond-paper: quantized exact
+}
+
+
+def register_engine(name: str, cls: Type) -> None:
+    ENGINES[name] = cls
+
+
+class VectorDB:
+    """Single-host front end over the engine registry."""
+
+    def __init__(self, engine: str = "flat", metric: str = "cosine", **engine_kwargs):
+        if engine not in ENGINES:
+            raise KeyError(f"unknown engine {engine!r}; have {sorted(ENGINES)}")
+        assert metric in D.METRICS, metric
+        self.engine_name = engine
+        self.metric = metric
+        self.index = ENGINES[engine](metric=metric, **engine_kwargs)
+        self.n = 0
+        self._texts = None
+
+    # ----------------------------------------------------------- load
+    def load(self, vectors) -> "VectorDB":
+        vectors = jnp.asarray(vectors)
+        assert vectors.ndim == 2, vectors.shape
+        self.index.load(vectors)
+        self.n = vectors.shape[0]
+        return self
+
+    def load_texts(self, texts, encoder: Callable, batch_size: int = 128) -> "VectorDB":
+        """Embed texts with `encoder(list[str]) -> (B, d)` then index them."""
+        embs = []
+        for i in range(0, len(texts), batch_size):
+            embs.append(jnp.asarray(encoder(texts[i:i + batch_size])))
+        self._texts = list(texts)
+        return self.load(jnp.concatenate(embs, axis=0))
+
+    # ----------------------------------------------------------- query
+    def query(self, q, k: int = 10):
+        """q: (d,) or (Q, d) -> (scores (Q, k) f32, ids (Q, k) int32)."""
+        if self.n == 0:
+            raise RuntimeError("query before load")
+        return self.index.query(q, k=min(k, self.n))
+
+    def query_texts(self, texts, encoder: Callable, k: int = 10):
+        q = jnp.asarray(encoder(list(texts)))
+        scores, ids = self.query(q, k)
+        if self._texts is not None:
+            hits = [[self._texts[j] for j in row] for row in ids.tolist()]
+            return scores, ids, hits
+        return scores, ids, None
+
+
+class DistributedVectorDB:
+    """Corpus row-sharded over a mesh; exact SPMD search with local top-k +
+    hierarchical all-gather merge (repro.core.distributed)."""
+
+    def __init__(self, mesh: Mesh, metric: str = "cosine", axes=None,
+                 dtype=jnp.float32, tile: int = 65536):
+        assert metric in D.METRICS
+        self.mesh = mesh
+        self.metric = metric
+        self.axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        self.dtype = jnp.dtype(dtype)
+        self.tile = tile
+        self.corpus = None
+        self.valid = None
+        self.n = 0
+        self.n_shards = 1
+        for a in self.axes:
+            self.n_shards *= mesh.shape[a]
+
+    def load(self, vectors) -> "DistributedVectorDB":
+        x = jnp.asarray(vectors, jnp.float32)
+        corpus, _sq = D.preprocess_corpus(x, self.metric)
+        corpus, valid = dist.pad_to_shards(corpus.astype(self.dtype), self.n_shards)
+        sharding = dist.corpus_sharding(self.mesh, self.axes)
+        self.corpus = jax.device_put(corpus, sharding)
+        self.valid = jax.device_put(valid, NamedSharding(self.mesh, P(self.axes)))
+        self.n = x.shape[0]
+        return self
+
+    def query(self, q, k: int = 10):
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32)).astype(self.dtype)
+        metric = "dot" if self.metric == "cosine" else self.metric
+        qq = D.l2_normalize(q) if self.metric == "cosine" else q
+        return dist.sharded_flat_search(
+            self.corpus, qq, mesh=self.mesh, k=min(k, self.n), metric=metric,
+            axes=self.axes, valid=self.valid, tile=self.tile)

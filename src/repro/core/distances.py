@@ -1,0 +1,61 @@
+"""Distance / similarity scoring for the vector DB.
+
+All engines rank by a SCORE where higher = closer, so one top-k path serves
+every metric:
+  * dot    : q . c
+  * cosine : normalized dot
+  * l2     : -(|q|^2 - 2 q.c + |c|^2)  (negative squared Euclidean)
+
+Scores accumulate in f32 regardless of storage dtype (bf16 corpus on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+METRICS = ("dot", "cosine", "l2")
+
+
+def l2_normalize(x, eps: float = 1e-9):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def preprocess_corpus(corpus, metric: str):
+    """Metric-specific corpus precompute done once at load time.
+
+    Returns (corpus, side_info): cosine pre-normalizes; l2 caches |c|^2.
+    """
+    if metric == "cosine":
+        return l2_normalize(corpus), None
+    if metric == "l2":
+        sq = jnp.sum(jnp.square(corpus.astype(jnp.float32)), axis=-1)
+        return corpus, sq
+    return corpus, None
+
+
+def pairwise_scores(q, corpus, metric: str, corpus_sq=None):
+    """q: (Q, d); corpus: (N, d) -> scores (Q, N) f32, higher = closer."""
+    if metric == "cosine":
+        q = l2_normalize(q)
+    dots = jnp.einsum("qd,nd->qn", q, corpus, preferred_element_type=jnp.float32)
+    if metric in ("dot", "cosine"):
+        return dots
+    if corpus_sq is None:
+        corpus_sq = jnp.sum(jnp.square(corpus.astype(jnp.float32)), axis=-1)
+    q_sq = jnp.sum(jnp.square(q.astype(jnp.float32)), axis=-1)
+    return -(q_sq[:, None] - 2.0 * dots + corpus_sq[None, :])
+
+
+def topk_scores(scores, k: int, valid=None):
+    """scores: (Q, N) -> (top scores (Q,k), indices (Q,k)); invalid -> -inf."""
+    if valid is not None:
+        scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+def merge_topk(scores_a, idx_a, scores_b, idx_b, k: int):
+    """Merge two (Q, ka/kb) candidate sets into global top-k."""
+    s = jnp.concatenate([scores_a, scores_b], axis=-1)
+    i = jnp.concatenate([idx_a, idx_b], axis=-1)
+    top_s, pos = jax.lax.top_k(s, k)
+    return top_s, jnp.take_along_axis(i, pos, axis=-1)

@@ -1,0 +1,96 @@
+"""Flat (exact) kNN — the paper's "Iterative" engine, TPU-native.
+
+The paper calls exact search "cumbersome" on a CPU; on a TPU the (Q, d) x
+(d, N) score is an MXU matmul and brute force IS the roofline-optimal engine
+for moderate N. The corpus is streamed through in tiles with a running top-k
+so HBM residency is one tile, mirroring the Pallas ``topk_distance`` kernel
+(``repro.kernels``) this path twins.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as D
+
+# Accounting flag (see repro.models.attention.UNROLL): unroll the corpus-tile
+# scan so dry-run cost_analysis counts every tile.
+UNROLL = False
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "tile"))
+def flat_search(corpus, q, *, metric: str = "cosine", k: int = 10,
+                tile: int = 4096, corpus_sq=None, valid=None):
+    """Exact top-k. corpus: (N, d), q: (Q, d) -> (scores (Q,k), ids (Q,k)).
+
+    Scans corpus tiles with a lax.scan carrying the running (Q, k) best —
+    peak memory O(Q * tile), not O(Q * N).
+    """
+    N, d = corpus.shape
+    Q = q.shape[0]
+    k = min(k, N)
+    if metric == "cosine":
+        q = D.l2_normalize(q)
+        metric = "dot"  # corpus rows were normalized at load time
+    if N <= tile:
+        scores = D.pairwise_scores(q, corpus, metric, corpus_sq)
+        return D.topk_scores(scores, k, valid)
+
+    n_tiles = (N + tile - 1) // tile
+    pad = n_tiles * tile - N
+    if pad:
+        corpus = jnp.pad(corpus, ((0, pad), (0, 0)))
+        v = jnp.arange(N + pad) < N if valid is None else jnp.pad(valid, (0, pad))
+        valid = v
+        if corpus_sq is not None:
+            corpus_sq = jnp.pad(corpus_sq, (0, pad))
+    tiles = corpus.reshape(n_tiles, tile, d)
+    valid_t = None if valid is None else valid.reshape(n_tiles, tile)
+    sq_t = None if corpus_sq is None else corpus_sq.reshape(n_tiles, tile)
+
+    def step(carry, xs):
+        best_s, best_i = carry
+        ti, ct = xs[0], xs[1]
+        vt = xs[2] if valid_t is not None else None
+        st = xs[3] if sq_t is not None else None
+        scores = D.pairwise_scores(q, ct, metric, st)
+        if vt is not None:
+            scores = jnp.where(vt[None, :], scores, -jnp.inf)
+        s, i = jax.lax.top_k(scores, k)
+        i = i + ti * tile
+        return D.merge_topk(best_s, best_i, s, i, k), None
+
+    xs = (jnp.arange(n_tiles), tiles)
+    if valid_t is not None:
+        xs = xs + (valid_t,)
+    if sq_t is not None:
+        xs = xs + (sq_t,)
+    init = (jnp.full((Q, k), -jnp.inf, jnp.float32), jnp.zeros((Q, k), jnp.int32))
+    (s, i), _ = jax.lax.scan(step, init, xs, unroll=UNROLL)
+    return s, i
+
+
+class FlatIndex:
+    """Exact-kNN engine (Thistle's Iterative, both metrics)."""
+
+    def __init__(self, metric: str = "cosine", tile: int = 4096, dtype=jnp.float32):
+        assert metric in D.METRICS, metric
+        self.metric = metric
+        self.tile = tile
+        self.dtype = jnp.dtype(dtype)
+        self.corpus = None
+        self.corpus_sq = None
+
+    def load(self, vectors):
+        vectors = jnp.asarray(vectors)
+        corpus, sq = D.preprocess_corpus(vectors.astype(jnp.float32), self.metric)
+        self.corpus = corpus.astype(self.dtype)
+        self.corpus_sq = sq
+        return self
+
+    def query(self, q, k: int = 10):
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+        return flat_search(self.corpus, q.astype(self.dtype), metric=self.metric,
+                           k=k, tile=self.tile, corpus_sq=self.corpus_sq)

@@ -1,0 +1,153 @@
+"""Graph-beam ANN — HNSW's greedy descent reshaped for a systolic array.
+
+HNSW = (1) a proximity graph whose greedy walks converge to the query's
+neighborhood, (2) a hierarchy of coarser graphs that place the walk's entry
+point near the target. A faithful per-query pointer-chasing walk would
+serialize on TPU scalar units, so each piece is re-expressed densely:
+
+  * the graph is a fixed-degree kNN table ``neighbors: (N, deg) int32`` —
+    gathers, not pointers;
+  * the greedy walk widens into *beam search*: every hop gathers all
+    neighbors of the beam (jnp.take), scores them against the query in one
+    (beam*deg, d) x (d,) MXU matmul, dedups by sorted id, keeps the top-beam;
+  * the hierarchy's "start near the query" becomes a coarse entry scan: the
+    query is scored against a strided 1/stride subsample of the corpus
+    (= upper layer), top entries seed the beam (= descending to layer 0).
+
+Hops run under lax.fori_loop; all shapes are static, so the whole search is
+one jitted SPMD-friendly program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as D
+from repro.core.flat import flat_search
+
+
+def build_knn_graph(corpus, *, degree: int, metric: str = "cosine",
+                    tile: int = 4096, chunk: int = 1024):
+    """Offline exact kNN graph build: (N, d) -> neighbors (N, degree) int32.
+
+    Runs the flat engine corpus-vs-corpus in query chunks (O(chunk * N)
+    peak memory); drops self-edges by taking degree+1 then masking.
+    """
+    N = corpus.shape[0]
+    deg = min(degree, N - 1)
+    rows = []
+    for start in range(0, N, chunk):
+        qc = corpus[start:start + chunk]
+        _, ids = flat_search(corpus, qc, metric=metric, k=deg + 1, tile=tile)
+        own = jnp.arange(start, start + qc.shape[0])[:, None]
+        not_self = ids != own
+        # stable-partition each row: non-self ids first, keep `deg`
+        order = jnp.argsort(~not_self, axis=-1, stable=True)
+        rows.append(jnp.take_along_axis(ids, order, axis=-1)[:, :deg])
+    nbrs = jnp.concatenate(rows, axis=0)
+    if deg < degree:  # tiny corpus: pad with self-loops
+        nbrs = jnp.pad(nbrs, ((0, 0), (0, degree - deg)), mode="edge")
+    return nbrs.astype(jnp.int32)
+
+
+def _dedup_topk(ids, scores, k: int):
+    """Top-k by score with duplicate ids suppressed (keep one copy each)."""
+    order = jnp.argsort(ids, axis=-1)
+    ids_s = jnp.take_along_axis(ids, order, axis=-1)
+    sc_s = jnp.take_along_axis(scores, order, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(ids_s[..., :1], bool), ids_s[..., 1:] == ids_s[..., :-1]],
+        axis=-1)
+    sc_s = jnp.where(dup, -jnp.inf, sc_s)
+    s, pos = jax.lax.top_k(sc_s, k)
+    return jnp.take_along_axis(ids_s, pos, axis=-1), s
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "beam", "n_hops",
+                                             "entry_stride", "n_entry"))
+def beam_search(corpus, neighbors, q, *, metric: str, k: int, beam: int = 32,
+                n_hops: int = 8, entry_stride: int = 64, n_entry: int = 4,
+                corpus_sq=None):
+    """Batched beam search. corpus (N,d); neighbors (N,deg); q (Q,d)."""
+    N, d = corpus.shape
+    Q = q.shape[0]
+    deg = neighbors.shape[1]
+    beam = min(beam, N)
+    if metric == "cosine":
+        q = D.l2_normalize(q)
+        metric = "dot"
+
+    def score_ids(ids):  # ids (Q, C) -> f32 scores (Q, C)
+        vecs = jnp.take(corpus, ids, axis=0)  # (Q, C, d)
+        dots = jnp.einsum("qd,qcd->qc", q, vecs, preferred_element_type=jnp.float32)
+        if metric == "dot":
+            return dots
+        sq = (jnp.take(corpus_sq, ids, axis=-1) if corpus_sq is not None
+              else jnp.sum(jnp.square(vecs.astype(jnp.float32)), -1))
+        return -(jnp.sum(jnp.square(q.astype(jnp.float32)), -1)[:, None]
+                 - 2.0 * dots + sq)
+
+    # --- entry: coarse "upper layer" = strided subsample
+    entry_ids = jnp.arange(0, N, entry_stride, dtype=jnp.int32)  # (M,)
+    e_scores = score_ids(jnp.broadcast_to(entry_ids[None], (Q, entry_ids.shape[0])))
+    n_e = min(n_entry, entry_ids.shape[0])
+    _, e_pos = jax.lax.top_k(e_scores, n_e)
+    seeds = jnp.take(entry_ids, e_pos)  # (Q, n_e)
+    beam_ids = jnp.pad(seeds, ((0, 0), (0, beam - n_e)), mode="edge")
+    beam_scores = score_ids(beam_ids)
+    beam_ids, beam_scores = _dedup_topk(beam_ids, beam_scores, beam)
+
+    def hop(_, carry):
+        b_ids, b_scores = carry
+        nb = jnp.take(neighbors, jnp.maximum(b_ids, 0), axis=0).reshape(Q, beam * deg)
+        nb_scores = score_ids(nb)
+        cand = jnp.concatenate([b_ids, nb], axis=-1)
+        cand_s = jnp.concatenate([b_scores, nb_scores], axis=-1)
+        return _dedup_topk(cand, cand_s, beam)
+
+    beam_ids, beam_scores = jax.lax.fori_loop(0, n_hops, hop, (beam_ids, beam_scores))
+    kk = min(k, beam)
+    s, pos = jax.lax.top_k(beam_scores, kk)
+    ids = jnp.take_along_axis(beam_ids, pos, axis=-1)
+    if kk < k:
+        s = jnp.pad(s, ((0, 0), (0, k - kk)), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return s, ids
+
+
+class GraphIndex:
+    """kNN-graph + batched beam search (TPU-adapted HNSW (b))."""
+
+    def __init__(self, metric: str = "cosine", degree: int = 16, beam: int = 32,
+                 n_hops: int = 8, entry_stride: int = 64, n_entry: int = 4,
+                 dtype=jnp.float32):
+        assert metric in D.METRICS
+        self.metric = metric
+        self.degree = degree
+        self.beam = beam
+        self.n_hops = n_hops
+        self.entry_stride = entry_stride
+        self.n_entry = n_entry
+        self.dtype = jnp.dtype(dtype)
+        self.corpus = self.neighbors = self.corpus_sq = None
+
+    def load(self, vectors):
+        x = jnp.asarray(vectors, jnp.float32)
+        corpus, sq = D.preprocess_corpus(x, self.metric)
+        self.corpus_sq = sq
+        self.neighbors = build_knn_graph(
+            corpus, degree=self.degree,
+            metric="dot" if self.metric == "cosine" else self.metric)
+        self.corpus = corpus.astype(self.dtype)
+        return self
+
+    def query(self, q, k: int = 10):
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32)).astype(self.dtype)
+        N = self.corpus.shape[0]
+        return beam_search(
+            self.corpus, self.neighbors, q, metric=self.metric, k=k,
+            beam=min(self.beam, N), n_hops=self.n_hops,
+            entry_stride=min(self.entry_stride, N), n_entry=self.n_entry,
+            corpus_sq=self.corpus_sq)

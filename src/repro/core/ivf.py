@@ -1,0 +1,131 @@
+"""IVF (inverted-file) index — the dense-hardware analogue of HNSW's hierarchy.
+
+HNSW's insight is that a coarse view of the corpus lets a query skip most of
+it. Pointer-chasing graph walks don't vectorize on a systolic array, so the
+coarse view here is a k-means quantizer (ScaNN / FAISS lineage): "layer 1" =
+centroids, "layer 0" = probed cluster buckets. Every step is a dense gather +
+MXU matmul.
+
+Buckets are padded to a fixed capacity so query shapes are static; the pad
+rows carry id -1 and score -inf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as D
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "iters"))
+def kmeans(key, x, *, n_clusters: int, iters: int = 10):
+    """Lloyd k-means (L2). x: (N, d) f32 -> centroids (n_clusters, d)."""
+    N, d = x.shape
+    init_idx = jax.random.choice(key, N, (n_clusters,), replace=False)
+    cent0 = jnp.take(x, init_idx, axis=0)
+
+    def step(cent, _):
+        scores = D.pairwise_scores(x, cent, "l2")  # (N, C), higher = closer
+        assign = jnp.argmax(scores, axis=-1)
+        sums = jax.ops.segment_sum(x, assign, num_segments=n_clusters)
+        cnts = jax.ops.segment_sum(jnp.ones((N,), x.dtype), assign, n_clusters)
+        new = sums / jnp.maximum(cnts, 1.0)[:, None]
+        # empty cluster keeps its old centroid
+        return jnp.where((cnts > 0)[:, None], new, cent), None
+
+    cent, _ = jax.lax.scan(step, cent0, None, length=iters)
+    return cent
+
+
+def assign_clusters(x, centroids):
+    return jnp.argmax(D.pairwise_scores(x, centroids, "l2"), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "nprobe", "cap"))
+def ivf_search(corpus, centroids, buckets, q, *, metric: str, k: int,
+               nprobe: int, cap: int, corpus_sq=None):
+    """corpus: (N, d); centroids: (C, d); buckets: (C, cap) ids (-1 = pad).
+
+    q: (Q, d) -> (scores (Q,k), ids (Q,k)). Probes the nprobe closest
+    centroids, scores only their buckets.
+    """
+    Q = q.shape[0]
+    if metric == "cosine":
+        q = D.l2_normalize(q)
+        metric = "dot"
+    c_scores = D.pairwise_scores(q, centroids, metric if metric == "dot" else "l2")
+    _, probe = jax.lax.top_k(c_scores, nprobe)  # (Q, nprobe)
+    cand = jnp.take(buckets, probe, axis=0).reshape(Q, nprobe * cap)  # ids
+    valid = cand >= 0
+    safe = jnp.where(valid, cand, 0)
+    vecs = jnp.take(corpus, safe, axis=0)  # (Q, nprobe*cap, d)
+    dots = jnp.einsum("qd,qnd->qn", q, vecs, preferred_element_type=jnp.float32)
+    if metric == "dot":
+        scores = dots
+    else:
+        sq = (jnp.take(corpus_sq, safe, axis=-1) if corpus_sq is not None
+              else jnp.sum(jnp.square(vecs.astype(jnp.float32)), -1))
+        q_sq = jnp.sum(jnp.square(q.astype(jnp.float32)), -1)
+        scores = -(q_sq[:, None] - 2.0 * dots + sq)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    kk = min(k, nprobe * cap)
+    s, pos = jax.lax.top_k(scores, kk)
+    ids = jnp.take_along_axis(cand, pos, axis=-1)
+    if kk < k:  # degenerate tiny-index case: pad
+        s = jnp.pad(s, ((0, 0), (0, k - kk)), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return s, ids
+
+
+class IVFIndex:
+    """k-means coarse quantizer + probed exact scoring (TPU-adapted HNSW (a))."""
+
+    def __init__(self, metric: str = "cosine", n_clusters: int = 0, nprobe: int = 8,
+                 kmeans_iters: int = 10, seed: int = 0, dtype=jnp.float32):
+        assert metric in D.METRICS
+        self.metric = metric
+        self.n_clusters = n_clusters  # 0 => sqrt(N) at load time
+        self.nprobe = nprobe
+        self.kmeans_iters = kmeans_iters
+        self.seed = seed
+        self.dtype = jnp.dtype(dtype)
+        self.corpus = self.centroids = self.buckets = self.corpus_sq = None
+        self.cap = 0
+
+    def load(self, vectors):
+        x = jnp.asarray(vectors, jnp.float32)
+        N = x.shape[0]
+        C = self.n_clusters or max(1, int(np.sqrt(N)))
+        C = min(C, N)
+        corpus, sq = D.preprocess_corpus(x, self.metric)
+        self.corpus_sq = sq
+        # cluster in the *search* geometry: cosine clusters unit vectors
+        cent = kmeans(jax.random.PRNGKey(self.seed), corpus, n_clusters=C,
+                      iters=self.kmeans_iters)
+        if self.metric == "cosine":
+            cent = D.l2_normalize(cent)
+        assign = np.asarray(assign_clusters(corpus, cent))
+        counts = np.bincount(assign, minlength=C)
+        cap = max(1, int(counts.max()))
+        buckets = np.full((C, cap), -1, np.int32)
+        fill = np.zeros(C, np.int64)
+        order = np.argsort(assign, kind="stable")
+        for i in order:
+            c = assign[i]
+            buckets[c, fill[c]] = i
+            fill[c] += 1
+        self.corpus = corpus.astype(self.dtype)
+        self.centroids = cent.astype(self.dtype)
+        self.buckets = jnp.asarray(buckets)
+        self.cap = cap
+        return self
+
+    def query(self, q, k: int = 10):
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32)).astype(self.dtype)
+        nprobe = min(self.nprobe, self.centroids.shape[0])
+        return ivf_search(self.corpus, self.centroids, self.buckets, q,
+                          metric=self.metric, k=k, nprobe=nprobe, cap=self.cap,
+                          corpus_sq=self.corpus_sq)

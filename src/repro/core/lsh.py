@@ -1,0 +1,110 @@
+"""LSH engine: random-hyperplane signatures + Hamming-distance shortlist.
+
+The paper's LSH buckets points by hash; TPUs have no scatter-friendly hash
+tables, so we keep the collision *semantics* and drop the bucket layout:
+sign(x . P) gives an n_bits signature per point (one (N,d)x(d,bits) MXU
+matmul), packed 32 bits/uint32. At query time the Hamming distance between
+the query signature and every corpus signature (XOR + popcount on the VPU —
+also a Pallas kernel, ``repro.kernels.hamming``) ranks a shortlist that is
+then exactly re-ranked. Multi-table probing = min Hamming across T
+independent plane sets: colliding in ANY table promotes a candidate, exactly
+the paper's multi-table semantics (more tables => higher recall).
+
+Random-hyperplane LSH is a *cosine* family: collision probability is
+1 - angle/pi [Charikar '02]. For l2/dot we still hash directions (the paper's
+library did the same for its Euclidean runs) and re-rank with the true metric.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as D
+
+
+def make_planes(key, d: int, n_bits: int, n_tables: int):
+    return jax.random.normal(key, (n_tables, d, n_bits), jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sign_codes(x, planes):
+    """x: (N, d); planes: (T, d, b) -> packed codes (T, N, ceil(b/32)) uint32."""
+    proj = jnp.einsum("nd,tdb->tnb", x.astype(jnp.float32), planes)
+    bits = (proj >= 0).astype(jnp.uint32)
+    T, N, b = bits.shape
+    pad = (-b) % 32
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, 0), (0, pad)))
+    words = bits.reshape(T, N, -1, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def hamming_distance(q_codes, c_codes):
+    """q: (T, Q, W) uint32; c: (T, N, W) -> min-over-tables distance (Q, N)."""
+    x = jnp.bitwise_xor(q_codes[:, :, None, :], c_codes[:, None, :, :])
+    d = jnp.sum(jax.lax.population_count(x), axis=-1, dtype=jnp.int32)  # (T,Q,N)
+    return jnp.min(d, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "shortlist"))
+def lsh_search(corpus, c_codes, planes, q, *, metric: str, k: int,
+               shortlist: int, corpus_sq=None):
+    """Hamming shortlist then exact re-rank. Returns (scores (Q,k), ids)."""
+    N = corpus.shape[0]
+    if metric == "cosine":
+        q = D.l2_normalize(q)
+        metric = "dot"
+    q_codes = sign_codes(q, planes)
+    ham = hamming_distance(q_codes, c_codes)  # (Q, N)
+    L = min(shortlist, N)
+    _, cand = jax.lax.top_k(-ham.astype(jnp.float32), L)  # (Q, L) smallest distance
+    vecs = jnp.take(corpus, cand, axis=0)  # (Q, L, d)
+    dots = jnp.einsum("qd,qld->ql", q, vecs, preferred_element_type=jnp.float32)
+    if metric == "dot":
+        scores = dots
+    else:
+        sq = (jnp.take(corpus_sq, cand, axis=-1) if corpus_sq is not None
+              else jnp.sum(jnp.square(vecs.astype(jnp.float32)), -1))
+        scores = -(jnp.sum(jnp.square(q.astype(jnp.float32)), -1)[:, None]
+                   - 2.0 * dots + sq)
+    kk = min(k, L)
+    s, pos = jax.lax.top_k(scores, kk)
+    ids = jnp.take_along_axis(cand, pos, axis=-1)
+    if kk < k:
+        s = jnp.pad(s, ((0, 0), (0, k - kk)), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return s, ids
+
+
+class LSHIndex:
+    """Random-hyperplane LSH (paper's third ANN engine)."""
+
+    def __init__(self, metric: str = "cosine", n_bits: int = 128, n_tables: int = 4,
+                 shortlist: int = 64, seed: int = 0, dtype=jnp.float32):
+        assert metric in D.METRICS
+        self.metric = metric
+        self.n_bits = n_bits
+        self.n_tables = n_tables
+        self.shortlist = shortlist
+        self.seed = seed
+        self.dtype = jnp.dtype(dtype)
+        self.corpus = self.codes = self.planes = self.corpus_sq = None
+
+    def load(self, vectors):
+        x = jnp.asarray(vectors, jnp.float32)
+        corpus, sq = D.preprocess_corpus(x, self.metric)
+        self.corpus_sq = sq
+        self.planes = make_planes(jax.random.PRNGKey(self.seed), x.shape[1],
+                                  self.n_bits, self.n_tables)
+        self.codes = sign_codes(corpus, self.planes)
+        self.corpus = corpus.astype(self.dtype)
+        return self
+
+    def query(self, q, k: int = 10):
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32)).astype(self.dtype)
+        return lsh_search(self.corpus, self.codes, self.planes, q,
+                          metric=self.metric, k=k, shortlist=self.shortlist,
+                          corpus_sq=self.corpus_sq)

@@ -1,0 +1,16 @@
+"""Synthetic data substrate (this container has no network access).
+
+marco   — procedural MS-MARCO-like (query, passage) pairs with controlled
+          query noise; ground truth is exact, so the paper's accuracy-vs-N
+          trends are measurable.
+lm      — Zipfian token streams + sharded host loader for LM training.
+clicks  — power-law click logs driven by a latent-factor model (recsys).
+graphs  — SBM node-classification graphs + packed molecule-like minigraphs.
+"""
+from repro.data.marco import MarcoLike, simple_tokenizer
+from repro.data.lm import TokenStream, host_shard_iterator
+from repro.data.clicks import ClickLogs
+from repro.data.graphs import sbm_graph, molecule_batch
+
+__all__ = ["MarcoLike", "simple_tokenizer", "TokenStream", "host_shard_iterator",
+           "ClickLogs", "sbm_graph", "molecule_batch"]

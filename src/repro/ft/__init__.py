@@ -1,0 +1,4 @@
+from repro.ft.supervisor import (FailureInjector, Supervisor, StragglerMonitor,
+                                 TrainJob)
+
+__all__ = ["Supervisor", "FailureInjector", "StragglerMonitor", "TrainJob"]

@@ -1,0 +1,155 @@
+"""Fault-tolerant training supervisor: checkpoint/restart, elastic re-mesh,
+straggler mitigation.
+
+At thousand-node scale the mean time between node failures is shorter than a
+training run, so the control loop — not the step function — owns reliability:
+
+  * ``Supervisor.run`` drives a ``TrainJob``; any step exception of a
+    registered *recoverable* type triggers rollback to the last checkpoint
+    and replay (the data path is a deterministic function of step, so replay
+    is exact).
+  * repeated failure within ``elastic_after`` retries triggers *elastic
+    re-mesh*: the job is rebuilt on a smaller device set (TrainJob.remesh),
+    restoring the same logical arrays onto the new mesh
+    (checkpoint.restore_resharded) — a 512-chip job continues on 256.
+  * ``StragglerMonitor`` tracks per-host step latencies (simulated here by
+    the data loader); hosts slower than ``deadline_factor`` x median get
+    their data shard skipped for that step (loss rescales over survivors),
+    and persistent stragglers are handed to the elastic path.
+
+Failures in this container are *injected* (no real nodes to lose); the
+injector raises at configured steps, which exercises exactly the code path a
+real preemption signal would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+
+
+class NodeFailure(RuntimeError):
+    """Simulated node loss / preemption."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises NodeFailure at the given steps (once each)."""
+
+    fail_at: Sequence[int] = ()
+    permanent_from: Optional[int] = None  # step after which a device is gone
+
+    def __post_init__(self):
+        self._pending = set(self.fail_at)
+
+    def check(self, step: int):
+        if step in self._pending:
+            self._pending.discard(step)
+            raise NodeFailure(f"injected failure at step {step}")
+        if self.permanent_from is not None and step >= self.permanent_from:
+            raise NodeFailure(f"injected permanent device loss at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_hosts: int
+    deadline_factor: float = 3.0
+    history: int = 20
+    persistent_limit: int = 5
+
+    def __post_init__(self):
+        self._lat: List[List[float]] = [[] for _ in range(self.n_hosts)]
+        self._strikes = np.zeros(self.n_hosts, np.int64)
+
+    def observe(self, host_latencies: Sequence[float]) -> List[int]:
+        """Returns host ids whose data shard should be skipped this step."""
+        med = float(np.median(host_latencies))
+        skip = []
+        for h, lat in enumerate(host_latencies):
+            self._lat[h] = (self._lat[h] + [lat])[-self.history:]
+            if lat > self.deadline_factor * max(med, 1e-9):
+                self._strikes[h] += 1
+                skip.append(h)
+            else:
+                self._strikes[h] = 0
+        return skip
+
+    def persistent_stragglers(self) -> List[int]:
+        return [h for h in range(self.n_hosts)
+                if self._strikes[h] >= self.persistent_limit]
+
+
+class TrainJob:
+    """What the supervisor runs. Subclass / duck-type per workload.
+
+    Required surface:
+      state                      — current pytree (params, opt, step counter)
+      run_step(step) -> metrics  — one optimizer step (may raise NodeFailure)
+      save_state(store, step) / load_state(store) -> step
+      remesh(scale) -> TrainJob  — rebuild on a reduced device set (elastic)
+    """
+
+    def run_step(self, step: int) -> Dict:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def save_state(self, store: CheckpointStore, step: int):
+        raise NotImplementedError
+
+    def load_state(self, store: CheckpointStore) -> int:
+        raise NotImplementedError
+
+    def remesh(self, scale: float) -> "TrainJob":
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class Supervisor:
+    job: TrainJob
+    store: CheckpointStore
+    total_steps: int
+    checkpoint_every: int = 50
+    max_retries: int = 10
+    elastic_after: int = 2  # consecutive failures before shrinking the mesh
+    on_event: Optional[Callable[[str, dict], None]] = None
+
+    def _emit(self, kind: str, **info):
+        if self.on_event:
+            self.on_event(kind, info)
+
+    def run(self) -> Dict:
+        step = 0
+        start = self.job.load_state(self.store)
+        if start is not None:
+            step = start
+            self._emit("resume", step=step)
+        consecutive_failures = 0
+        retries = 0
+        history = []
+        while step < self.total_steps:
+            try:
+                metrics = self.job.run_step(step)
+                history.append(metrics)
+                step += 1
+                consecutive_failures = 0
+                if step % self.checkpoint_every == 0 or step == self.total_steps:
+                    self.job.save_state(self.store, step)
+                    self._emit("checkpoint", step=step)
+            except NodeFailure as e:
+                retries += 1
+                consecutive_failures += 1
+                self._emit("failure", step=step, error=str(e),
+                           consecutive=consecutive_failures)
+                if retries > self.max_retries:
+                    raise RuntimeError(f"exceeded {self.max_retries} retries") from e
+                if consecutive_failures >= self.elastic_after:
+                    self._emit("elastic_remesh", step=step)
+                    self.job = self.job.remesh(0.5)
+                    consecutive_failures = 0
+                restored = self.job.load_state(self.store)
+                step = restored if restored is not None else 0
+                self._emit("restart", step=step)
+        return {"final_step": step, "n_retries": retries, "history": history}

@@ -1,0 +1,99 @@
+"""Flash attention Pallas TPU kernel — the paper's 99%-of-wall-time hot spot.
+
+Online-softmax attention: K/V stream through VMEM in (blk_k, dh) tiles while
+f32 running-max / denominator / output accumulators live in VMEM scratch, so
+the (Sq, Sk) score matrix never exists in HBM. Tiling is MXU-shaped: blk_q x
+dh and blk_k x dh tiles feed 128x128 systolic matmuls; dh is padded to a
+lane multiple by the ops.py wrapper.
+
+Grid: (BH, Sq/blk_q, Sk/blk_k), KV innermost so the per-(b, q-block) scratch
+carries across the KV sweep (TPU grids execute sequentially minor-major).
+Causal blocks strictly above the diagonal are skipped via pl.when — for full
+causal shapes that halves the MXU work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  blk_q: int, blk_k: int, n_k: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level causal skip: the lowest q position in this block vs the
+    # highest k position — strictly-above-diagonal blocks do no work
+    run = (qi * blk_q + blk_q - 1 >= kj * blk_k) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (blk_q, dh)
+        k = k_ref[0].astype(jnp.float32)  # (blk_k, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+            k_pos = kj * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k", "scale",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    blk_q: int = 128, blk_k: int = 128, interpret: bool = False):
+    """q/k/v: (BH, S, dh) -> (BH, Sq, dh). GQA head-repeat handled by caller."""
+    BH, Sq, dh = q.shape
+    Sk = k.shape[1]
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(dh))
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, blk_q, Sk, blk_k)
+    n_q, n_k = Sq // blk_q, Sk // blk_k
+
+    kernel = functools.partial(_flash_kernel, blk_q=blk_q, blk_k=blk_k, n_k=n_k,
+                               causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),   # running max
+            pltpu.VMEM((blk_q,), jnp.float32),   # running denominator
+            pltpu.VMEM((blk_q, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

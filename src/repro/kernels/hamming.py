@@ -1,0 +1,53 @@
+"""Hamming-distance Pallas kernel — the LSH engine's ranking pass.
+
+XOR + popcount between the query signatures and every packed corpus code,
+min-reduced over hash tables. Integer VPU work, no MXU: popcount is the
+classic SWAR bit-slide (Mosaic has no population-count primitive), five
+shift/mask/multiply steps per uint32 word.
+
+Grid: (N / blk_n,); corpus-code tiles (T, blk_n, W) stream through VMEM,
+query codes (T, Q, W) stay resident; output block (Q, blk_n) per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _popcount32(v):
+    """SWAR popcount over uint32 lanes."""
+    v = v - ((v >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> jnp.uint32(2)) & jnp.uint32(0x33333333))
+    v = (v + (v >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> jnp.uint32(24)).astype(jnp.int32)
+
+
+def _hamming_kernel(q_ref, c_ref, o_ref):
+    qc = q_ref[...]  # (T, Q, W) uint32
+    cc = c_ref[...]  # (T, blk_n, W)
+    x = jnp.bitwise_xor(qc[:, :, None, :], cc[:, None, :, :])  # (T, Q, blk, W)
+    d = jnp.sum(_popcount32(x), axis=-1)  # (T, Q, blk)
+    o_ref[...] = jnp.min(d, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n", "interpret"))
+def hamming(q_codes, c_codes, *, blk_n: int = 1024, interpret: bool = False):
+    """q: (T, Q, W) uint32; c: (T, N, W) uint32 -> (Q, N) int32 min-Hamming."""
+    T, Q, W = q_codes.shape
+    N = c_codes.shape[1]
+    blk_n = min(blk_n, N)
+    assert N % blk_n == 0, (N, blk_n)
+    return pl.pallas_call(
+        _hamming_kernel,
+        grid=(N // blk_n,),
+        in_specs=[
+            pl.BlockSpec((T, Q, W), lambda n: (0, 0, 0)),
+            pl.BlockSpec((T, blk_n, W), lambda n: (0, n, 0)),
+        ],
+        out_specs=pl.BlockSpec((Q, blk_n), lambda n: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.int32),
+        interpret=interpret,
+    )(q_codes, c_codes)

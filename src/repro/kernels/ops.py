@@ -1,0 +1,98 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding/alignment (MXU wants lane multiples of 128), GQA head layout,
+and backend selection: ``interpret=None`` auto-resolves to True off-TPU so
+the same call sites run everywhere (interpret executes the kernel body in
+Python on CPU; on TPU it lowers to Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import hamming as _hm
+from repro.kernels import topk_distance as _tk
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if not pad:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    blk_q: int = 128, blk_k: int = 128, interpret=None):
+    """q: (B, Sq, H, dh); k/v: (B, Sk, KV, dh) -> (B, Sq, H, dh).
+
+    GQA: KV heads are repeated to H before the kernel; dh pads to 128 lanes.
+    """
+    interpret = _auto_interpret(interpret)
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(dh))
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, dh)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, -1, dh)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, -1, dh)
+    qf, _ = _pad_axis(qf, 2, 128)
+    kf, _ = _pad_axis(kf, 2, 128)
+    vf, _ = _pad_axis(vf, 2, 128)
+    o = _fa.flash_attention(qf, kf, vf, causal=causal, scale=scale,
+                            blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+    o = o[..., :dh].reshape(B, H, Sq, dh)
+    return jnp.moveaxis(o, 1, 2)
+
+
+def topk_distance(corpus, q, *, k: int, metric: str = "dot", corpus_sq=None,
+                  valid=None, blk_n: int = 512, interpret=None):
+    """Fused exact top-k. corpus: (N, d); q: (Q, d); metric in {dot, l2}.
+
+    Pads N to the tile size; pad rows (and rows where ``valid`` is False) are
+    knocked out inside the kernel via the additive score bias.
+    """
+    interpret = _auto_interpret(interpret)
+    N, d = corpus.shape
+    blk_n = min(blk_n, N)
+    corpus, _ = _pad_axis(corpus, 0, blk_n)
+    Np = corpus.shape[0]
+    l2 = metric == "l2"
+    if l2:
+        if corpus_sq is None:
+            corpus_sq = jnp.sum(jnp.square(corpus.astype(jnp.float32)), axis=-1)
+        else:
+            corpus_sq, _ = _pad_axis(corpus_sq.astype(jnp.float32), 0, blk_n)
+        bias = -corpus_sq
+    else:
+        bias = jnp.zeros((Np,), jnp.float32)
+    keep = jnp.arange(Np) < N
+    if valid is not None:
+        keep = keep & jnp.pad(valid, (0, Np - valid.shape[0]))
+    bias = jnp.where(keep, bias, -1e30)
+    return _tk.topk_distance(corpus, q, k=k, l2=l2, bias=bias, blk_n=blk_n,
+                             interpret=interpret)
+
+
+def hamming(q_codes, c_codes, *, blk_n: int = 1024, interpret=None):
+    """q: (T, Q, W); c: (T, N, W) uint32 -> (Q, N) int32 min-over-tables."""
+    interpret = _auto_interpret(interpret)
+    T, Q, W = q_codes.shape
+    N = c_codes.shape[1]
+    blk_n = min(blk_n, N)
+    c_codes, _ = _pad_axis(c_codes, 1, blk_n)
+    out = _hm.hamming(q_codes, c_codes, blk_n=blk_n, interpret=interpret)
+    return out[:, :N]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the mathematical definition, written for clarity not speed;
+tests sweep shapes/dtypes and assert the kernels match these within per-dtype
+tolerances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q/k/v: (BH, S, dh) -> (BH, Sq, dh). Materialized-softmax oracle, f32."""
+    BH, Sq, dh = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def topk_distance_ref(corpus, q, *, k: int, metric: str = "dot", corpus_sq=None):
+    """corpus: (N, d); q: (Q, d) -> (scores (Q, k) f32, ids (Q, k) int32).
+
+    Fused score + top-k oracle; ``metric`` in {dot, l2} (cosine = dot after
+    normalization, done by the caller).
+    """
+    dots = jnp.einsum("qd,nd->qn", q.astype(jnp.float32), corpus.astype(jnp.float32))
+    if metric == "l2":
+        c_sq = (corpus_sq if corpus_sq is not None
+                else jnp.sum(jnp.square(corpus.astype(jnp.float32)), -1))
+        q_sq = jnp.sum(jnp.square(q.astype(jnp.float32)), -1)
+        scores = -(q_sq[:, None] - 2.0 * dots + c_sq[None, :])
+    else:
+        scores = dots
+    s, i = jax.lax.top_k(scores, k)
+    return s, i.astype(jnp.int32)
+
+
+def hamming_ref(q_codes, c_codes):
+    """q: (T, Q, W) uint32; c: (T, N, W) uint32 -> (Q, N) int32 min-Hamming."""
+    x = jnp.bitwise_xor(q_codes[:, :, None, :], c_codes[:, None, :, :])
+    d = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    return jnp.min(d, axis=0)

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Trip-count-correct cost accounting for scanned LM programs.
+
+XLA's cost_analysis (and the optimized-HLO collective inventory) counts a
+while-loop body ONCE, so a 61-layer lax.scan under-reports flops/bytes/
+collective-bytes by ~61x. This module recovers true per-step totals by
+lowering small UNROLLED variants of each LM cell and extracting the linear
+structure:
+
+    cost(L_dense, L_moe) = L_dense*P_d + L_moe*P_m + F
+
+from 2-3 reduced-depth builds ((1,1),(1,3),(2,1) for MoE; L=2,4 dense), all
+with scans unrolled (layers, attention chunks, corpus tiles) and one
+microbatch. Train cells additionally lower grads-only twins to separate the
+once-per-step optimizer cost O from the per-microbatch fwd/bwd cost:
+
+    step = n_micro * (fwd/bwd per micro) + O
+
+Assumption (checked by construction): layers are sharding-homogeneous, so
+per-layer cost at depth 2-4 equals per-layer cost at depth 24-61. Memory
+numbers are NOT taken from these builds — the production dry-run artifact
+(launch/dryrun.py) owns those.
+
+Usage: python -m repro.launch.accounting --arch stablelm-1.6b --shape train_4k
+       python -m repro.launch.accounting --all
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+
+def _measure(built):
+    from repro.launch.dryrun import collective_stats
+    with built_mesh(built):
+        compiled = built.lower().compile()
+    cost = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),       # unfused upper bound
+        "bytes_out": float(cost.get("bytes accessedout{}", 0.0)),  # writes only
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "coll_bytes": float(sum(v["bytes"] for v in coll.values())),
+        "coll_by_kind": {k: v["bytes"] for k, v in coll.items()},
+    }
+
+
+def built_mesh(built):
+    # the mesh is closed over in the step; reuse the production mesh context
+    from repro.launch.mesh import make_production_mesh
+    return make_production_mesh(multi_pod=False)
+
+
+def _lin(c_hi, c_lo, dl):
+    return {k: ((c_hi[k] - c_lo[k]) / dl if not isinstance(c_hi[k], dict) else
+                {kk: (c_hi[k][kk] - c_lo[k][kk]) / dl for kk in c_hi[k]})
+            for k in c_hi}
+
+
+def _axpy(a, x, y=None):
+    """a*x (+ y) over the cost dict structure."""
+    out = {}
+    for k, v in x.items():
+        if isinstance(v, dict):
+            out[k] = {kk: a * vv + (y[k][kk] if y else 0.0) for kk, vv in v.items()}
+        else:
+            out[k] = a * v + (y[k] if y else 0.0)
+    return out
+
+
+def _reduced_cfgs(cfg):
+    """[(tag, cfg_variant, (n_dense, n_moe))] small unrolled depth points."""
+    if cfg.moe is None:
+        return [("L2", dataclasses.replace(cfg, n_layers=2), (2, 0)),
+                ("L4", dataclasses.replace(cfg, n_layers=4), (4, 0))]
+    mk = lambda d, m: dataclasses.replace(cfg, n_layers=d + m, first_k_dense=d)
+    return [("d1m1", mk(1, 1), (1, 1)),
+            ("d1m3", mk(1, 3), (1, 3)),
+            ("d2m1", mk(2, 1), (2, 1))]
+
+
+def _extract(points):
+    """points: [((n_d, n_m), cost)] -> (P_dense, P_moe, Fixed)."""
+    if len(points) == 2:  # dense arch: (2,0), (4,0)
+        (l_a, c_a), (l_b, c_b) = points
+        per = _lin(c_b, c_a, l_b[0] - l_a[0])
+        fixed = _axpy(-l_a[0], per, c_a)
+        zero = _axpy(0.0, per)
+        return per, zero, fixed
+    by = {l: c for l, c in points}
+    p_m = _lin(by[(1, 3)], by[(1, 1)], 2)
+    p_d = _lin(by[(2, 1)], by[(1, 1)], 1)
+    fixed = _axpy(-1.0, p_d, _axpy(-1.0, p_m, by[(1, 1)]))
+    return p_d, p_m, fixed
+
+
+def _build(cell_cfg, cell, mesh, *, with_opt, n_micro):
+    import repro.models.attention as attn_mod
+    import repro.models.transformer as tf_mod
+    import repro.core.flat as flat_mod
+    from repro.launch import steps
+    attn_mod.UNROLL = True
+    tf_mod.UNROLL = True
+    flat_mod.UNROLL = True
+    cell = dataclasses.replace(cell, cfg=cell_cfg)
+    if cell.step == "train":
+        opts = dict(steps.train_options(cell.arch_id, cell.family))
+        opts["n_micro"] = 1
+        # one production microbatch: shrink the global batch accordingly
+        B = cell.inputs["tokens"].shape[0] // n_micro
+        inputs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((B,) + s.shape[1:], s.dtype),
+            cell.inputs)
+        return steps.make_lm_train(cell_cfg, mesh, cell.arch_id, inputs,
+                                   family=cell.family, opts=opts,
+                                   with_opt=with_opt)
+    built = steps.build_cell_program(cell, mesh)
+    return built
+
+
+def run_cell(arch_id: str, shape_id: str, verbose=True):
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import get_cell, cell_is_skipped
+    from repro.launch import steps
+
+    if cell_is_skipped(arch_id, shape_id):
+        return None
+    mesh = make_production_mesh(multi_pod=False)
+    cell = get_cell(arch_id, shape_id)
+    if cell.family not in ("lm", "encoder"):
+        return None  # non-LM programs have no layer scans; dry-run is exact
+    cfg = cell.cfg
+    # accounting chunk: few, large attention chunks so unrolling stays small
+    S = cell.meta["seq_len"]
+    cfg = dataclasses.replace(cfg, attn_chunk=max(1024, S // 8))
+    prod_opts = steps.train_options(arch_id, cell.family)
+    n_micro = prod_opts["n_micro"] if cell.step == "train" else 1
+
+    t0 = time.time()
+    points_full, points_noopt = [], []
+    for tag, cfg_v, lcount in _reduced_cfgs(cfg):
+        built = _build(cfg_v, cell, mesh, with_opt=True, n_micro=n_micro)
+        c = _measure(built)
+        points_full.append((lcount, c))
+        if verbose:
+            print(f"  [{arch_id} x {shape_id}] variant {tag}: "
+                  f"{c['flops']/1e9:.2f} GF/dev, coll {c['coll_bytes']/2**20:.1f} MiB"
+                  f" ({time.time()-t0:.0f}s)")
+        if cell.step == "train":
+            built_n = _build(cfg_v, cell, mesh, with_opt=False, n_micro=n_micro)
+            points_noopt.append((lcount, _measure(built_n)))
+
+    p_d, p_m, fixed = _extract(points_full)
+    n_d, n_m = cell.cfg.n_dense_layers, cell.cfg.n_moe_layers
+    if cell.cfg.moe is None:
+        n_d, n_m = cell.cfg.n_layers, 0
+    full = _axpy(n_d, p_d, _axpy(n_m, p_m, fixed))
+
+    if cell.step == "train" and n_micro > 1:
+        pd_n, pm_n, fx_n = _extract(points_noopt)
+        fwd = _axpy(n_d, pd_n, _axpy(n_m, pm_n, fx_n))       # grads-only step
+        opt = {k: (full[k] - fwd[k]) if not isinstance(full[k], dict) else
+               {kk: full[k][kk] - fwd[k][kk] for kk in full[k]}
+               for k in full}
+        total = _axpy(n_micro, fwd, opt)
+    else:
+        total = full
+
+    rec = {"arch": arch_id, "shape": shape_id, "n_micro": n_micro,
+           "per_dense_layer": p_d, "per_moe_layer": p_m, "fixed": fixed,
+           "total": total, "seconds": round(time.time() - t0, 1)}
+    if verbose:
+        print(f"[{arch_id} x {shape_id}] ACCOUNTED total: "
+              f"{total['flops']/1e9:.1f} GF/dev, {total['bytes']/2**30:.2f} GiB/dev, "
+              f"coll {total['coll_bytes']/2**20:.1f} MiB/dev  ({rec['seconds']}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/accounting")
+    args = ap.parse_args()
+    from repro.launch.shapes import all_cells
+    from repro.configs import get_arch
+    cells = (all_cells() if args.all else [(args.arch, args.shape)])
+    os.makedirs(args.out, exist_ok=True)
+    for arch_id, shape_id in cells:
+        if get_arch(arch_id).family not in ("lm", "encoder"):
+            continue
+        path = os.path.join(args.out, f"{arch_id}__{shape_id}__pod1.json")
+        if os.path.exists(path):
+            print(f"[{arch_id} x {shape_id}] cached")
+            continue
+        try:
+            rec = run_cell(arch_id, shape_id)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            rec = {"arch": arch_id, "shape": shape_id, "status": "error",
+                   "error": str(e)}
+        if rec is not None:
+            with open(path, "w") as fh:
+                json.dump(rec, fh, indent=1)
+
+
+if __name__ == "__main__":
+    main()

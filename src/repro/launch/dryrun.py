@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+CPU devices stand in for 2 pods x 256 v5e chips. For each cell we
+  .lower().compile() the cell's program under the production mesh, then record
+    - compiled.memory_analysis()   (bytes/device: does it fit 16 GB HBM?)
+    - compiled.cost_analysis()     (HLO FLOPs + bytes for §Roofline)
+    - collective bytes parsed from the optimized HLO (all-gather, all-reduce,
+      reduce-scatter, all-to-all, collective-permute)
+and write one JSON per cell under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in an HLO snippet."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-kind (count, output bytes) from optimized HLO.
+
+    Counts the RESULT shape of each collective op (the bytes the fabric
+    must deliver per participant); 'start' variants counted once, 'done'
+    skipped."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT )?[%\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start)?\(", s)
+        if not m:
+            continue
+        out_shape, kind = m.group(1), m.group(2)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _shape_bytes(out_shape)
+    return stats
+
+
+def run_cell(arch_id: str, shape_id: str, *, multi_pod: bool, verbose: bool = True):
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import get_cell, cell_is_skipped
+    from repro.launch.steps import build_cell_program
+
+    skip = cell_is_skipped(arch_id, shape_id)
+    if skip:
+        return {"arch": arch_id, "shape": shape_id, "status": "skipped",
+                "reason": skip}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = get_cell(arch_id, shape_id)
+    built = build_cell_program(cell, mesh)
+    with mesh:
+        lowered = built.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch_id, "shape": shape_id, "status": "ok",
+        "mesh": {"shape": dict(mesh.shape), "n_devices": int(n_dev),
+                 "multi_pod": multi_pod},
+        "step": built.name,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or
+                              (getattr(mem, "argument_size_in_bytes", 0)
+                               + getattr(mem, "output_size_in_bytes", 0)
+                               + getattr(mem, "temp_size_in_bytes", 0))),
+        },
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        },
+        "collectives": coll,
+        "collective_bytes_total": int(sum(v["bytes"] for v in coll.values())),
+    }
+    if verbose:
+        m = rec["memory"]
+        print(f"[{arch_id} x {shape_id}] {'2-pod' if multi_pod else '1-pod'} "
+              f"ok: lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"args/dev {m['argument_bytes']/2**30:.2f} GiB "
+              f"temp/dev {m['temp_bytes']/2**30:.2f} GiB | "
+              f"GFLOPs {rec['cost']['flops']/1e9:.1f} "
+              f"coll {rec['collective_bytes_total']/2**20:.1f} MiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.launch.shapes import all_cells
+
+    cells = (all_cells(include_skipped=True) if args.all
+             else [(args.arch, args.shape)])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch_id, shape_id in cells:
+        for mp in meshes:
+            tag = f"{arch_id}__{shape_id}__{'pod2' if mp else 'pod1'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[{tag}] cached")
+                continue
+            try:
+                rec = run_cell(arch_id, shape_id, multi_pod=mp)
+            except Exception as e:  # a failure here is a sharding bug
+                traceback.print_exc()
+                rec = {"arch": arch_id, "shape": shape_id, "status": "error",
+                       "multi_pod": mp, "error": f"{type(e).__name__}: {e}"}
+                failures.append(tag)
+            with open(path, "w") as fh:
+                json.dump(rec, fh, indent=1)
+    if failures:
+        print(f"\nFAILED cells: {failures}")
+        raise SystemExit(1)
+    print("\nall requested cells lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell, from the compiled single-pod dry-run:
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOPs          [s]
+  memory term     = HLO_bytes_per_chip / HBM_bw              [s]
+  collective term = collective_bytes_per_chip / ICI_bw       [s]
+
+(cost_analysis and the partitioned HLO are already per-device — calibrated
+against a hand-sharded matmul: reported flops = global/256 exactly.)
+
+MODEL_FLOPS is the textbook useful-work count (6·N·D train / 2·N_active·D
+forward, family-specific below); MODEL/HLO is the fraction of compiled
+compute that is "useful" — remat recompute, dispatch one-hots and padding
+all push it below 1.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 2**30  # v5e: 16 GiB
+
+
+# ------------------------------------------------- model (useful) FLOPs
+
+
+def model_flops(arch_id: str, shape_id: str) -> Optional[float]:
+    """Global useful FLOPs for one step of this cell."""
+    from repro.configs import get_arch
+    from repro.launch.shapes import FAMILY_SHAPES
+    e = get_arch(arch_id)
+    shp = FAMILY_SHAPES[e.family][shape_id]
+    cfg = e.full
+    if e.family in ("lm", "encoder"):
+        N_act = cfg.n_active_params()
+        B, S = shp["global_batch"], shp["seq_len"]
+        if shp["step"] == "train":
+            base = 6.0 * N_act * B * S
+            # attention scores+context: 12·L·d_head·H·S^2·B fwd+bwd (causal /2)
+            attn = 6.0 * 2 * cfg.n_layers * cfg.n_heads * cfg.head_dim * S * S * B / 2
+            return base + attn
+        if shp["step"] == "prefill":
+            base = 2.0 * N_act * B * S
+            attn = 2.0 * 2 * cfg.n_layers * cfg.n_heads * cfg.head_dim * S * S * B / 2
+            return base + attn
+        # decode: one token; attention reads the whole cache
+        C = S if cfg.window is None else min(S, cfg.window)
+        attn = 2.0 * 2 * cfg.n_layers * cfg.n_heads * cfg.head_dim * C * B
+        return 2.0 * N_act * B + attn
+    if e.family == "gnn":
+        d_h, L = cfg.d_hidden, cfg.n_layers
+        if shp["step"] == "train_full":
+            N, E = shp["n_nodes"], 2 * shp["n_edges"]
+            d_in = shp["d_feat"]
+            f = 0.0
+            d_prev = d_in
+            for _ in range(L):
+                f += 2.0 * N * d_prev * d_h * 2 + 2.0 * E * d_prev  # matmuls + agg
+                d_prev = d_h
+            f += 2.0 * N * d_h * shp["n_classes"]
+            return 3.0 * f  # fwd + bwd
+        if shp["step"] == "train_blocks":
+            from repro.models.gnn import block_static_shapes
+            n_in, blocks = block_static_shapes(shp["batch_nodes"], shp["fanout"])
+            d_prev = shp["d_feat"]
+            f = 0.0
+            for b in blocks:
+                f += 2.0 * b["n_src"] * d_prev * d_h + 2.0 * b["n_dst"] * d_prev * d_h
+                f += 2.0 * b["n_edges"] * d_prev
+                d_prev = d_h
+            f += 2.0 * shp["batch_nodes"] * d_h * shp["n_classes"]
+            return 3.0 * f
+        B, n, ed = shp["batch"], shp["n_nodes"], shp["n_edges"]
+        d_prev, f = shp["d_feat"], 0.0
+        for _ in range(L):
+            f += 2.0 * B * n * d_prev * d_h * 2 + 2.0 * B * ed * d_prev
+            d_prev = d_h
+        f += 2.0 * B * d_h * shp["n_classes"]
+        return 3.0 * f
+    # recsys
+    B = shp["batch"]
+    if cfg.kind == "sasrec":
+        d, S, L = cfg.embed_dim, cfg.seq_len, cfg.n_blocks
+        per_tok = 2.0 * (4 * d * d + 2 * d * d) + 2.0 * 2 * d * S  # proj + attn
+        fwd = B * S * per_tok * L
+        if shp["step"] == "train":
+            return 3.0 * fwd
+        if shp["step"] == "retrieval":
+            return fwd + 2.0 * B * shp["n_candidates"] * d
+        return fwd + 2.0 * B * cfg.n_items * d  # serve scores all items
+    F = cfg.n_sparse + cfg.n_dense
+    k = cfg.embed_dim
+    per = 2.0 * F * k  # embedding sum + fm trick
+    if cfg.kind in ("deepfm",):
+        dims = (F * k,) + tuple(cfg.mlp_dims) + (1,)
+        per += sum(2.0 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    if cfg.kind == "autoint":
+        da = cfg.d_attn * cfg.n_attn_heads
+        d_prev = k
+        for _ in range(cfg.n_attn_layers):
+            per += 2.0 * F * d_prev * da * 4 + 2.0 * F * F * da * 2
+            d_prev = da
+    if shp["step"] == "train":
+        return 3.0 * B * per
+    if shp["step"] == "retrieval":
+        q_dim = k + 1 if cfg.kind in ("fm", "deepfm") else cfg.d_attn * cfg.n_attn_heads
+        return B * per + 2.0 * B * shp["n_candidates"] * q_dim
+    return B * per
+
+
+# ------------------------------------------------- table
+
+
+def analyze(rec: Dict, acct: Optional[Dict] = None) -> Dict:
+    """acct: trip-count-correct totals from launch/accounting.py (LM cells,
+    whose scans make the raw dry-run numbers per-body undercounts)."""
+    if acct is not None and "total" in acct:
+        flops_dev = acct["total"]["flops"]
+        bytes_dev = acct["total"]["bytes"]
+        coll_dev = acct["total"]["coll_bytes"]
+    else:
+        flops_dev = rec["cost"]["flops"]
+        bytes_dev = rec["cost"]["bytes_accessed"]
+        coll_dev = rec["collective_bytes_total"]
+    n_dev = rec["mesh"]["n_devices"]
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = (mf / (flops_dev * n_dev)) if (mf and flops_dev) else None
+    # roofline fraction: useful work at peak vs the step's bound
+    t_bound = max(t_c, t_m, t_x)
+    frac = (mf / n_dev / PEAK_FLOPS) / t_bound if (mf and t_bound) else None
+    peak_mem = rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom, "model_flops": mf,
+        "useful_ratio": useful, "roofline_fraction": frac,
+        "mem_per_dev_gib": peak_mem / 2**30,
+        "fits_hbm": peak_mem <= HBM_PER_CHIP,
+        "accounted": acct is not None,
+        "collectives": {k: v for k, v in rec["collectives"].items() if v["count"]},
+    }
+
+
+def fmt_row(a: Dict) -> str:
+    def s(x):
+        return f"{x*1e3:9.3f}" if x is not None else "      n/a"
+    fr = f"{a['roofline_fraction']*100:5.1f}%" if a["roofline_fraction"] else "  n/a"
+    ur = f"{a['useful_ratio']*100:5.1f}%" if a["useful_ratio"] else "  n/a"
+    return (f"| {a['arch']:22s} | {a['shape']:14s} | {s(a['compute_s'])} | "
+            f"{s(a['memory_s'])} | {s(a['collective_s'])} | {a['dominant']:10s} | "
+            f"{ur} | {fr} | {a['mem_per_dev_gib']:6.2f} | "
+            f"{'y' if a['fits_hbm'] else 'OVER'} |")
+
+
+HEADER = ("| arch                   | shape          | compute ms | memory ms | "
+          "collect ms | dominant   | MODEL/HLO | roofline | GiB/dev | fits |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--accounting-dir", default="experiments/accounting")
+    ap.add_argument("--pod", default="pod1")
+    ap.add_argument("--json-out", default="experiments/roofline.json")
+    args = ap.parse_args()
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dryrun_dir, f"*__{args.pod}.json"))):
+        with open(path) as fh:
+            rec = json.load(fh)
+        if rec.get("status") != "ok":
+            continue
+        acct = None
+        apath = os.path.join(args.accounting_dir, os.path.basename(path))
+        if os.path.exists(apath):
+            with open(apath) as fh:
+                acct = json.load(fh)
+            if acct.get("status") == "error":
+                acct = None
+        rows.append(analyze(rec, acct))
+    print(HEADER)
+    for a in rows:
+        print(fmt_row(a))
+    os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+    with open(args.json_out, "w") as fh:
+        json.dump(rows, fh, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

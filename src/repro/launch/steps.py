@@ -1,0 +1,337 @@
+"""Step builders: one jit-able program per (family x step kind).
+
+``build_cell_program(cell, mesh)`` returns a BuiltStep: the function, its
+abstract args, and in/out shardings — everything dryrun.py needs to lower
+and everything train.py/serve examples need to run (with real arrays of the
+same shapes).
+
+Training state is {"params": ..., "opt": ...}; steps donate it. MoE models
+get explicit expert-parallel sharding constraints (all-to-all dispatch) via
+``moe_constraints``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.core import distances as D
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import axis_size, batch_axes
+from repro.launch.shapes import CellSpec
+from repro.models import gnn as gnn_lib
+from repro.models import moe as moe_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer
+from repro.models import encoder as enc_lib
+from repro.train import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule, gradient_accumulation)
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Callable
+    args: Tuple            # abstract (ShapeDtypeStruct) pytrees
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    name: str = ""
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+# --------------------------------------------------------------- helpers
+
+
+def train_options(arch_id: str, family: str) -> Dict:
+    """Per-arch training knobs (microbatching, int8 optimizer state)."""
+    if arch_id == "deepseek-v3-671b":
+        # 61L x (B/dev, S, 7168) bf16 residual checkpoints: B/dev must be ~1
+        return {"n_micro": 16, "int8_opt": True, "remat": True}
+    if arch_id == "deepseek-v2-lite-16b":
+        return {"n_micro": 4, "int8_opt": False, "remat": True}
+    if family in ("lm", "encoder"):
+        return {"n_micro": 2, "int8_opt": False, "remat": True}
+    return {"n_micro": 1, "int8_opt": False, "remat": False}
+
+
+def abstract_state(cfg, family: str, *, int8_opt: bool, init_fn=None):
+    """ShapeDtypeStruct tree of {params, opt} without allocating anything."""
+    init = init_fn or _family_init(family)
+    params = jax.eval_shape(lambda: init(cfg, jax.random.PRNGKey(0)))
+    opt = jax.eval_shape(lambda p: adamw_init(p, int8_state=int8_opt), params)
+    return {"params": params, "opt": opt}
+
+
+def _family_init(family: str):
+    return {"lm": transformer.init, "encoder": enc_lib.init,
+            "gnn": gnn_lib.init, "recsys": rec_lib.init}[family]
+
+
+def state_pspecs(state, mesh: Mesh, family: str):
+    p_specs = shard_lib.param_pspecs(state["params"], mesh, family)
+    o_specs = shard_lib.opt_pspecs(state["opt"], p_specs, mesh)
+    return {"params": p_specs, "opt": o_specs}
+
+
+def moe_constraints(cfg, mesh: Mesh, mode: str = "train"):
+    """Install activation-sharding hooks for tracing distributed programs:
+    expert-parallel dispatch constraints (MoE) and model-sharded logits.
+
+    Mode-split EP policy — each the best MEASURED config (§Perf):
+      train:   dispatch stays G-sharded, x_e E over "model" (weights FSDP);
+      decode:  x_e E over the whole mesh (weights stationary — per-token
+               weight re-gathers cost 4.4x more);
+      prefill: no constraint — GSPMD's weight-gather schedule beats forcing
+               the (G,t,E,C) one-hot through an E re-shard by ~35x."""
+    if isinstance(cfg, LMConfig) and cfg.moe is not None and mesh is not None:
+        if mode == "decode":
+            e_axes, _ = shard_lib._serve_expert_axes(mesh, cfg.moe.n_routed)
+            moe_lib.EP_SHARDING = (mesh, batch_axes(mesh), e_axes)
+        elif mode == "prefill":
+            moe_lib.EP_SHARDING = None
+        else:
+            moe_lib.EP_SHARDING = (mesh, batch_axes(mesh), ("model",))
+    else:
+        moe_lib.EP_SHARDING = None
+    if mesh is not None and isinstance(cfg, LMConfig):
+        transformer.ACT_SHARDING = (mesh, batch_axes(mesh))
+    else:
+        transformer.ACT_SHARDING = None
+
+
+# --------------------------------------------------------------- LM steps
+
+
+def make_lm_train(cfg: LMConfig, mesh: Mesh, arch_id: str, inputs,
+                  family: str = "lm", opts: Optional[Dict] = None,
+                  with_opt: bool = True) -> BuiltStep:
+    """with_opt=False builds the grads-only twin (accounting separates the
+    once-per-step optimizer cost from the per-microbatch fwd/bwd cost)."""
+    opts = opts or train_options(arch_id, family)
+    moe_constraints(cfg, mesh)
+
+    state = abstract_state(cfg, family, int8_opt=opts["int8_opt"])
+    s_specs = state_pspecs(state, mesh, family)
+    grad_shardings = shard_lib.to_named(s_specs["params"], mesh)
+
+    def step(state, batch):
+        def loss_fn(p, b):
+            if family == "encoder":
+                return enc_lib.contrastive_loss(p, cfg, b)
+            return transformer.loss_fn(p, cfg, b, remat=opts["remat"])
+        constrain = lambda g: jax.lax.with_sharding_constraint(g, grad_shardings)
+        grads, loss_v, metrics = gradient_accumulation(
+            loss_fn, state["params"], batch, opts["n_micro"], constrain=constrain)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        if not with_opt:
+            return {"params": grads, "opt": state["opt"]}, dict(metrics, grad_norm=gn)
+        lr = cosine_schedule(state["opt"]["step"], base_lr=3e-4, warmup=2000,
+                             total=100_000)
+        params, opt = adamw_update(grads, state["opt"], state["params"], lr=lr,
+                                   int8_state=opts["int8_opt"])
+        metrics = dict(metrics, grad_norm=gn, lr=lr)
+        return {"params": params, "opt": opt}, metrics
+
+    b_specs = shard_lib.batch_pspecs(inputs, mesh)
+    named = lambda t: shard_lib.to_named(t, mesh)
+    return BuiltStep(step, (state, inputs), (named(s_specs), named(b_specs)),
+                     (named(s_specs), None), donate_argnums=(0,),
+                     name=f"{arch_id}:train")
+
+
+def make_lm_prefill(cfg: LMConfig, mesh: Mesh, arch_id: str, inputs) -> BuiltStep:
+    # Per-family prefill layout (each the cheaper MEASURED option, §Perf):
+    # dense archs prefill on the TP serving layout (5.2x less collective
+    # traffic than FSDP re-gathers); MoE archs prefill on the training layout
+    # (weight gathers amortize over the 1M-token batch and beat forcing the
+    # one-hot dispatch through stationary-expert sharding by 5x). The DECODE
+    # fleet always keeps weights stationary — disaggregated serving.
+    prefill_mode = "train" if cfg.moe is not None else "serve"
+    moe_constraints(cfg, mesh, mode=prefill_mode)
+
+    def step(params, tokens):
+        logits, cache = transformer.prefill(params, cfg, tokens)
+        return logits, cache
+
+    params = jax.eval_shape(lambda: transformer.init(cfg, jax.random.PRNGKey(0)))
+    p_specs = shard_lib.param_pspecs(params, mesh, "lm", mode=prefill_mode)
+    b_specs = shard_lib.batch_pspecs(inputs["tokens"], mesh)
+    named = lambda t: shard_lib.to_named(t, mesh)
+    return BuiltStep(step, (params, inputs["tokens"]),
+                     (named(p_specs), named(b_specs)), None,
+                     name=f"{arch_id}:prefill")
+
+
+def make_lm_decode(cfg: LMConfig, mesh: Mesh, arch_id: str, inputs) -> BuiltStep:
+    moe_constraints(cfg, mesh, mode="decode")
+    B = inputs["token"].shape[0]
+
+    def step(params, token, cache, pos):
+        logits, new_cache = transformer.decode_step(params, cfg, token, cache, pos)
+        return logits, new_cache
+
+    params = jax.eval_shape(lambda: transformer.init(cfg, jax.random.PRNGKey(0)))
+    p_specs = shard_lib.param_pspecs(params, mesh, "lm", mode="serve")
+    t_specs = shard_lib.batch_pspecs(inputs["token"], mesh)
+    c_specs = shard_lib.cache_pspecs(inputs["cache"], mesh, B)
+    pos = SDS((), jnp.int32)
+    named = lambda t: shard_lib.to_named(t, mesh)
+    return BuiltStep(step, (params, inputs["token"], inputs["cache"], pos),
+                     (named(p_specs), named(t_specs), named(c_specs),
+                      NamedSharding(mesh, P())),
+                     (None, named(c_specs)), donate_argnums=(2,),
+                     name=f"{arch_id}:decode")
+
+
+# --------------------------------------------------------------- GNN steps
+
+
+def make_gnn_train(cfg: GNNConfig, mesh: Mesh, arch_id: str, cell: CellSpec) -> BuiltStep:
+    meta = cell.meta
+    kind = cell.step
+
+    def loss_fn(p, b):
+        if kind == "train_full":
+            return gnn_lib.node_loss(p, cfg, b)
+        if kind == "train_blocks":
+            from repro.models.gnn import block_static_shapes
+            _, blocks_meta = block_static_shapes(meta["batch_nodes"], meta["fanout"])
+            blocks = [dict(blk, n_dst=bm["n_dst"])
+                      for blk, bm in zip(b["blocks"], blocks_meta)]
+            return gnn_lib.block_loss(p, cfg, {"feats": b["feats"],
+                                               "blocks": blocks,
+                                               "labels": b["labels"]})
+        return gnn_lib.graph_loss(p, cfg, dict(b, n_graphs=meta["batch"]))
+
+    def step(state, batch):
+        (loss_v, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(grads, state["opt"], state["params"], lr=1e-3)
+        return {"params": params, "opt": opt}, dict(metrics, grad_norm=gn)
+
+    state = abstract_state(cfg, "gnn", int8_opt=False)
+    s_specs = state_pspecs(state, mesh, "gnn")
+    b_specs = shard_lib.gnn_batch_pspecs(cell.inputs, mesh)
+    named = lambda t: shard_lib.to_named(t, mesh)
+    return BuiltStep(step, (state, cell.inputs), (named(s_specs), named(b_specs)),
+                     (named(s_specs), None), donate_argnums=(0,),
+                     name=f"{arch_id}:{kind}")
+
+
+# --------------------------------------------------------------- recsys steps
+
+
+def make_recsys_train(cfg: RecsysConfig, mesh: Mesh, arch_id: str, inputs) -> BuiltStep:
+    def step(state, batch):
+        (loss_v, metrics), grads = jax.value_and_grad(
+            lambda p, b: rec_lib.loss_fn(p, cfg, b), has_aux=True)(
+                state["params"], batch)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(grads, state["opt"], state["params"], lr=1e-3,
+                                   weight_decay=1e-5)
+        return {"params": params, "opt": opt}, dict(metrics, grad_norm=gn)
+
+    state = abstract_state(cfg, "recsys", int8_opt=False)
+    s_specs = state_pspecs(state, mesh, "recsys")
+    b_specs = shard_lib.batch_pspecs(inputs, mesh)
+    named = lambda t: shard_lib.to_named(t, mesh)
+    return BuiltStep(step, (state, inputs), (named(s_specs), named(b_specs)),
+                     (named(s_specs), None), donate_argnums=(0,),
+                     name=f"{arch_id}:train")
+
+
+def make_recsys_serve(cfg: RecsysConfig, mesh: Mesh, arch_id: str, inputs) -> BuiltStep:
+    k_top = 100
+
+    def step(params, batch):
+        if cfg.kind == "sasrec":
+            from repro.core.distributed import two_level_search
+            u = rec_lib.sasrec_user_vector(params, cfg, batch["seq"])  # (B, d)
+            items = params["item_embed"].astype(jnp.float32)
+            # users shard over the data axes, items over "model": tiled local
+            # top-k + k-survivor merge — the full (B, n_items) score matrix
+            # (262k x 1M = 1 PB at serve_bulk) never exists
+            return two_level_search(
+                items, u, mesh=mesh, k=k_top, q_axes=batch_axes(mesh),
+                c_axes=("model",), tile=4096, n_valid=cfg.n_items + 1)
+        return rec_lib.forward(params, cfg, batch)
+
+    params = jax.eval_shape(lambda: rec_lib.init(cfg, jax.random.PRNGKey(0)))
+    p_specs = shard_lib.param_pspecs(params, mesh, "recsys")
+    b_specs = shard_lib.batch_pspecs(inputs, mesh)
+    named = lambda t: shard_lib.to_named(t, mesh)
+    return BuiltStep(step, (params, inputs), (named(p_specs), named(b_specs)),
+                     None, name=f"{arch_id}:serve")
+
+
+def make_recsys_retrieval(cfg: RecsysConfig, mesh: Mesh, arch_id: str,
+                          inputs) -> BuiltStep:
+    """1 query vs 10^6 candidates: user tower -> sharded exact MIPS top-k.
+
+    This IS the paper's query path — the candidate corpus is the vector DB,
+    row-sharded over the whole mesh; scoring is one MXU matmul per shard plus
+    the k-survivor merge."""
+    k_top = 100
+    all_axes = tuple(mesh.axis_names)
+    item_field = 0
+
+    def step(params, batch):
+        cand = batch["candidates"]
+        cand = jax.lax.with_sharding_constraint(
+            cand, NamedSharding(mesh, P(all_axes, None)))
+        if cfg.kind == "sasrec":
+            q = rec_lib.sasrec_user_vector(params, cfg, batch["seq"])
+        elif cfg.kind == "autoint":
+            q = rec_lib.autoint_user_vector(params, cfg, batch, item_field)
+        else:  # fm / deepfm: exact MIPS decomposition [sum_v ; 1]
+            q = rec_lib.fm_user_vector(params, cfg, batch, item_field)
+        scores = jnp.einsum("qd,nd->qn", q, cand,
+                            preferred_element_type=jnp.float32)
+        return jax.lax.top_k(scores, k_top)
+
+    params = jax.eval_shape(lambda: rec_lib.init(cfg, jax.random.PRNGKey(0)))
+    p_specs = shard_lib.param_pspecs(params, mesh, "recsys")
+    b_specs = shard_lib.batch_pspecs(inputs, mesh)
+    # candidate rows shard over the full mesh (uneven ok)
+    b_specs = dict(b_specs, candidates=P(all_axes, None))
+    named = lambda t: shard_lib.to_named(t, mesh)
+    return BuiltStep(step, (params, inputs), (named(p_specs), named(b_specs)),
+                     None, name=f"{arch_id}:retrieval")
+
+
+# --------------------------------------------------------------- dispatcher
+
+
+def build_cell_program(cell: CellSpec, mesh: Mesh) -> BuiltStep:
+    fam, step = cell.family, cell.step
+    if fam in ("lm", "encoder"):
+        if step == "train":
+            return make_lm_train(cell.cfg, mesh, cell.arch_id, cell.inputs,
+                                 family=fam)
+        if step == "prefill":
+            return make_lm_prefill(cell.cfg, mesh, cell.arch_id, cell.inputs)
+        return make_lm_decode(cell.cfg, mesh, cell.arch_id, cell.inputs)
+    if fam == "gnn":
+        return make_gnn_train(cell.cfg, mesh, cell.arch_id, cell)
+    if fam == "recsys":
+        if step == "train":
+            return make_recsys_train(cell.cfg, mesh, cell.arch_id, cell.inputs)
+        if step == "retrieval":
+            return make_recsys_retrieval(cell.cfg, mesh, cell.arch_id, cell.inputs)
+        return make_recsys_serve(cell.cfg, mesh, cell.arch_id, cell.inputs)
+    raise ValueError(f"no program for {fam}:{step}")

@@ -1,0 +1,1 @@
+from repro.models import transformer, encoder, gnn, recsys  # noqa: F401

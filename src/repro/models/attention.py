@@ -1,0 +1,321 @@
+"""Attention: GQA (+sliding window) and MLA (DeepSeek latent attention).
+
+Three execution paths:
+  * full-sequence (train / prefill): chunked "flash" attention — a lax.scan
+    double loop over (q chunk, kv chunk) with f32 online-softmax accumulators,
+    so the S x S score matrix is never materialized. This is the pure-jnp twin
+    of ``repro.kernels.flash_attention`` (the Pallas TPU kernel); the jnp
+    version is what the multi-device dry-run lowers (CPU backend cannot lower
+    Mosaic), the Pallas version is the TPU production path.
+  * decode: one query token against a (possibly ring-buffered) KV cache.
+  * MLA decode uses the absorbed-matrix trick: scores and context are computed
+    directly in the 512-d latent space so the cache stays compressed.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.layers import apply_norm, apply_rope, dense_init, init_norm
+
+NEG_INF = -1e30
+
+# Dry-run accounting flag (repro.launch.accounting): XLA's cost_analysis
+# counts a while-loop body ONCE, so scans under-report flops/bytes by their
+# trip count. Accounting builds unroll the chunk scans to get true totals.
+UNROLL = False
+
+
+# =================================================================== init
+
+
+def init_attention(key, cfg: LMConfig, dtype):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        ks = jax.random.split(key, 6)
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        p = {}
+        if m.q_lora_rank:
+            p["wq_a"] = dense_init(ks[0], d, m.q_lora_rank, dtype)
+            p["q_norm"] = init_norm("rmsnorm", m.q_lora_rank, dtype)
+            p["wq_b"] = dense_init(ks[1], m.q_lora_rank, (h, qk), dtype)
+        else:
+            p["wq"] = dense_init(ks[0], d, (h, qk), dtype)
+        p["wkv_a"] = dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_dim, dtype)
+        p["kv_norm"] = init_norm("rmsnorm", m.kv_lora_rank, dtype)
+        p["wkv_b"] = dense_init(ks[3], m.kv_lora_rank, (h, m.qk_nope_dim + m.v_head_dim), dtype)
+        p["wo"] = dense_init(ks[4], h * m.v_head_dim, d, dtype).reshape(h, m.v_head_dim, d)
+        return p
+    kv = cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (h, dh), dtype),
+        "wk": dense_init(ks[1], d, (kv, dh), dtype),
+        "wv": dense_init(ks[2], d, (kv, dh), dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype).reshape(h, dh, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((kv, dh), dtype)
+        p["bv"] = jnp.zeros((kv, dh), dtype)
+    return p
+
+
+# ============================================================ core attention
+
+
+def _dense_attention(q, k, v, *, scale, causal, window, q_offset, kv_mask=None):
+    """Materialized-scores attention. q:(B,Sq,KV,rep,dh) k/v:(B,Sk,KV,dh)."""
+    B, Sq, KV, rep, dh = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqnrd,bknd->bnrqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_mask is not None:  # (B, Sk) padding mask
+        s = jnp.where(kv_mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bnrqk,bknd->bqnrd", p, v)
+    return o
+
+
+def _chunked_attention(q, k, v, *, scale, causal, window, q_offset, q_chunk, k_chunk, kv_mask=None):
+    """Flash-style double loop; never materializes (Sq, Sk).
+
+    q: (B, Sq, KV, rep, dh); k, v: (B, Sk, KV, dh). Returns (B, Sq, KV, rep, dh).
+
+    Chunks are carved with lax.dynamic_slice along the (unsharded) sequence
+    axis — reshape/transpose-based chunking permutes sharded dims and makes
+    GSPMD fall back to "involuntary full rematerialization" (replicating the
+    full activation per device). Each kv step is jax.checkpoint'ed so the
+    backward pass recomputes the (qc, kc) score block instead of saving all
+    nq*nk of them (that saved-score memory is exactly what flash attention
+    exists to avoid).
+    """
+    B, Sq, KV, rep, dh = q.shape
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0, (Sq, q_chunk, Sk, k_chunk)
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    k_base = jnp.arange(k_chunk)
+
+    def q_step(_, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * k_chunk, k_chunk, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * k_chunk, k_chunk, axis=1)
+            k_pos = kj * k_chunk + k_base
+            s = jnp.einsum(
+                "bqnrd,bknd->bnrqk", q_blk, k_blk, preferred_element_type=jnp.float32
+            ) * scale
+            mask = q_pos[:, None] >= k_pos[None, :] if causal else (
+                jnp.ones((q_chunk, k_chunk), bool))
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            if kv_mask is not None:
+                kvm = jax.lax.dynamic_slice_in_dim(kv_mask, kj * k_chunk, k_chunk, axis=1)
+                s = jnp.where(kvm[:, None, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bnrqk,bknd->bnrqd", p.astype(v_blk.dtype), v_blk)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk), unroll=UNROLL)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, KV, rep, qc, dh) -> (B, qc, KV, rep, dh)
+        return None, jnp.moveaxis(out, 3, 1).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq), unroll=UNROLL)
+    # (nq, B, qc, KV, rep, dh) -> (B, Sq, KV, rep, dh)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KV, rep, dh)
+
+
+def multihead_attention(q, k, v, cfg: LMConfig, *, causal, window, q_offset=0, kv_mask=None,
+                        scale: Optional[float] = None):
+    """Dispatch between dense and chunked attention. q:(B,Sq,H,dh) k/v:(B,Sk,KV,dh)."""
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qr = q.reshape(B, Sq, KV, rep, dh)
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    if max(Sq, k.shape[1]) >= cfg.attn_chunk_threshold and Sq % min(cfg.attn_chunk, Sq) == 0:
+        o = _chunked_attention(qr, k, v, scale=scale, causal=causal, window=window,
+                               q_offset=q_offset, q_chunk=cfg.attn_chunk,
+                               k_chunk=cfg.attn_chunk, kv_mask=kv_mask)
+    else:
+        o = _dense_attention(qr, k, v, scale=scale, causal=causal, window=window,
+                             q_offset=q_offset, kv_mask=kv_mask)
+    return o.reshape(B, Sq, H, dh)
+
+
+# ============================================================ GQA block
+
+
+def gqa_attention(params, cfg: LMConfig, x, positions, *, kv_mask=None, cache=None,
+                  cache_pos=None, return_kv=False):
+    """Full-sequence GQA attention (train / prefill).
+
+    x: (B, S, D); positions: (S,) or (B, S). Returns (out, new_kv or None).
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+    o = multihead_attention(q, k, v, cfg, causal=cfg.causal, window=cfg.window,
+                            kv_mask=kv_mask)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    if return_kv:
+        return out, (k, v)
+    return out, None
+
+
+def gqa_decode(params, cfg: LMConfig, x, cache_k, cache_v, pos):
+    """Single-token decode. x: (B, 1, D); cache_k/v: (B, C, KV, dh); pos scalar.
+
+    For sliding-window configs the cache is a ring buffer of size C == window
+    and ``pos % C`` is the write slot; otherwise C == max seq and slot == pos.
+    """
+    B, _, D = x.shape
+    C = cache_k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    posv = jnp.full((1, 1), pos)
+    q = apply_rope(q, posv, cfg.rope_theta, cfg.rope_pct)
+    k = apply_rope(k, posv, cfg.rope_theta, cfg.rope_pct)
+    slot = pos % C
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+
+    H, dh = cfg.n_heads, cfg.head_dim
+    KV = cfg.n_kv_heads
+    qr = q.reshape(B, 1, KV, H // KV, dh)
+    s = jnp.einsum("bqnrd,bknd->bnrqk", qr, cache_k.astype(x.dtype),
+                   preferred_element_type=jnp.float32) / np.sqrt(dh)
+    # valid slots: ring buffer holds min(pos+1, C) entries
+    n_valid = jnp.minimum(pos + 1, C)
+    valid = jnp.arange(C) < n_valid
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bnrqk,bknd->bqnrd", p, cache_v.astype(x.dtype)).reshape(B, 1, H, dh)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return out, (cache_k, cache_v)
+
+
+# ============================================================ MLA block
+
+
+def _mla_q(params, cfg: LMConfig, x, positions):
+    m = cfg.mla
+    if "wq_a" in params:
+        cq = x @ params["wq_a"].astype(x.dtype)
+        cq = apply_norm(params["q_norm"], cq)
+        q = jnp.einsum("bsq,qhk->bshk", cq, params["wq_b"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta, 1.0)
+    return q_nope, q_rope
+
+
+def mla_attention(params, cfg: LMConfig, x, positions, *, kv_mask=None, return_kv=False):
+    """Full-sequence MLA (train / prefill): decompress latents, standard MHA."""
+    m = cfg.mla
+    B, S, D = x.shape
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    kv_a = x @ params["wkv_a"].astype(x.dtype)  # (B,S,lora+rope)
+    c_kv, k_rope = kv_a[..., : m.kv_lora_rank], kv_a[..., m.kv_lora_rank :]
+    c_kv = apply_norm(params["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta, 1.0)  # (B,S,1,rope)
+    kv = jnp.einsum("bsl,lhk->bshk", c_kv, params["wkv_b"].astype(x.dtype))
+    k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim :]
+    H = cfg.n_heads
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # v head dim != qk head dim: pad v to qk dim for the shared attention core,
+    # slice back after (keeps one code path; padding cost is v_dim vs 192 ~ 33%).
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    scale = 1.0 / np.sqrt(qk_dim)
+    if m.v_head_dim < qk_dim:
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - m.v_head_dim)))
+    else:
+        v_p = v
+    o = multihead_attention(q, k, v_p, cfg, causal=cfg.causal, window=cfg.window,
+                            kv_mask=kv_mask, scale=scale)
+    o = o[..., : m.v_head_dim]
+    out = jnp.einsum("bshv,hvd->bsd", o, params["wo"].astype(x.dtype))
+    if return_kv:
+        return out, (c_kv, k_rope[:, :, 0, :])
+    return out, None
+
+
+def mla_decode(params, cfg: LMConfig, x, cache_ckv, cache_krope, pos):
+    """Absorbed-matrix MLA decode against the compressed latent cache.
+
+    cache_ckv: (B, C, lora); cache_krope: (B, C, rope); pos scalar.
+    """
+    m = cfg.mla
+    B, _, D = x.shape
+    C = cache_ckv.shape[1]
+    posv = jnp.full((1, 1), pos)
+    q_nope, q_rope = _mla_q(params, cfg, x, posv)  # (B,1,H,nope/rope)
+    kv_a = x @ params["wkv_a"].astype(x.dtype)
+    c_kv, k_rope = kv_a[..., : m.kv_lora_rank], kv_a[..., m.kv_lora_rank :]
+    c_kv = apply_norm(params["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], posv, cfg.rope_theta, 1.0)[:, :, 0, :]
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_kv.astype(cache_ckv.dtype), pos, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(cache_krope, k_rope.astype(cache_krope.dtype), pos, axis=1)
+
+    wkv_b = params["wkv_b"].astype(x.dtype)
+    w_k, w_v = wkv_b[..., : m.qk_nope_dim], wkv_b[..., m.qk_nope_dim :]
+    # absorb k-decompression into the query: (B,1,H,nope)x(lora,H,nope)->(B,1,H,lora)
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_k)
+    s = jnp.einsum("bqhl,bsl->bhqs", q_lat, cache_ckv.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqhr,bsr->bhqs", q_rope, cache_krope.astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+    s = s / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    valid = jnp.arange(C) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhqs,bsl->bqhl", p, cache_ckv.astype(x.dtype))
+    o = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, w_v)
+    out = jnp.einsum("bshv,hvd->bsd", o, params["wo"].astype(x.dtype))
+    return out, (cache_ckv, cache_krope)

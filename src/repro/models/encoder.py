@@ -1,0 +1,50 @@
+"""SBERT-style sentence encoder — the paper's embedding model.
+
+A bidirectional transformer (EncoderConfig.causal=False) with the paper's
+three pooling options (CLS / mean / max-over-time) and a siamese contrastive
+objective (tied weights, in-batch softmax over cosine similarities), matching
+SBERT's siamese fine-tuning structure [Reimers & Gurevych 2019].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import EncoderConfig
+from repro.models import transformer
+from repro.models.layers import dense_init
+
+
+def init(cfg: EncoderConfig, key):
+    k1, k2 = jax.random.split(key)
+    params = transformer.init(cfg, k1)
+    if cfg.project_dim:
+        params["proj"] = {"w": dense_init(k2, cfg.d_model, cfg.project_dim,
+                                          jnp.dtype(cfg.param_dtype))}
+    return params
+
+
+def encode(params, cfg: EncoderConfig, tokens, mask=None):
+    """tokens (B, S) -> embeddings (B, E) float32 (L2-normalized if cfg.normalize)."""
+    out = transformer.embed_pooled(params, cfg, tokens, mask)
+    if cfg.project_dim:
+        out = out @ params["proj"]["w"].astype(out.dtype)
+    if cfg.normalize:
+        out = out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+    return out
+
+
+def contrastive_loss(params, cfg: EncoderConfig, batch, temperature: float = 0.05):
+    """In-batch softmax contrastive loss over (query, passage) pairs.
+
+    batch: {"q_tokens": (B,S), "q_mask": (B,S), "p_tokens": (B,S), "p_mask": (B,S)}.
+    Positive of query i is passage i; all other passages are in-batch negatives.
+    """
+    q = encode(params, cfg, batch["q_tokens"], batch.get("q_mask"))
+    p = encode(params, cfg, batch["p_tokens"], batch.get("p_mask"))
+    sims = (q @ p.T) / temperature  # (B, B), cosine (encode() normalizes)
+    labels = jnp.arange(q.shape[0])
+    logp = jax.nn.log_softmax(sims, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    acc = jnp.mean(jnp.argmax(sims, axis=-1) == labels)
+    return loss, {"loss": loss, "in_batch_acc": acc}

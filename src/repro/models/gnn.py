@@ -1,0 +1,261 @@
+"""GraphSAGE [arXiv:1706.02216] with segment-op message passing.
+
+JAX has no CSR/CSC sparse — message passing is implemented directly over an
+edge index via jax.ops.segment_sum / segment_max (this IS the system, per the
+kernel taxonomy). Three execution modes matching the assigned shapes:
+
+  * full-graph   : forward(feats, edges, edge_mask)        — cora / ogbn-products
+  * sampled      : forward_blocks(block list from sampler) — reddit minibatch
+  * batched small: forward_graphs(packed graphs + readout) — molecule batches
+
+plus a host-side NeighborSampler (numpy CSR, uniform fanout) for minibatch_lg.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.models.layers import dense_init
+
+
+# ================================================================ params
+
+
+def init(cfg: GNNConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    layers = []
+    d_prev = cfg.d_in
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    for i in range(cfg.n_layers):
+        layers.append({
+            "w_self": dense_init(ks[i], d_prev, cfg.d_hidden, dtype),
+            "w_neigh": dense_init(jax.random.fold_in(ks[i], 1), d_prev, cfg.d_hidden, dtype),
+            "b": jnp.zeros((cfg.d_hidden,), dtype),
+        })
+        d_prev = cfg.d_hidden
+    head = {"w": dense_init(ks[-1], d_prev, cfg.n_classes, dtype),
+            "b": jnp.zeros((cfg.n_classes,), dtype)}
+    return {"layers": layers, "head": head}
+
+
+# ================================================================ aggregation
+
+
+def _aggregate(messages, dst, n_nodes, mode: str, edge_mask=None):
+    """messages: (E, d) gathered from src; scatter-reduce into dst nodes."""
+    if edge_mask is not None:
+        messages = jnp.where(edge_mask[:, None], messages, 0.0)
+    if mode == "max":
+        neg = jnp.full_like(messages, -1e30)
+        m = messages if edge_mask is None else jnp.where(edge_mask[:, None], messages, neg)
+        agg = jax.ops.segment_max(m, dst, num_segments=n_nodes)
+        return jnp.where(jnp.isfinite(agg), agg, 0.0)
+    s = jax.ops.segment_sum(messages, dst, num_segments=n_nodes)
+    if mode == "sum":
+        return s
+    ones = jnp.ones((messages.shape[0],), messages.dtype)
+    if edge_mask is not None:
+        ones = ones * edge_mask.astype(messages.dtype)
+    deg = jax.ops.segment_sum(ones, dst, num_segments=n_nodes)
+    return s / jnp.maximum(deg, 1.0)[:, None]
+
+
+def _sage_layer(p, h_src, h_dst, src, dst, n_dst, mode, edge_mask=None,
+                msg_dtype=None):
+    # cast BEFORE the gather: the take() crosses shard boundaries (an
+    # all-gather under GSPMD), so the wire carries msg_dtype; the segment
+    # reduction upcasts locally to f32
+    h_gather = h_src if msg_dtype is None else h_src.astype(jnp.dtype(msg_dtype))
+    msgs = jnp.take(h_gather, src, axis=0).astype(jnp.float32)
+    agg = _aggregate(msgs, dst, n_dst, mode, edge_mask).astype(h_dst.dtype)
+    out = h_dst @ p["w_self"] + agg @ p["w_neigh"] + p["b"]
+    out = jax.nn.relu(out)
+    # L2 normalize, per the GraphSAGE paper (alg. 1, line 7)
+    return out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+
+
+# ================================================================ full graph
+
+
+def forward(params, cfg: GNNConfig, feats, edges, edge_mask=None):
+    """feats: (N, d_in); edges: (2, E) int32 [src; dst] -> node logits (N, C)."""
+    h = feats.astype(jnp.dtype(cfg.dtype))
+    src, dst = edges[0], edges[1]
+    n = feats.shape[0]
+    for p in params["layers"]:
+        h = _sage_layer(p, h, h, src, dst, n, cfg.aggregator, edge_mask,
+                        msg_dtype=cfg.message_dtype)
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def node_loss(params, cfg: GNNConfig, batch):
+    """batch: feats, edges, edge_mask?, labels (N,), label_mask (N,) bool."""
+    logits = forward(params, cfg, batch["feats"], batch["edges"],
+                     batch.get("edge_mask")).astype(jnp.float32)
+    labels, lm = batch["labels"], batch["label_mask"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.where(lm, labels, 0)[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(jnp.sum(lm), 1)
+    loss = jnp.sum(jnp.where(lm, nll, 0.0)) / denom
+    acc = jnp.sum(jnp.where(lm, jnp.argmax(logits, -1) == labels, False)) / denom
+    return loss, {"loss": loss, "acc": acc}
+
+
+# ================================================================ sampled blocks
+
+
+def forward_blocks(params, cfg: GNNConfig, feats, blocks):
+    """Layer-wise sampled forward (deepest frontier first).
+
+    feats: (N_L, d_in) features of the deepest frontier. blocks: list length
+    n_layers, shallowest-last: {"src": (E_l,), "dst": (E_l,), "edge_mask": (E_l,),
+    "n_dst": int, "self_idx": (n_dst,)} — src indexes the previous frontier,
+    self_idx maps dst nodes to their own row in the previous frontier.
+    """
+    h = feats.astype(jnp.dtype(cfg.dtype))
+    for p, blk in zip(params["layers"], blocks):
+        h_dst = jnp.take(h, blk["self_idx"], axis=0)
+        h = _sage_layer(p, h, h_dst, blk["src"], blk["dst"], blk["n_dst"],
+                        cfg.aggregator, blk.get("edge_mask"),
+                        msg_dtype=cfg.message_dtype)
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def block_loss(params, cfg: GNNConfig, batch):
+    logits = forward_blocks(params, cfg, batch["feats"], batch["blocks"]).astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss,
+                  "acc": jnp.mean(jnp.argmax(logits, -1) == labels)}
+
+
+# ================================================================ batched graphs
+
+
+def forward_graphs(params, cfg: GNNConfig, feats, edges, graph_ids, n_graphs,
+                   edge_mask=None, node_mask=None):
+    """Packed small graphs; mean readout per graph -> (n_graphs, C) logits."""
+    h = feats.astype(jnp.dtype(cfg.dtype))
+    src, dst = edges[0], edges[1]
+    n = feats.shape[0]
+    for p in params["layers"]:
+        h = _sage_layer(p, h, h, src, dst, n, cfg.aggregator, edge_mask,
+                        msg_dtype=cfg.message_dtype)
+    if node_mask is not None:
+        h = jnp.where(node_mask[:, None], h, 0.0)
+        cnt = jax.ops.segment_sum(node_mask.astype(h.dtype), graph_ids, n_graphs)
+    else:
+        cnt = jax.ops.segment_sum(jnp.ones((n,), h.dtype), graph_ids, n_graphs)
+    pooled = jax.ops.segment_sum(h, graph_ids, num_segments=n_graphs)
+    pooled = pooled / jnp.maximum(cnt, 1.0)[:, None]
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+def graph_loss(params, cfg: GNNConfig, batch):
+    logits = forward_graphs(params, cfg, batch["feats"], batch["edges"],
+                            batch["graph_ids"], batch["n_graphs"],
+                            batch.get("edge_mask"), batch.get("node_mask"))
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    return loss, {"loss": loss, "acc": jnp.mean(jnp.argmax(logits, -1) == labels)}
+
+
+# ================================================================ sampler
+
+
+class NeighborSampler:
+    """Host-side uniform neighbor sampler (GraphSAGE minibatch training).
+
+    Builds CSR once from the edge index; ``sample(seeds)`` returns statically
+    shaped (padded) blocks, deepest frontier first, ready for forward_blocks.
+    """
+
+    def __init__(self, edges: np.ndarray, n_nodes: int, fanouts: Sequence[int],
+                 seed: int = 0):
+        src, dst = np.asarray(edges[0]), np.asarray(edges[1])
+        order = np.argsort(dst, kind="stable")
+        self.nbr = src[order]
+        self.indptr = np.zeros(n_nodes + 1, np.int64)
+        np.add.at(self.indptr, dst + 1, 1)
+        self.indptr = np.cumsum(self.indptr)
+        self.n_nodes = n_nodes
+        self.fanouts = list(fanouts)
+        self.rng = np.random.default_rng(seed)
+
+    def _sample_neighbors(self, nodes: np.ndarray, fanout: int):
+        """Returns (src_nodes (len(nodes), fanout), valid mask)."""
+        starts = self.indptr[nodes]
+        degs = self.indptr[nodes + 1] - starts
+        r = self.rng.integers(0, np.maximum(degs, 1)[:, None], size=(len(nodes), fanout))
+        idx = starts[:, None] + r
+        srcs = self.nbr[np.minimum(idx, len(self.nbr) - 1)]
+        valid = (degs > 0)[:, None] & np.ones((1, fanout), bool)
+        return srcs, valid
+
+    def sample(self, seeds: np.ndarray):
+        """seeds: (B,) target nodes. Returns (input_node_ids, blocks)."""
+        blocks = []
+        frontier = np.asarray(seeds)
+        # walk outward (shallow -> deep), recording one bipartite block per hop
+        for fanout in reversed(self.fanouts):
+            srcs, valid = self._sample_neighbors(frontier, fanout)
+            flat_src_nodes = srcs.reshape(-1)
+            # next frontier = dst nodes first (self loops), then sampled neighbors
+            next_frontier, inv = np.unique(
+                np.concatenate([frontier, flat_src_nodes]), return_inverse=True)
+            self_idx = inv[: len(frontier)]
+            src_local = inv[len(frontier):]
+            dst_local = np.repeat(np.arange(len(frontier)), fanout)
+            blocks.append({
+                "src": src_local.astype(np.int32),
+                "dst": dst_local.astype(np.int32),
+                "edge_mask": valid.reshape(-1),
+                "n_dst": len(frontier),
+                "self_idx": self_idx.astype(np.int32),
+            })
+            frontier = next_frontier
+        return frontier, list(reversed(blocks))
+
+
+def block_static_shapes(batch_nodes: int, fanouts: Sequence[int]):
+    """Padded static (n_dst, n_edges, n_src) caps per block, deepest first —
+    shared by the host padder and the dry-run input_specs. Mirrors the
+    sampler's loop exactly (shallow->deep walk, deepest-first return)."""
+    sizes = [batch_nodes]  # frontier caps, shallow -> deep
+    loop_blocks = []
+    for fanout in reversed(list(fanouts)):
+        n_dst = sizes[-1]
+        loop_blocks.append({"n_dst": n_dst, "n_edges": n_dst * fanout,
+                            "n_src": n_dst * (1 + fanout)})
+        sizes.append(n_dst * (1 + fanout))
+    return sizes[-1], list(reversed(loop_blocks))
+
+
+def pad_sample(input_nodes, blocks, batch_nodes: int, fanouts: Sequence[int]):
+    """Pad a NeighborSampler.sample() result to static shapes for jit."""
+    max_in, shapes = block_static_shapes(batch_nodes, fanouts)
+    padded_nodes = np.zeros(max_in, np.int64)
+    padded_nodes[: len(input_nodes)] = input_nodes
+    out = []
+    for blk, sh in zip(blocks, shapes):
+        e = sh["n_edges"]
+        pb = {
+            "src": np.zeros(e, np.int32), "dst": np.zeros(e, np.int32),
+            "edge_mask": np.zeros(e, bool), "n_dst": sh["n_dst"],
+            "self_idx": np.zeros(sh["n_dst"], np.int32),
+        }
+        ne = len(blk["src"])
+        pb["src"][:ne] = blk["src"]
+        pb["dst"][:ne] = blk["dst"]
+        pb["edge_mask"][:ne] = blk["edge_mask"]
+        pb["self_idx"][: blk["n_dst"]] = blk["self_idx"]
+        out.append(pb)
+    return padded_nodes, out

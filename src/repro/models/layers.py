@@ -1,0 +1,106 @@
+"""Shared layers: norms, rotary embedding, MLPs, initializers.
+
+Parameters are plain dict pytrees; every layer is (init, apply) pure functions.
+Compute happens in ``cfg.dtype`` (bf16 on TPU) with f32 norm/softmax accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def trunc_normal(key, shape, std: float, dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out, dtype, *, std: float | None = None) -> jax.Array:
+    """Fan-in scaled init for a (d_in, *d_out) projection."""
+    shape = (d_in,) + (tuple(d_out) if isinstance(d_out, (tuple, list)) else (d_out,))
+    std = std if std is not None else 1.0 / np.sqrt(d_in)
+    return trunc_normal(key, shape, std, dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+
+def init_norm(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm or LayerNorm depending on the params present; f32 accumulate."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------- rotary
+
+
+def rope_freqs(d_rot: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_rot, 2, dtype=np.float32) / d_rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, rope_pct: float = 1.0) -> jax.Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S). Partial rotary
+    rotates only the first ``rope_pct * dh`` dims (StableLM-2 style)."""
+    dh = x.shape[-1]
+    d_rot = int(dh * rope_pct)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    freqs = jnp.asarray(rope_freqs(d_rot, theta))  # (d_rot/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d_rot/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, d_rot/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = x_rot[..., : d_rot // 2], x_rot[..., d_rot // 2 :]
+    # rotate-half convention (GPT-NeoX / llama)
+    r1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    r2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+    out = jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype), x_pass], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def init_mlp(key, d: int, ff: int, gated: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, ff, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[1], d, ff, dtype)
+    p["w_down"] = dense_init(ks[2], ff, d, dtype)
+    return p
+
+
+def apply_mlp(params, x: jax.Array, act: str = "silu") -> jax.Array:
+    act_fn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+    up = x @ params["w_up"].astype(x.dtype)
+    if "w_gate" in params:
+        up = act_fn(x @ params["w_gate"].astype(x.dtype)) * up
+    else:
+        up = act_fn(up)
+    return up @ params["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embedding
+
+
+def init_embed(key, vocab: int, d: int, dtype):
+    return {"table": trunc_normal(key, (vocab, d), 0.02, dtype)}
+
+
+def apply_embed(params, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0).astype(dtype)

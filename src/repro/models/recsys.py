@@ -1,0 +1,390 @@
+"""Recsys towers: FM, DeepFM, AutoInt, SASRec.
+
+The hot path is the sparse embedding lookup. JAX has no native EmbeddingBag —
+we implement it two ways (both part of the system, per the kernel taxonomy):
+
+  * ``embedding_bag``      — CSR-style: flat indices + bag ids, gather via
+                             jnp.take then jax.ops.segment_sum (mean/sum).
+  * dense (B, F, L) bags   — gather + masked sum over the bag axis; the L=1
+                             case is the Criteo single-valued-field fast path.
+
+All 39 Criteo-like fields live in ONE unified table (row-sharded over the
+"model" mesh axis in distributed runs, DLRM-style); per-field offsets map
+field-local ids to unified rows.
+
+Retrieval (`retrieval_cand`, 1 query vs 10^6 candidates) is served through the
+vector-DB core via exact dot-product decompositions:
+  * FM/DeepFM-FM-part: score(u,i) = const(u) + w_i + <sum_f v_f, v_i>
+    -> user vec [sum_v ; 1], item vec [v_i ; w_i]: pure MIPS.
+  * SASRec: user state = last hidden; item vec = item embedding.
+  * AutoInt: self-attn interaction is NOT dot-decomposable; we provide a
+    two-tower approximation (documented in DESIGN.md) + exact batched re-rank.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.models.layers import apply_norm, dense_init, init_norm, trunc_normal
+
+
+# ============================================================ embedding bag
+
+
+def field_offsets(cfg: RecsysConfig) -> np.ndarray:
+    """Start row of each field in the unified table; shape (n_sparse + 1,)."""
+    sizes = np.asarray(cfg.field_vocab_sizes(), np.int64)
+    return np.concatenate([[0], np.cumsum(sizes)])
+
+
+def embedding_bag(table, idx, bag_ids, n_bags, *, mode: str = "sum", valid=None):
+    """CSR-style EmbeddingBag: gather rows then segment-reduce into bags.
+
+    table: (V, d); idx: (nnz,) row ids; bag_ids: (nnz,) target bag per index
+    (non-decreasing not required); valid: optional (nnz,) bool.
+    """
+    rows = jnp.take(table, idx, axis=0)
+    if valid is not None:
+        rows = jnp.where(valid[:, None], rows, 0.0)
+    out = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        ones = jnp.ones((idx.shape[0],), rows.dtype)
+        if valid is not None:
+            ones = ones * valid.astype(rows.dtype)
+        cnt = jax.ops.segment_sum(ones, bag_ids, num_segments=n_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def lookup_fields(table, sparse_idx, dtype):
+    """Dense single-valued-per-field lookup: (B, F) unified ids -> (B, F, d)."""
+    return jnp.take(table, sparse_idx, axis=0).astype(dtype)
+
+
+# ============================================================ shared init
+
+
+def _init_tables(key, cfg: RecsysConfig, dtype):
+    V = int(sum(cfg.field_vocab_sizes()))
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": trunc_normal(k1, (V, cfg.embed_dim), 0.01, dtype),
+        "w1": trunc_normal(k2, (V, 1), 0.01, dtype),  # first-order weights
+    }
+
+
+def _init_dense_proj(key, cfg: RecsysConfig, dtype):
+    # dense features enter FM as one synthetic field each: value * v_field
+    return {
+        "v": trunc_normal(key, (cfg.n_dense, cfg.embed_dim), 0.01, dtype),
+        "w": jnp.zeros((cfg.n_dense,), dtype),
+    }
+
+
+def _init_mlp(key, dims, dtype):
+    layers = []
+    ks = jax.random.split(key, len(dims) - 1)
+    for i in range(len(dims) - 1):
+        layers.append({
+            "w": dense_init(ks[i], dims[i], dims[i + 1], dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    return layers
+
+
+def _apply_mlp(layers, x, act=jax.nn.relu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"].astype(x.dtype) + l["b"].astype(x.dtype)
+        if final_act or i < len(layers) - 1:
+            x = act(x)
+    return x
+
+
+# ============================================================ FM
+
+
+def fm_second_order(v):
+    """Pairwise sum via the O(nk) sum-square trick [Rendle ICDM'10].
+
+    v: (..., F, d) per-field embeddings -> (...,) scalar
+    sum_{i<j} <v_i, v_j> = 0.5 * (|sum_i v_i|^2 - sum_i |v_i|^2).
+    """
+    s = jnp.sum(v, axis=-2)
+    sq = jnp.sum(jnp.square(v), axis=(-2, -1))
+    return 0.5 * (jnp.sum(jnp.square(s), axis=-1) - sq)
+
+
+def init_fm(cfg: RecsysConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "tables": _init_tables(ks[0], cfg, dtype),
+        "dense": _init_dense_proj(ks[1], cfg, dtype),
+        "bias": jnp.zeros((), dtype),
+    }
+
+
+def _field_vectors(params, cfg: RecsysConfig, batch, dtype):
+    """All per-field embedding vectors (sparse + dense-as-field): (B, F+Fd, d)
+    and first-order term (B,)."""
+    t = params["tables"]
+    v_sp = lookup_fields(t["embed"], batch["sparse_idx"], dtype)  # (B, F, d)
+    w_sp = jnp.take(t["w1"], batch["sparse_idx"], axis=0)[..., 0].astype(dtype)
+    first = jnp.sum(w_sp, axis=-1)
+    vs = [v_sp]
+    if "dense" in batch and batch["dense"] is not None and cfg.n_dense:
+        dn = batch["dense"].astype(dtype)  # (B, Fd)
+        d = params["dense"]
+        vs.append(dn[..., None] * d["v"].astype(dtype)[None])  # (B, Fd, d)
+        first = first + dn @ d["w"].astype(dtype)
+    return jnp.concatenate(vs, axis=1), first
+
+
+def fm_forward(params, cfg: RecsysConfig, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    v, first = _field_vectors(params, cfg, batch, dtype)
+    logit = params["bias"].astype(jnp.float32) + first.astype(jnp.float32)
+    logit = logit + fm_second_order(v.astype(jnp.float32))
+    return logit
+
+
+# ============================================================ DeepFM
+
+
+def init_deepfm(cfg: RecsysConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    d_in = (cfg.n_sparse + cfg.n_dense) * cfg.embed_dim
+    return {
+        "tables": _init_tables(ks[0], cfg, dtype),
+        "dense": _init_dense_proj(ks[1], cfg, dtype),
+        "mlp": _init_mlp(ks[2], (d_in,) + tuple(cfg.mlp_dims) + (1,), dtype),
+        "bias": jnp.zeros((), dtype),
+    }
+
+
+def deepfm_forward(params, cfg: RecsysConfig, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    v, first = _field_vectors(params, cfg, batch, dtype)
+    B = v.shape[0]
+    logit = params["bias"].astype(jnp.float32) + first.astype(jnp.float32)
+    logit = logit + fm_second_order(v.astype(jnp.float32))
+    deep = _apply_mlp(params["mlp"], v.reshape(B, -1))
+    return logit + deep[..., 0].astype(jnp.float32)
+
+
+# ============================================================ AutoInt
+
+
+def init_autoint(cfg: RecsysConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3 + cfg.n_attn_layers)
+    F = cfg.n_sparse + cfg.n_dense
+    da = cfg.d_attn * cfg.n_attn_heads
+    layers = []
+    d_prev = cfg.embed_dim
+    for i in range(cfg.n_attn_layers):
+        kq, kk, kv, kr = jax.random.split(ks[3 + i], 4)
+        layers.append({
+            "wq": dense_init(kq, d_prev, (cfg.n_attn_heads, cfg.d_attn), dtype),
+            "wk": dense_init(kk, d_prev, (cfg.n_attn_heads, cfg.d_attn), dtype),
+            "wv": dense_init(kv, d_prev, (cfg.n_attn_heads, cfg.d_attn), dtype),
+            "w_res": dense_init(kr, d_prev, da, dtype),
+        })
+        d_prev = da
+    return {
+        "tables": _init_tables(ks[0], cfg, dtype),
+        "dense": _init_dense_proj(ks[1], cfg, dtype),
+        "attn": layers,
+        "head": {"w": dense_init(ks[2], F * d_prev, 1, dtype)},
+        "bias": jnp.zeros((), dtype),
+    }
+
+
+def _autoint_interact(layers, v):
+    """Stacked multi-head self-attention over field axis. v: (B, F, d)."""
+    for l in layers:
+        q = jnp.einsum("bfd,dhk->bfhk", v, l["wq"].astype(v.dtype))
+        k = jnp.einsum("bfd,dhk->bfhk", v, l["wk"].astype(v.dtype))
+        w = jnp.einsum("bfd,dhk->bfhk", v, l["wv"].astype(v.dtype))
+        s = jnp.einsum("bfhk,bghk->bhfg", q, k, preferred_element_type=jnp.float32)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhfg,bghk->bfhk", p, w)
+        B, F = v.shape[:2]
+        o = o.reshape(B, F, -1)
+        v = jax.nn.relu(o + v @ l["w_res"].astype(v.dtype))
+    return v
+
+
+def autoint_forward(params, cfg: RecsysConfig, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    v, first = _field_vectors(params, cfg, batch, dtype)
+    B = v.shape[0]
+    h = _autoint_interact(params["attn"], v)
+    logit = (h.reshape(B, -1) @ params["head"]["w"].astype(dtype))[..., 0]
+    return logit.astype(jnp.float32) + first.astype(jnp.float32) + params["bias"].astype(jnp.float32)
+
+
+# ============================================================ SASRec
+
+
+def init_sasrec(cfg: RecsysConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        ka, kf1, kf2 = jax.random.split(ks[2 + i], 3)
+        kq, kk, kv, ko = jax.random.split(ka, 4)
+        blocks.append({
+            "norm1": init_norm("layernorm", d, dtype),
+            "wq": dense_init(kq, d, d, dtype),
+            "wk": dense_init(kk, d, d, dtype),
+            "wv": dense_init(kv, d, d, dtype),
+            "wo": dense_init(ko, d, d, dtype),
+            "norm2": init_norm("layernorm", d, dtype),
+            "ff1": {"w": dense_init(kf1, d, d, dtype), "b": jnp.zeros((d,), dtype)},
+            "ff2": {"w": dense_init(kf2, d, d, dtype), "b": jnp.zeros((d,), dtype)},
+        })
+    # row 0 is the padding item; rows pad to a 1024 multiple so the table
+    # shards evenly over production meshes (pad rows are never indexed)
+    n_rows = -(-(cfg.n_items + 1) // 1024) * 1024
+    return {
+        "item_embed": trunc_normal(ks[0], (n_rows, d), 0.02, dtype),
+        "pos_embed": trunc_normal(ks[1], (cfg.seq_len, d), 0.02, dtype),
+        "blocks": blocks,
+        "final_norm": init_norm("layernorm", d, dtype),
+    }
+
+
+def sasrec_hidden(params, cfg: RecsysConfig, seq):
+    """seq: (B, S) item ids (0 = pad) -> hidden states (B, S, d)."""
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = seq.shape
+    h = jnp.take(params["item_embed"], seq, axis=0).astype(dtype)
+    h = h * np.sqrt(cfg.embed_dim) + params["pos_embed"][:S].astype(dtype)[None]
+    pad = seq == 0  # (B, S)
+    h = jnp.where(pad[..., None], 0.0, h)
+    H, dh = cfg.n_attn_heads or 1, cfg.embed_dim // (cfg.n_attn_heads or 1)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    for blk in params["blocks"]:
+        x = apply_norm(blk["norm1"], h)
+        q = (x @ blk["wq"].astype(dtype)).reshape(B, S, H, dh)
+        k = (x @ blk["wk"].astype(dtype)).reshape(B, S, H, dh)
+        v = (x @ blk["wv"].astype(dtype)).reshape(B, S, H, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                       preferred_element_type=jnp.float32) / np.sqrt(dh)
+        mask = causal[None, None] & ~pad[:, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B, S, -1)
+        h = h + o @ blk["wo"].astype(dtype)
+        x = apply_norm(blk["norm2"], h)
+        y = jax.nn.relu(x @ blk["ff1"]["w"].astype(dtype) + blk["ff1"]["b"].astype(dtype))
+        h = h + y @ blk["ff2"]["w"].astype(dtype) + blk["ff2"]["b"].astype(dtype)
+        h = jnp.where(pad[..., None], 0.0, h)
+    return apply_norm(params["final_norm"], h)
+
+
+def sasrec_loss(params, cfg: RecsysConfig, batch):
+    """BCE next-item loss with sampled negatives [arXiv:1808.09781].
+
+    batch: {"seq": (B,S), "pos": (B,S) next item (0=ignore), "neg": (B,S)}.
+    """
+    h = sasrec_hidden(params, cfg, batch["seq"])
+    emb = params["item_embed"].astype(h.dtype)
+    pos_e = jnp.take(emb, batch["pos"], axis=0)
+    neg_e = jnp.take(emb, batch["neg"], axis=0)
+    pos_s = jnp.sum(h * pos_e, axis=-1).astype(jnp.float32)
+    neg_s = jnp.sum(h * neg_e, axis=-1).astype(jnp.float32)
+    valid = batch["pos"] != 0
+    nll = -(jax.nn.log_sigmoid(pos_s) + jax.nn.log_sigmoid(-neg_s))
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(jnp.where(valid, nll, 0.0)) / denom
+    acc = jnp.sum(jnp.where(valid, pos_s > neg_s, False)) / denom
+    return loss, {"loss": loss, "pairwise_acc": acc}
+
+
+# ============================================================ unified API
+
+
+def init(cfg: RecsysConfig, key):
+    return {"fm": init_fm, "deepfm": init_deepfm, "autoint": init_autoint,
+            "sasrec": init_sasrec}[cfg.kind](cfg, key)
+
+
+def forward(params, cfg: RecsysConfig, batch):
+    """CTR logit (B,) for fm/deepfm/autoint; SASRec scores its own loss."""
+    return {"fm": fm_forward, "deepfm": deepfm_forward,
+            "autoint": autoint_forward}[cfg.kind](params, cfg, batch)
+
+
+def bce_loss(params, cfg: RecsysConfig, batch):
+    logit = forward(params, cfg, batch)
+    y = batch["label"].astype(jnp.float32)
+    nll = jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    loss = jnp.mean(nll)
+    acc = jnp.mean((logit > 0) == (y > 0.5))
+    return loss, {"loss": loss, "acc": acc}
+
+
+def loss_fn(params, cfg: RecsysConfig, batch):
+    if cfg.kind == "sasrec":
+        return sasrec_loss(params, cfg, batch)
+    return bce_loss(params, cfg, batch)
+
+
+# ============================================================ retrieval towers
+
+
+def fm_item_vectors(params, cfg: RecsysConfig, item_ids, item_field: int):
+    """MIPS item vectors [v_i ; w_i] for the FM dot decomposition.
+
+    item_ids: (N,) field-local ids for `item_field`."""
+    off = int(field_offsets(cfg)[item_field])
+    t = params["tables"]
+    v = jnp.take(t["embed"], item_ids + off, axis=0)
+    w = jnp.take(t["w1"], item_ids + off, axis=0)
+    return jnp.concatenate([v, w], axis=-1).astype(jnp.float32)
+
+
+def fm_user_vector(params, cfg: RecsysConfig, batch, item_field: int):
+    """MIPS query vector [sum_f v_f ; 1] over all non-item fields."""
+    dtype = jnp.dtype(cfg.dtype)
+    v, _first = _field_vectors(params, cfg, batch, dtype)
+    F = cfg.n_sparse
+    keep = jnp.asarray([f != item_field for f in range(v.shape[1])])
+    s = jnp.sum(jnp.where(keep[None, :, None], v, 0.0), axis=1)
+    ones = jnp.ones(s.shape[:-1] + (1,), s.dtype)
+    return jnp.concatenate([s, ones], axis=-1).astype(jnp.float32)
+
+
+def sasrec_user_vector(params, cfg: RecsysConfig, seq):
+    """Last valid hidden state per sequence -> (B, d) float32."""
+    h = sasrec_hidden(params, cfg, seq)
+    lengths = jnp.sum((seq != 0).astype(jnp.int32), axis=1)
+    last = jnp.maximum(lengths - 1, 0)
+    return jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0].astype(jnp.float32)
+
+
+def sasrec_item_vectors(params):
+    return params["item_embed"].astype(jnp.float32)
+
+
+def autoint_user_vector(params, cfg: RecsysConfig, batch, item_field: int):
+    """Two-tower approximation: interact user fields only, mean-pool."""
+    dtype = jnp.dtype(cfg.dtype)
+    v, _ = _field_vectors(params, cfg, batch, dtype)
+    keep = jnp.asarray([f != item_field for f in range(v.shape[1])])
+    vu = jnp.where(keep[None, :, None], v, 0.0)
+    h = _autoint_interact(params["attn"], vu)
+    return jnp.mean(h, axis=1).astype(jnp.float32)
+
+
+def autoint_item_vectors(params, cfg: RecsysConfig, item_ids, item_field: int):
+    off = int(field_offsets(cfg)[item_field])
+    v = jnp.take(params["tables"]["embed"], item_ids + off, axis=0)[:, None, :]
+    h = _autoint_interact(params["attn"], v.astype(jnp.dtype(cfg.dtype)))
+    return h[:, 0].astype(jnp.float32)

@@ -1,0 +1,380 @@
+"""Decoder-LM transformer: scan-over-layers, dense + MoE stacks, MTP head.
+
+Public entry points (all pure functions over dict pytrees):
+  init(cfg, key)                                   -> params
+  forward(params, cfg, tokens, ...)                -> (hidden, aux)
+  loss_fn(params, cfg, batch)                      -> (loss, metrics)   train
+  prefill(params, cfg, tokens)                     -> (logits, cache)   serve
+  decode_step(params, cfg, token, cache, pos)      -> (logits, cache)   serve
+  embed_pooled(params, cfg, tokens, mask)          -> (B, D) vectors    vector-DB tower
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models.layers import (apply_embed, apply_mlp, apply_norm, dense_init,
+                                 init_embed, init_mlp, init_norm)
+
+
+# Activation-sharding hook, set by repro.launch.steps before tracing a
+# distributed program: (mesh, batch_axes). Constrains the (B, S, V) logits to
+# shard the vocab dim over "model" — without it the CE loss materializes a
+# replicated f32 logits tensor (tens of GiB at 100k vocab) per device.
+ACT_SHARDING = None
+
+# Accounting flag (see repro.models.attention.UNROLL): unroll layer scans so
+# cost_analysis counts every layer, not one while-body.
+UNROLL = False
+
+
+def _logits_constrain(x):
+    if ACT_SHARDING is None:
+        return x
+    import jax.sharding as jsh
+    mesh, dp = ACT_SHARDING
+    spec = jsh.PartitionSpec(*((dp,) + (None,) * (x.ndim - 2) + ("model",)))
+    return jax.lax.with_sharding_constraint(x, jsh.NamedSharding(mesh, spec))
+
+
+def _act_constrain(x):
+    """Anchor (B, S, D) activations to (batch-sharded, replicated, replicated)
+    at block boundaries — keeps GSPMD's propagation from drifting into
+    'involuntary full rematerialization' through scans and gathers."""
+    if ACT_SHARDING is None:
+        return x
+    import jax.sharding as jsh
+    mesh, dp = ACT_SHARDING
+    spec = jsh.PartitionSpec(*((dp,) + (None,) * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, jsh.NamedSharding(mesh, spec))
+
+
+def _zero_aux():
+    return {"load_balance": jnp.zeros((), jnp.float32),
+            "router_z": jnp.zeros((), jnp.float32),
+            "dropped_frac": jnp.zeros((), jnp.float32)}
+
+
+def _router_score(cfg: LMConfig) -> str:
+    return "sigmoid" if (cfg.moe and cfg.moe.n_routed >= 256) else "softmax"
+
+
+# ================================================================ init
+
+
+def _init_block(key, cfg: LMConfig, dtype, *, is_moe: bool):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attn_lib.init_attention(ks[0], cfg, dtype),
+        "mlp_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if is_moe:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.dense_ff, cfg.gated_mlp, dtype)
+    return p
+
+
+def _stack_init(key, n: int, init_one):
+    if n == 0:
+        return None
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def init(cfg: LMConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    params = {"embed": init_embed(ks[0], cfg.vocab_size, cfg.d_model, dtype)}
+    params["dense_blocks"] = _stack_init(
+        ks[1], cfg.n_dense_layers, lambda k: _init_block(k, cfg, dtype, is_moe=False))
+    params["moe_blocks"] = _stack_init(
+        ks[2], cfg.n_moe_layers, lambda k: _init_block(k, cfg, dtype, is_moe=True))
+    params["final_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(ks[3], cfg.d_model, cfg.vocab_size, dtype)}
+    if cfg.mtp_depth:
+        mtp_ks = jax.random.split(ks[4], cfg.mtp_depth)
+        params["mtp"] = _stack_init(
+            ks[4], cfg.mtp_depth,
+            lambda k: {
+                "proj": dense_init(k, 2 * cfg.d_model, cfg.d_model, dtype),
+                "norm_h": init_norm(cfg.norm, cfg.d_model, dtype),
+                "norm_e": init_norm(cfg.norm, cfg.d_model, dtype),
+                "block": _init_block(k, cfg, dtype, is_moe=False),
+            })
+    return params
+
+
+# ================================================================ forward
+
+
+def _block_fwd(cfg: LMConfig, p, x, positions, kv_mask, *, is_moe: bool,
+               capacity_factor=None):
+    h, _ = (attn_lib.mla_attention if cfg.mla else attn_lib.gqa_attention)(
+        p["attn"], cfg, apply_norm(p["attn_norm"], x), positions, kv_mask=kv_mask)
+    if cfg.parallel_residual:
+        y_in = apply_norm(p["mlp_norm"], x)
+    else:
+        x = x + h
+        y_in = apply_norm(p["mlp_norm"], x)
+    if is_moe:
+        y, aux = moe_lib.apply_moe(p["moe"], cfg, y_in, capacity_factor=capacity_factor,
+                                   router_score=_router_score(cfg))
+    else:
+        y, aux = apply_mlp(p["mlp"], y_in, cfg.act), _zero_aux()
+    x = x + y + (h if cfg.parallel_residual else 0)
+    return x, aux
+
+
+def _scan_stack(cfg, blocks, x, positions, kv_mask, *, is_moe, remat, capacity_factor=None):
+    if blocks is None:
+        return x, _zero_aux()
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x = _act_constrain(x)
+        x, a = _block_fwd(cfg, layer_p, x, positions, kv_mask, is_moe=is_moe,
+                          capacity_factor=capacity_factor)
+        aux = jax.tree.map(lambda u, v: u + v, aux, a)
+        return (x, aux), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if UNROLL:
+        carry = (x, _zero_aux())
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        for i in range(n):
+            carry, _ = body(carry, jax.tree.map(lambda a: a[i], blocks))
+        return carry
+    (x, aux), _ = jax.lax.scan(body, (x, _zero_aux()), blocks)
+    return x, aux
+
+
+def forward(params, cfg: LMConfig, tokens, *, kv_mask=None, remat: bool = False,
+            capacity_factor=None):
+    """tokens: (B, S) int32 -> hidden (B, S, D) in cfg.dtype, aux losses."""
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    x = _act_constrain(apply_embed(params["embed"], tokens, dtype))
+    positions = jnp.arange(S)
+    x, aux_d = _scan_stack(cfg, params["dense_blocks"], x, positions, kv_mask,
+                           is_moe=False, remat=remat)
+    x, aux_m = _scan_stack(cfg, params["moe_blocks"], x, positions, kv_mask,
+                           is_moe=True, remat=remat, capacity_factor=capacity_factor)
+    aux = jax.tree.map(lambda u, v: u + v, aux_d, aux_m)
+    n_moe = max(cfg.n_moe_layers, 1)
+    aux["dropped_frac"] = aux["dropped_frac"] / n_moe
+    return x, aux
+
+
+def logits_from_hidden(params, cfg: LMConfig, h):
+    h = apply_norm(params["final_norm"], h)
+    w = (params["embed"]["table"].T if cfg.tie_embeddings else params["lm_head"]["w"])
+    return _logits_constrain(h @ w.astype(h.dtype))
+
+
+def _sharded_ce(logits, labels):
+    """-log p[label] via logsumexp + one-hot-masked sum — both reduce over the
+    (model-sharded) vocab axis locally then psum, unlike take_along_axis whose
+    sharded-axis gather makes GSPMD replicate the logits."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    hit = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1) == labels[..., None]
+    picked = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    return lse - picked
+
+
+def loss_fn(params, cfg: LMConfig, batch, *, remat: bool = False):
+    """batch: {"tokens": (B,S), "labels": (B,S) with -100 = ignore}."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    h, aux = forward(params, cfg, tokens, remat=remat)
+    logits = logits_from_hidden(params, cfg, h).astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    nll = _sharded_ce(logits, safe)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(jnp.where(valid, nll, 0.0)) / denom
+
+    metrics = {"ce": loss, "dropped_frac": aux["dropped_frac"]}
+    loss = loss + aux["load_balance"] + aux["router_z"]
+
+    if cfg.mtp_depth and params.get("mtp") is not None:
+        # multi-token prediction [deepseek-v3]: depth-1 implementation — an
+        # extra block consumes [norm(h_t) ; norm(embed(tok_{t+1}))] and
+        # predicts tok_{t+2} through the shared head.
+        mtp = jax.tree.map(lambda a: a[0], params["mtp"])  # depth 1
+        dtype = jnp.dtype(cfg.dtype)
+        emb_next = apply_embed(params["embed"], tokens[:, 1:], dtype)
+        h_in = jnp.concatenate(
+            [apply_norm(mtp["norm_h"], h[:, :-1]), apply_norm(mtp["norm_e"], emb_next)],
+            axis=-1) @ mtp["proj"].astype(dtype)
+        S = tokens.shape[1]
+        h_mtp, _ = _block_fwd(cfg, mtp["block"], h_in, jnp.arange(S - 1), None,
+                              is_moe=False)
+        logits2 = logits_from_hidden(params, cfg, h_mtp).astype(jnp.float32)
+        lbl2 = labels[:, 1:]
+        valid2 = lbl2 >= 0
+        safe2 = jnp.where(valid2, lbl2, 0)
+        nll2 = _sharded_ce(logits2, safe2)
+        mtp_loss = jnp.sum(jnp.where(valid2, nll2, 0.0)) / jnp.maximum(jnp.sum(valid2), 1)
+        loss = loss + cfg.mtp_loss_weight * mtp_loss
+        metrics["mtp_ce"] = mtp_loss
+
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ================================================================ serving
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """Decode cache. SWA archs get a ring buffer of size window."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    C = min(max_len, cfg.window) if cfg.window else max_len
+    L = cfg.n_layers
+    if cfg.mla:
+        return {"ckv": jnp.zeros((L, batch, C, cfg.mla.kv_lora_rank), dtype),
+                "krope": jnp.zeros((L, batch, C, cfg.mla.qk_rope_dim), dtype)}
+    return {"k": jnp.zeros((L, batch, C, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((L, batch, C, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+
+def prefill(params, cfg: LMConfig, tokens):
+    """Full forward emitting the KV cache; returns (last-token logits, cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    x = apply_embed(params["embed"], tokens, dtype)
+    positions = jnp.arange(S)
+
+    def body_fn(is_moe):
+        def body(x, p):
+            xin = apply_norm(p["attn_norm"], x)
+            h, kv = (attn_lib.mla_attention if cfg.mla else attn_lib.gqa_attention)(
+                p["attn"], cfg, xin, positions, return_kv=True)
+            x = x + h
+            y_in = apply_norm(p["mlp_norm"], x)
+            if is_moe:
+                y, _ = moe_lib.apply_moe(p["moe"], cfg, y_in,
+                                         router_score=_router_score(cfg))
+            else:
+                y = apply_mlp(p["mlp"], y_in, cfg.act)
+            return x + y, kv
+        return body
+
+    def run_stack(body, x, blocks):
+        if UNROLL:
+            kvs = []
+            n = jax.tree.leaves(blocks)[0].shape[0]
+            for i in range(n):
+                x, kv = body(x, jax.tree.map(lambda a: a[i], blocks))
+                kvs.append(kv)
+            return x, jax.tree.map(lambda *xs: jnp.stack(xs, 0), *kvs)
+        return jax.lax.scan(body, x, blocks)
+
+    caches = []
+    if params["dense_blocks"] is not None:
+        x, kv = run_stack(body_fn(False), x, params["dense_blocks"])
+        caches.append(kv)
+    if params["moe_blocks"] is not None:
+        x, kv = run_stack(body_fn(True), x, params["moe_blocks"])
+        caches.append(kv)
+    kv = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *caches) if len(caches) > 1 else caches[0]
+    if cfg.mla:
+        cache = {"ckv": kv[0], "krope": kv[1]}
+    else:
+        cache = {"k": kv[0], "v": kv[1]}
+    if cfg.window:  # keep only the last `window` positions (ring layout)
+        W = cfg.window
+        if S > W:
+            # positions S-W..S-1 live at slots (S-W..S-1) % W — a roll puts them right
+            cache = jax.tree.map(lambda c: jnp.roll(c[:, :, -W:], S % W, axis=2), cache)
+        else:
+            cache = jax.tree.map(
+                lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, W - S)) + ((0, 0),) * (c.ndim - 3)),
+                cache)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+    return logits, cache
+
+
+def decode_step(params, cfg: LMConfig, token, cache, pos):
+    """token: (B, 1) int32; pos: scalar int32 (next position). Returns logits, cache."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = apply_embed(params["embed"], token, dtype)
+
+    def body_fn(is_moe):
+        def body(x, layer):
+            p, c = layer
+            xin = apply_norm(p["attn_norm"], x)
+            if cfg.mla:
+                h, new_c = attn_lib.mla_decode(p["attn"], cfg, xin, c["ckv"], c["krope"], pos)
+                new_c = {"ckv": new_c[0], "krope": new_c[1]}
+            else:
+                h, new_c = attn_lib.gqa_decode(p["attn"], cfg, xin, c["k"], c["v"], pos)
+                new_c = {"k": new_c[0], "v": new_c[1]}
+            x = x + h
+            y_in = apply_norm(p["mlp_norm"], x)
+            if is_moe:
+                # decode batches are tiny: keep capacity at the config value
+                # (same as prefill, so decode == prefill exactly) with a >= 4
+                # floor from apply_moe's C = max(4, ...) to stay dropless.
+                y, _ = moe_lib.apply_moe(p["moe"], cfg, y_in,
+                                         router_score=_router_score(cfg))
+            else:
+                y = apply_mlp(p["mlp"], y_in, cfg.act)
+            return x + y, new_c
+        return body
+
+    def run_stack(body, x, layer):
+        if UNROLL:
+            ncs = []
+            n = jax.tree.leaves(layer)[0].shape[0]
+            for i in range(n):
+                x, nc = body(x, jax.tree.map(lambda a: a[i], layer))
+                ncs.append(nc)
+            return x, jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ncs)
+        return jax.lax.scan(body, x, layer)
+
+    kd = cfg.n_dense_layers
+    new_cache_parts = []
+    if params["dense_blocks"] is not None:
+        cache_d = jax.tree.map(lambda a: a[:kd], cache)
+        x, nc = run_stack(body_fn(False), x, (params["dense_blocks"], cache_d))
+        new_cache_parts.append(nc)
+    if params["moe_blocks"] is not None:
+        cache_m = jax.tree.map(lambda a: a[kd:], cache)
+        x, nc = run_stack(body_fn(True), x, (params["moe_blocks"], cache_m))
+        new_cache_parts.append(nc)
+    new_cache = (jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_cache_parts)
+                 if len(new_cache_parts) > 1 else new_cache_parts[0])
+    logits = logits_from_hidden(params, cfg, x)
+    return logits, new_cache
+
+
+# ================================================================ vector-DB tower
+
+
+def embed_pooled(params, cfg: LMConfig, tokens, mask=None):
+    """Pool hidden states into one vector per sequence (the DB's encoder API).
+
+    mask: (B, S) bool validity; pooling per cfg.pool ("mean" default for LMs).
+    """
+    h, _ = forward(params, cfg, tokens, kv_mask=mask)
+    h = apply_norm(params["final_norm"], h).astype(jnp.float32)
+    if mask is None:
+        mask = jnp.ones(tokens.shape, bool)
+    m = mask[..., None].astype(jnp.float32)
+    pool = cfg.pool if cfg.pool != "none" else "mean"
+    if pool == "cls":
+        out = h[:, 0]
+    elif pool == "max":
+        out = jnp.max(jnp.where(m > 0, h, -jnp.inf), axis=1)
+    else:
+        out = jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1e-6)
+    return out

@@ -1,0 +1,4 @@
+from repro.serve.engine import QueryEngine, Request
+from repro.serve.decode import DecodeLoop
+
+__all__ = ["QueryEngine", "Request", "DecodeLoop"]

@@ -1,0 +1,53 @@
+"""Autoregressive decode loop over the transformer's KV cache.
+
+Wraps prefill + decode_step into a greedy/temperature sampler; the cache is
+allocated once at max_len and threaded through jit'd steps. SWA models get a
+ring buffer of size ``window`` (allocated inside init_cache), which is what
+bounds h2o-danube's long_500k memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import transformer
+
+
+class DecodeLoop:
+    def __init__(self, params, cfg: LMConfig, *, max_len: int = 2048):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self._prefill = jax.jit(functools.partial(transformer.prefill, cfg=cfg))
+        self._step = jax.jit(functools.partial(transformer.decode_step, cfg=cfg))
+
+    def generate(self, prompt_tokens, *, n_new: int, temperature: float = 0.0,
+                 key: Optional[jax.Array] = None):
+        """prompt_tokens: (B, S) -> (B, n_new) greedy/sampled continuation."""
+        B, S = prompt_tokens.shape
+        logits, cache = self._prefill(params=self.params, tokens=prompt_tokens)
+        # grow the cache to max_len slots (prefill emits S slots; pad tail)
+        target = self.max_len if self.cfg.window is None else min(
+            self.max_len, self.cfg.window)
+        cache = jax.tree.map(
+            lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, max(0, target - c.shape[2])))
+                              + ((0, 0),) * (c.ndim - 3)), cache)
+        outs = []
+        tok = None
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        for i in range(n_new):
+            lg = logits[:, -1].astype(jnp.float32)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, lg / temperature)[:, None]
+            else:
+                tok = jnp.argmax(lg, axis=-1)[:, None]
+            outs.append(tok)
+            logits, cache = self._step(params=self.params, token=tok, cache=cache,
+                                       pos=jnp.int32(S + i))
+        return jnp.concatenate(outs, axis=1)

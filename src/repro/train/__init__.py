@@ -1,0 +1,9 @@
+from repro.train.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                               cosine_schedule, global_norm)
+from repro.train.compress import (dequantize_blockwise, quantize_blockwise,
+                                  make_compressed_allreduce)
+from repro.train.accum import gradient_accumulation
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule", "global_norm",
+           "clip_by_global_norm", "quantize_blockwise", "dequantize_blockwise",
+           "make_compressed_allreduce", "gradient_accumulation"]

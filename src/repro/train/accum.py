@@ -1,0 +1,50 @@
+"""Microbatch gradient accumulation as a lax.scan (constant memory in steps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gradient_accumulation(loss_fn, params, batch, n_micro: int, constrain=None):
+    """Splits every batch leaf's leading axis into n_micro chunks and scans.
+
+    loss_fn(params, microbatch) -> (loss, metrics). Returns (grads, loss,
+    metrics) averaged over microbatches. Peak activation memory is one
+    microbatch's.
+
+    ``constrain`` (grads pytree -> grads pytree) pins the accumulator's
+    sharding — without it GSPMD may replicate the scan carry (a full f32
+    parameter-sized buffer per device).
+    """
+    constrain = constrain or (lambda g: g)
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return constrain(grads), loss, metrics
+
+    def reshape(x):
+        B = x.shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        return x.reshape((n_micro, B // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+
+    def step(carry, mb):
+        g_acc, l_acc, m_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_acc = constrain(jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                       g_acc, grads))
+        m_acc = jax.tree.map(lambda a, b: a + b, m_acc,
+                             {k: v for k, v in metrics.items()})
+        return (g_acc, l_acc + loss, m_acc), None
+
+    zero_g = constrain(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                    params))
+    mb0 = jax.tree.map(lambda x: x[0], micro)
+    (_, metrics0), _ = jax.eval_shape(
+        lambda p, b: jax.value_and_grad(loss_fn, has_aux=True)(p, b), params, mb0)
+    zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), metrics0)
+    (grads, loss, metrics), _ = jax.lax.scan(
+        step, (zero_g, jnp.zeros((), jnp.float32), zero_m), micro)
+    inv = 1.0 / n_micro
+    return (jax.tree.map(lambda g: g * inv, grads), loss * inv,
+            jax.tree.map(lambda m: m * inv, metrics))

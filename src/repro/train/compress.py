@@ -1,0 +1,73 @@
+"""Int8 error-feedback gradient all-reduce (distributed-optimization trick).
+
+Cross-pod gradient all-reduce is the dominant inter-pod collective in data-
+parallel training. Quantizing the summand to int8 with per-block scales cuts
+those bytes 4x; the quantization error is carried in a local error-feedback
+buffer and re-injected next step (EF-SGD [arXiv:1901.09847]), which keeps
+convergence unbiased in expectation.
+
+``make_compressed_allreduce(axis)`` returns a function usable inside
+shard_map:  (grads, err) -> (mean_grads, new_err). The psum itself runs on
+the dequantized f32 (JAX collectives don't sum int8 payloads with per-shard
+scales), but the wire-format framing (codes + scales) is what a fabric-level
+implementation ships — benchmarks count those bytes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optim import _dq8, _pad_flat, _q8
+
+
+def quantize_blockwise(tree):
+    """pytree of f32 -> pytree of {codes int8, scale f32, n}."""
+    def leaf(x):
+        flat, n = _pad_flat(x)
+        codes, scale = _q8(flat)
+        return {"codes": codes, "scale": scale, "n": n, "shape": x.shape}
+    return jax.tree.map(leaf, tree, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def dequantize_blockwise(qtree):
+    def leaf(q):
+        flat = _dq8(q["codes"], q["scale"])
+        return flat[: q["n"]].reshape(q["shape"])
+    return jax.tree.map(leaf, qtree, is_leaf=lambda x: isinstance(x, dict) and "codes" in x)
+
+
+def compressed_bytes(tree) -> int:
+    """Wire bytes for one compressed all-reduce of this pytree."""
+    total = 0
+    for l in jax.tree.leaves(tree):
+        n = l.size
+        nb = -(-n // 128)
+        total += n + nb * 4  # int8 codes + f32 block scales
+    return total
+
+
+def make_compressed_allreduce(axis_name: str):
+    """Error-feedback int8 mean-all-reduce for use inside shard_map."""
+
+    def allreduce(grads, err):
+        def leaf(g, e):
+            g32 = g.astype(jnp.float32) + e
+            flat, n = _pad_flat(g32)
+            codes, scale = _q8(flat)
+            deq = _dq8(codes, scale)[:n].reshape(g.shape)
+            new_err = g32 - deq  # what quantization lost, re-injected next step
+            summed = jax.lax.pmean(deq, axis_name)
+            return summed.astype(g.dtype), new_err
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(err)
+        out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    return allreduce
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

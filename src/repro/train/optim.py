@@ -1,0 +1,162 @@
+"""AdamW with optional int8-blockwise moment state (pure pytree functions).
+
+fp32 Adam state is 8 bytes/param — for deepseek-v3 (671B params) that is
+5.4 TB, more than a 256-chip v5e pod's 4 TB HBM *before* params and
+activations. The int8 path stores both moments as int8 codes + per-block f32
+scales (block 128 => ~2.03 bytes/param, 4x reduction), dequantizing around
+the update — the blockwise scheme of bitsandbytes [arXiv:2110.02861] adapted
+to a jit-pure functional form. EXPERIMENTS.md §Perf quantifies the fit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+# ---------------------------------------------------------------- schedule
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * warm * cos
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda l: (l * scale).astype(l.dtype), tree), n
+
+
+# ---------------------------------------------------------------- int8 blocks
+
+
+def _q8(x):
+    """f32 (n,) padded to BLOCK -> (codes int8, scales f32 (n/BLOCK,))."""
+    xb = x.reshape(-1, BLOCK)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return codes.reshape(-1), scale
+
+
+def _dq8(codes, scale):
+    return (codes.reshape(-1, BLOCK).astype(jnp.float32) * scale[:, None]).reshape(-1)
+
+
+def _pad_flat(x):
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)), flat.shape[0]
+
+
+def _last_dim_blocks(shape) -> bool:
+    """Shape-preserving quantization applies when the last dim blocks evenly.
+
+    CRITICAL for SPMD: flattening a sharded tensor before quantizing erases
+    its sharding, and GSPMD then materializes the full f32 dequant per device
+    (850 GB for deepseek-v3's expert moments — measured, see EXPERIMENTS.md
+    §Perf iteration 1). Blocking the last dim keeps every leading dim (and
+    its sharding) intact."""
+    return len(shape) >= 1 and shape[-1] % BLOCK == 0
+
+
+def _q8_nd(x):
+    """(..., D) f32 -> (codes int8 (..., D), scales f32 (..., D/BLOCK))."""
+    xb = x.reshape(x.shape[:-1] + (x.shape[-1] // BLOCK, BLOCK))
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return codes.reshape(x.shape), scale
+
+
+def _dq8_nd(codes, scale):
+    shape = codes.shape
+    xb = codes.reshape(shape[:-1] + (shape[-1] // BLOCK, BLOCK)).astype(jnp.float32)
+    return (xb * scale[..., None]).reshape(shape)
+
+
+# ---------------------------------------------------------------- AdamW
+
+
+def adamw_init(params, *, int8_state: bool = False):
+    def leaf(p):
+        if int8_state:
+            if _last_dim_blocks(p.shape):
+                zc, zs = _q8_nd(jnp.zeros(p.shape, jnp.float32))
+            else:  # small/odd leaf: flat fallback
+                flat, _ = _pad_flat(jnp.zeros(p.shape, jnp.float32))
+                zc, zs = _q8(flat)
+            return {"m_q": zc, "m_s": zs, "v_q": jnp.zeros_like(zc), "v_s": zs}
+        return {"m": jnp.zeros_like(p, jnp.float32), "v": jnp.zeros_like(p, jnp.float32)}
+    return {"mu": jax.tree.map(leaf, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.01,
+                 int8_state: bool = False):
+    """Returns (new_params, new_state). lr may be a traced scalar."""
+    step = state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def leaf(g, s, p):
+        g32 = g.astype(jnp.float32)
+        if int8_state:
+            if _last_dim_blocks(p.shape):  # sharding-preserving path
+                m = _dq8_nd(s["m_q"], s["m_s"])
+                v = _dq8_nd(s["v_q"], s["v_s"])
+                m = b1 * m + (1 - b1) * g32
+                v = b2 * v + (1 - b2) * jnp.square(g32)
+                upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+                mq, ms = _q8_nd(m)
+                vq, vs = _q8_nd(v)
+                return _finish(upd, p), {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+            flat_g, n = _pad_flat(g32)
+            m = _dq8(s["m_q"], s["m_s"])
+            v = _dq8(s["v_q"], s["v_s"])
+            m = b1 * m + (1 - b1) * flat_g
+            v = b2 * v + (1 - b2) * jnp.square(flat_g)
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            upd = upd[:n].reshape(p.shape)
+            mq, ms = _q8(m)
+            vq, vs = _q8(v)
+            new_s = {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+        else:
+            m = b1 * s["m"] + (1 - b1) * g32
+            v = b2 * s["v"] + (1 - b2) * jnp.square(g32)
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            new_s = {"m": m, "v": v}
+        return _finish(upd, p), new_s
+
+    def _finish(upd, p):
+        new_p = p.astype(jnp.float32) - lr * (upd + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["mu"])
+    out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    return new_params, {"mu": new_mu, "step": step}
+
+
+def adam_state_bytes(n_params: int, int8: bool) -> int:
+    """Planning helper used by EXPERIMENTS.md §Perf."""
+    if int8:
+        return int(n_params * (2 + 8 / BLOCK))  # 2 int8 codes + 2 f32/BLOCK scales
+    return n_params * 8

@@ -1,0 +1,87 @@
+"""Checkpoint store: roundtrip, dtypes, chunking, retention, async, manifest."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore, latest_step, restore, save
+
+
+@pytest.fixture
+def tree():
+    return {"params": {"w": jnp.arange(24, dtype=jnp.float32).reshape(4, 6),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path, tree):
+    save(tree, str(tmp_path), 3)
+    out = restore(tree, str(tmp_path), 3)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_bf16_roundtrip_exact(tmp_path):
+    x = {"w": (jnp.arange(100, dtype=jnp.float32) * 0.37).astype(jnp.bfloat16)}
+    save(x, str(tmp_path), 1)
+    out = restore(x, str(tmp_path), 1)
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(x["w"], np.float32),
+                                  np.asarray(out["w"], np.float32))
+
+
+def test_chunked_large_leaf(tmp_path):
+    x = {"big": jnp.ones((1024, 300), jnp.float32)}
+    save(x, str(tmp_path), 1, chunk_mb=1)  # forces multiple chunks
+    with open(os.path.join(str(tmp_path), "step_00000001", "manifest.json")) as fh:
+        manifest = json.load(fh)
+    assert len(manifest["leaves"]["big"]["files"]) > 1
+    out = restore(x, str(tmp_path), 1)
+    np.testing.assert_array_equal(np.asarray(out["big"]), np.asarray(x["big"]))
+
+
+def test_latest_and_retention(tmp_path, tree):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    for s in [10, 20, 30]:
+        store.save(tree, s)
+    assert store.latest_step() == 30
+    kept = sorted(os.listdir(str(tmp_path)))
+    assert kept == ["step_00000020", "step_00000030"]
+
+
+def test_async_save(tmp_path, tree):
+    store = CheckpointStore(str(tmp_path), keep=3)
+    store.save_async(tree, 5)
+    store.wait()
+    assert store.latest_step() == 5
+    out, step = store.restore(tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+
+
+def test_atomic_no_tmp_left(tmp_path, tree):
+    save(tree, str(tmp_path), 1)
+    assert not any(d.endswith(".tmp") for d in os.listdir(str(tmp_path)))
+
+
+def test_restore_missing_raises(tmp_path, tree):
+    assert latest_step(str(tmp_path)) is None
+    store = CheckpointStore(str(tmp_path))
+    with pytest.raises(AssertionError):
+        store.restore(tree)
+
+
+def test_manifest_records_pspecs(tmp_path, tree):
+    from jax.sharding import PartitionSpec as P
+    pspecs = {"params": {"w": P("data", None), "b": P()},
+              "opt": {"step": P()}}
+    save(tree, str(tmp_path), 2, pspecs=pspecs)
+    with open(os.path.join(str(tmp_path), "step_00000002", "manifest.json")) as fh:
+        manifest = json.load(fh)
+    assert manifest["leaves"]["params/w"]["pspec"] == ["data", None]

@@ -1,0 +1,129 @@
+"""Vector-DB engine correctness: every engine x metric against numpy truth."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ENGINES, VectorDB, build_knn_graph, flat_search,
+                        kmeans, pairwise_scores)
+
+ENGINE_IDS = sorted(ENGINES)
+METRICS = ["cosine", "l2", "dot"]
+
+
+def _numpy_topk(corpus, q, metric, k):
+    if metric == "cosine":
+        c = corpus / np.linalg.norm(corpus, axis=-1, keepdims=True)
+        qq = q / np.linalg.norm(q, axis=-1, keepdims=True)
+        s = qq @ c.T
+    elif metric == "dot":
+        s = q @ corpus.T
+    else:
+        s = -(np.sum(q**2, -1)[:, None] - 2 * q @ corpus.T + np.sum(corpus**2, -1)[None])
+    ids = np.argsort(-s, axis=-1)[:, :k]
+    return np.take_along_axis(s, ids, axis=-1), ids
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_flat_exact_matches_numpy(rng, metric):
+    corpus = rng.normal(size=(300, 24)).astype(np.float32)
+    q = rng.normal(size=(9, 24)).astype(np.float32)
+    db = VectorDB("flat", metric=metric).load(corpus)
+    s, ids = db.query(q, k=7)
+    ref_s, ref_ids = _numpy_topk(corpus, q, metric, 7)
+    np.testing.assert_array_equal(np.asarray(ids), ref_ids)
+    np.testing.assert_allclose(np.asarray(s), ref_s, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("engine", ENGINE_IDS)
+def test_engine_self_retrieval(rng, engine, metric):
+    """Every engine must retrieve a corpus point from a near-identical query."""
+    corpus = rng.normal(size=(400, 32)).astype(np.float32)
+    q = corpus[:10] + 0.01 * rng.normal(size=(10, 32)).astype(np.float32)
+    db = VectorDB(engine, metric=metric).load(corpus)
+    s, ids = db.query(q, k=5)
+    top1 = np.asarray(ids[:, 0])
+    assert (top1 == np.arange(10)).mean() >= 0.9, (engine, metric, top1)
+
+
+@pytest.mark.parametrize("engine", ["ivf", "graph", "lsh"])
+def test_ann_recall_at_10(rng, engine):
+    """ANN engines reach reasonable recall@10 vs exact search."""
+    corpus = rng.normal(size=(1000, 16)).astype(np.float32)
+    q = rng.normal(size=(20, 16)).astype(np.float32)
+    exact = VectorDB("flat").load(corpus)
+    _, eids = exact.query(q, k=10)
+    kwargs = {"ivf": dict(nprobe=8), "graph": dict(beam=64, n_hops=10),
+              "lsh": dict(shortlist=128, n_tables=8)}[engine]
+    db = VectorDB(engine, **kwargs).load(corpus)
+    _, ids = db.query(q, k=10)
+    recall = np.mean([len(set(np.asarray(ids[i])) & set(np.asarray(eids[i]))) / 10
+                      for i in range(20)])
+    assert recall >= 0.6, (engine, recall)
+
+
+def test_flat_tiling_invariance(rng):
+    corpus = rng.normal(size=(1003, 16)).astype(np.float32)
+    q = rng.normal(size=(5, 16)).astype(np.float32)
+    s1, i1 = flat_search(jnp.asarray(corpus), jnp.asarray(q), metric="l2", k=9, tile=128)
+    s2, i2 = flat_search(jnp.asarray(corpus), jnp.asarray(q), metric="l2", k=9, tile=4096)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-5)
+
+
+def test_int8_score_error_bounded(rng):
+    corpus = rng.normal(size=(200, 64)).astype(np.float32)
+    q = rng.normal(size=(4, 64)).astype(np.float32)
+    exact = VectorDB("flat", metric="dot").load(corpus)
+    quant = VectorDB("int8", metric="dot").load(corpus)
+    es, _ = exact.query(q, k=200)
+    qs, _ = quant.query(q, k=200)
+    # per-row scale 127-level quantization: relative error ~ d^0.5 / 127
+    scale = np.abs(np.asarray(es)).max()
+    assert np.max(np.abs(np.sort(np.asarray(qs)) - np.sort(np.asarray(es)))) < 0.05 * scale
+
+
+def test_kmeans_reduces_distortion(rng):
+    x = jnp.asarray(rng.normal(size=(500, 8)).astype(np.float32))
+    import jax
+    c1 = kmeans(jax.random.PRNGKey(0), x, n_clusters=16, iters=1)
+    c10 = kmeans(jax.random.PRNGKey(0), x, n_clusters=16, iters=10)
+
+    def distortion(cent):
+        s = pairwise_scores(x, cent, "l2")
+        return -float(jnp.mean(jnp.max(s, axis=-1)))
+
+    assert distortion(c10) <= distortion(c1) + 1e-6
+
+
+def test_knn_graph_no_self_edges(rng):
+    corpus = jnp.asarray(rng.normal(size=(100, 8)).astype(np.float32))
+    nbrs = build_knn_graph(corpus, degree=5, metric="l2")
+    own = np.arange(100)[:, None]
+    assert not (np.asarray(nbrs) == own).any()
+
+
+def test_query_before_load_raises():
+    with pytest.raises(RuntimeError):
+        VectorDB("flat").query(np.zeros(4), k=1)
+
+
+def test_registry_rejects_unknown():
+    with pytest.raises(KeyError):
+        VectorDB("btree")
+
+
+def test_load_texts_roundtrip(rng):
+    texts = [f"doc {i} about topic {i % 3}" for i in range(20)]
+
+    def encoder(batch):
+        # toy bag-of-words hash embedding
+        out = np.zeros((len(batch), 16), np.float32)
+        for j, t in enumerate(batch):
+            for w in t.split():
+                out[j, hash(w) % 16] += 1.0
+        return out
+
+    db = VectorDB("flat").load_texts(texts, encoder)
+    _, ids, hits = db.query_texts([texts[7]], encoder, k=1)
+    assert hits[0][0] == texts[7]

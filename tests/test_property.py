@@ -1,0 +1,137 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distances as D
+from repro.core import quantize_rows
+from repro.core.flat import flat_search
+from repro.core.lsh import hamming_distance, sign_codes, make_planes
+from repro.models.layers import apply_rope
+from repro.models.recsys import embedding_bag
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+arrays = st.integers(2, 40)
+
+
+@given(n=st.integers(2, 50), d=st.integers(1, 16), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_merge_topk_equals_joint_topk(n, d, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(1, n)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(1, n)).astype(np.float32))
+    k = min(d, 2 * n)
+    sa, ia = jax.lax.top_k(a, min(k, n))
+    sb, ib = jax.lax.top_k(b, min(k, n))
+    ms, mi = D.merge_topk(sa, ia, sb, ib + n, k)
+    joint = jnp.concatenate([a, b], axis=1)
+    js, ji = jax.lax.top_k(joint, k)
+    np.testing.assert_allclose(np.asarray(ms), np.asarray(js), rtol=1e-6)
+
+
+@given(n=st.integers(4, 64), d=st.integers(2, 32), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_l2_score_is_negative_squared_distance(n, d, seed):
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(3, d)).astype(np.float32)
+    s = np.asarray(D.pairwise_scores(jnp.asarray(q), jnp.asarray(c), "l2"))
+    ref = -np.linalg.norm(q[:, None] - c[None], axis=-1) ** 2
+    np.testing.assert_allclose(s, ref, rtol=1e-3, atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.01, 100.0))
+@settings(**SETTINGS)
+def test_cosine_scale_invariance(seed, scale):
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(20, 8)).astype(np.float32)
+    q = rng.normal(size=(2, 8)).astype(np.float32)
+    s1 = np.asarray(D.pairwise_scores(jnp.asarray(q), D.l2_normalize(jnp.asarray(c)), "cosine"))
+    s2 = np.asarray(D.pairwise_scores(jnp.asarray(q * scale),
+                                      D.l2_normalize(jnp.asarray(c * scale)), "cosine"))
+    np.testing.assert_allclose(s1, s2, atol=1e-4)
+
+
+@given(n=st.integers(8, 200), seed=st.integers(0, 2**16), k=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_flat_topk_scores_sorted_and_valid(n, seed, k):
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+    k = min(k, n)
+    s, i = flat_search(c, q, metric="dot", k=k, tile=64)
+    s = np.asarray(s)
+    assert (np.diff(s, axis=-1) <= 1e-6).all()  # descending
+    assert ((np.asarray(i) >= 0) & (np.asarray(i) < n)).all()
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_quantize_rows_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(10, 32)).astype(np.float32) * rng.uniform(0.1, 10)
+    codes, scales = quantize_rows(jnp.asarray(x))
+    back = np.asarray(codes, np.float32) * np.asarray(scales)[:, None]
+    bound = np.abs(x).max(axis=1) / 127.0 * 0.5 + 1e-7
+    assert (np.abs(back - x).max(axis=1) <= bound + 1e-6).all()
+
+
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([32, 64, 96]))
+@settings(**SETTINGS)
+def test_lsh_hamming_metric_axioms(seed, bits):
+    rng = np.random.default_rng(seed)
+    planes = make_planes(jax.random.PRNGKey(seed % 1000), 16, bits, 2)
+    x = jnp.asarray(rng.normal(size=(6, 16)).astype(np.float32))
+    codes = sign_codes(x, planes)
+    dist = np.asarray(hamming_distance(codes, codes))
+    assert (np.diag(dist) == 0).all()          # identity
+    np.testing.assert_array_equal(dist, dist.T)  # symmetry
+    assert (dist >= 0).all() and (dist <= bits).all()
+
+
+@given(seed=st.integers(0, 2**16), theta=st.floats(100.0, 1e6))
+@settings(**SETTINGS)
+def test_rope_preserves_norm_and_zero_position(seed, theta):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 5, 2, 16)).astype(np.float32))
+    pos = jnp.asarray(np.arange(5)[None])
+    out = apply_rope(x, pos, theta, 1.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(out), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)  # rotation preserves norm
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(x[:, 0]),
+                               atol=1e-6)  # position 0 is identity
+
+
+@given(seed=st.integers(0, 2**16), nbags=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_embedding_bag_linearity(seed, nbags):
+    """bag(sum) == matmul with multi-hot matrix (linearity invariant)."""
+    rng = np.random.default_rng(seed)
+    V, d, nnz = 20, 4, 12
+    table = jnp.asarray(rng.normal(size=(V, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, V, size=nnz))
+    bags = jnp.asarray(np.sort(rng.integers(0, nbags, size=nnz)))
+    out = embedding_bag(table, idx, bags, nbags, mode="sum")
+    hot = np.zeros((nbags, V), np.float32)
+    for i, b in zip(np.asarray(idx), np.asarray(bags)):
+        hot[b, i] += 1
+    np.testing.assert_allclose(np.asarray(out), hot @ np.asarray(table),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_chunked_attention_matches_dense(seed):
+    from repro.models.attention import _chunked_attention, _dense_attention
+    rng = np.random.default_rng(seed)
+    B, S, KV, rep, dh = 2, 64, 2, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, KV, rep, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KV, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, KV, dh)).astype(np.float32))
+    a = _chunked_attention(q, k, v, scale=0.3, causal=True, window=None,
+                           q_offset=0, q_chunk=16, k_chunk=16)
+    b = _dense_attention(q, k, v, scale=0.3, causal=True, window=None, q_offset=0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

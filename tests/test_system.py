@@ -1,0 +1,142 @@
+"""End-to-end behaviour of the paper's system (integration tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import VectorDB
+from repro.data import MarcoLike
+from repro.models import encoder as enc_lib
+from repro.serve import DecodeLoop, QueryEngine
+from repro.train import adamw_init, adamw_update, clip_by_global_norm
+
+
+def _bow_encoder(dim=128):
+    def encode(tok_rows):
+        tok_rows = np.asarray(tok_rows)
+        out = np.zeros((len(tok_rows), dim), np.float32)
+        rows = np.repeat(np.arange(len(tok_rows)), tok_rows.shape[1])
+        cols = (tok_rows.astype(np.int64) * 2654435761 % dim).reshape(-1)
+        np.add.at(out, (rows, cols), (tok_rows > 0).astype(np.float32).reshape(-1))
+        return out / np.maximum(np.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+    return encode
+
+
+def test_paper_trends_accuracy_vs_n():
+    """Thistle §3.2: accuracy falls as N grows; exact >= approximate."""
+    enc = _bow_encoder()
+    accs = {}
+    for N in (100, 800):
+        data = MarcoLike(n_passages=N, noise=0.2, seed=3)
+        p = enc(data.passages)
+        q = enc(data.queries())
+        for engine, kw in [("flat", {}), ("ivf", {"nprobe": 4}),
+                           ("lsh", {"shortlist": 16, "n_bits": 64})]:
+            db = VectorDB(engine, metric="cosine", **kw).load(p)
+            _, ids = db.query(q, k=1)
+            accs[(engine, N)] = float((np.asarray(ids)[:, 0] == np.arange(N)).mean())
+    # accuracy decreases with N for every engine
+    for e in ("flat", "ivf", "lsh"):
+        assert accs[(e, 800)] <= accs[(e, 100)] + 0.02, (e, accs)
+    # exact kNN is the most accurate (paper: "point by point ... highest")
+    assert accs[("flat", 800)] >= accs[("ivf", 800)] - 1e-9
+    assert accs[("flat", 800)] >= accs[("lsh", 800)] - 1e-9
+
+
+def test_lsh_degrades_with_query_noise():
+    """Paper: 'as soon as more than a few words changed, LSH had difficulty'."""
+    enc = _bow_encoder()
+    accs = []
+    for noise in (0.1, 0.6):
+        data = MarcoLike(n_passages=400, noise=noise, seed=4)
+        db = VectorDB("lsh", metric="cosine", n_bits=32, n_tables=1,
+                      shortlist=4).load(enc(data.passages))
+        _, ids = db.query(enc(data.queries()), k=1)
+        accs.append(float((np.asarray(ids)[:, 0] == np.arange(400)).mean()))
+    assert accs[1] < accs[0] - 0.1, accs
+
+
+def test_sbert_training_improves_retrieval():
+    """Mini end-to-end: a few contrastive steps must lift top-1 retrieval."""
+    cfg = get_arch("thistle-sbert").smoke
+    data = MarcoLike(n_passages=300, vocab_size=cfg.vocab_size, noise=0.2,
+                     passage_len=16, query_len=8, seed=5)
+    params = enc_lib.init(cfg, jax.random.PRNGKey(0))
+    state = adamw_init(params)
+
+    def embed(p, toks):
+        t = jnp.asarray(np.asarray(toks)[:, :16] % cfg.vocab_size)
+        return np.asarray(enc_lib.encode(p, cfg, t, t != 0))
+
+    def acc(p):
+        db = VectorDB("flat", metric="cosine").load(embed(p, data.passages))
+        qs = np.zeros((300, 16), np.int32)
+        qs[:, :8] = data.queries()
+        _, ids = db.query(embed(p, qs), k=1)
+        return float((np.asarray(ids)[:, 0] == np.arange(300)).mean())
+
+    acc0 = acc(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: enc_lib.contrastive_loss(p, cfg, batch), has_aux=True)(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        return *adamw_update(grads, state, params, lr=2e-3), m
+
+    rng = np.random.default_rng(0)
+    qs_all = data.queries()
+    for i in range(60):
+        idx = rng.integers(0, 300, size=32)
+        q = np.zeros((32, 16), np.int32)
+        q[:, :8] = qs_all[idx]
+        batch = {"q_tokens": jnp.asarray(q % cfg.vocab_size),
+                 "q_mask": jnp.asarray(q != 0),
+                 "p_tokens": jnp.asarray(data.passages[idx][:, :16] % cfg.vocab_size),
+                 "p_mask": jnp.asarray(data.passages[idx][:, :16] != 0)}
+        params, state, m = step(params, state, batch)
+    acc1 = acc(params)
+    assert acc1 > acc0 + 0.1, (acc0, acc1)
+
+
+def test_decode_loop_generates():
+    cfg = get_arch("h2o-danube-1.8b").smoke
+    from repro.models import transformer
+    params = transformer.init(cfg, jax.random.PRNGKey(0))
+    loop = DecodeLoop(params, cfg, max_len=48)
+    out = loop.generate(jnp.ones((2, 8), jnp.int32), n_new=6)
+    assert out.shape == (2, 6)
+    assert bool((out >= 0).all()) and bool((out < cfg.vocab_size).all())
+    out_t = loop.generate(jnp.ones((2, 8), jnp.int32), n_new=6, temperature=1.0,
+                          key=jax.random.PRNGKey(1))
+    assert out_t.shape == (2, 6)
+
+
+def test_query_engine_bucketing_and_results():
+    rng = np.random.default_rng(0)
+    corpus = rng.normal(size=(500, 32)).astype(np.float32)
+    db = VectorDB("flat").load(corpus)
+    eng = QueryEngine(db, max_batch=16, max_wait_ms=0.0)
+    rids = [eng.submit(corpus[i], k=4) for i in range(37)]  # non-bucket count
+    eng.drain()
+    for i, r in enumerate(rids):
+        scores, ids = eng.result(r)
+        assert ids.shape == (4,)
+        assert int(ids[0]) == i
+    st = eng.latency_stats()
+    assert st["n"] == 37
+
+
+def test_trainer_cli_smoke(tmp_path):
+    """launch.train end-to-end with failure injection + restart."""
+    import subprocess, sys, os
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "sasrec",
+         "--steps", "8", "--batch", "16", "--checkpoint-every", "4",
+         "--fail-at", "5", "--ckpt-dir", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "restart" in out.stdout
+    assert "done: 8 steps, 1 restarts" in out.stdout
