@@ -31,6 +31,8 @@ ENGINES = [
     ("ivf", "cosine", {"nprobe": 8}),            # TPU-adapted HNSW (a)
     ("lsh", "cosine", {"n_bits": 128, "n_tables": 4, "shortlist": 32}),
     ("int8", "cosine", {}),                      # beyond paper
+    ("pq", "cosine", {"m": 8}),                  # beyond paper: ADC scan
+    ("ivf_pq", "cosine", {"m": 8, "nprobe": 8}),  # beyond paper: IVF-ADC
 ]
 
 
@@ -73,6 +75,60 @@ def run(sizes=(100, 1000, 10_000), noise: float = 0.15, encoder=None, seed=0):
     return rows
 
 
+def _index_bytes(db, include_raw: bool = False) -> int:
+    """Index memory. For PQ engines ``include_raw=False`` counts only the
+    compressed structures (codes + codebooks — what production stores keep
+    in fast memory, raw re-rank rows parked in slow storage), while
+    ``include_raw=True`` adds the f32 re-rank corpus this in-process
+    implementation actually holds when refine > 0. The curve reports both."""
+    mem = getattr(db.index, "memory_bytes", None)
+    if mem is not None:
+        return mem(include_raw=include_raw)
+    if db.engine_name == "int8":
+        return int(db.index.codes.size + db.index.scales.size * 4)
+    total = int(np.asarray(db.index.corpus).nbytes)
+    for attr in ("centroids", "buckets", "codes", "planes", "neighbors"):
+        a = getattr(db.index, attr, None)
+        if a is not None:
+            total += int(np.asarray(a).nbytes)
+    return total
+
+
+def recall_memory_qps(sizes=(10_000,), d: int = 64, n_queries: int = 256,
+                      seed: int = 0):
+    """The PQ trade-off curve: recall@10 vs resident memory vs QPS per
+    engine, on a clustered corpus (the regime IVF/PQ are built for)."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    for N in sizes:
+        n_clusters = max(8, N // 100)
+        centers = rng.normal(size=(n_clusters, d)).astype(np.float32) * 2.0
+        corpus = (centers[rng.integers(0, n_clusters, N)]
+                  + rng.normal(size=(N, d)).astype(np.float32))
+        q = (centers[rng.integers(0, n_clusters, n_queries)]
+             + rng.normal(size=(n_queries, d)).astype(np.float32))
+        exact = VectorDB("flat", metric="cosine").load(corpus)
+        _, eids = exact.query(q, k=10)
+        eids = np.asarray(eids)
+        for engine, metric, kw in ENGINES:
+            if metric != "cosine" or engine == "graph":
+                continue  # one metric for the curve; graph build is O(N^2)
+            db = VectorDB(engine, metric=metric, **kw).load(corpus)
+            _, ids = db.query(q, k=10)  # warm the jit cache
+            ids = np.asarray(ids)
+            t0 = time.perf_counter()
+            jax.block_until_ready(db.query(q, k=10)[0])
+            qps = n_queries / (time.perf_counter() - t0)
+            recall = np.mean([len(set(ids[i]) & set(eids[i])) / 10
+                              for i in range(n_queries)])
+            mem = _index_bytes(db)
+            rows.append({"engine": engine, "N": N, "recall_at_10": float(recall),
+                         "index_mb": mem / 2**20,
+                         "resident_mb": _index_bytes(db, include_raw=True) / 2**20,
+                         "compression_x": corpus.nbytes / mem, "qps": qps})
+    return rows
+
+
 def main(quick: bool = False):
     sizes = (100, 1000) if quick else (100, 1000, 10_000)
     rows = run(sizes=sizes)
@@ -80,7 +136,13 @@ def main(quick: bool = False):
     for r in rows:
         print(f"index,{r['engine']},{r['metric']},{r['N']},{r['top1_acc']:.4f},"
               f"{r['insert_s']:.4f},{r['query_s']:.4f},{r['total_s']:.4f}")
-    return rows
+    curve = recall_memory_qps(sizes=(2000,) if quick else (10_000,))
+    print("name,engine,N,recall_at_10,index_mb,resident_mb,compression_x,qps")
+    for r in curve:
+        print(f"pq_tradeoff,{r['engine']},{r['N']},{r['recall_at_10']:.4f},"
+              f"{r['index_mb']:.3f},{r['resident_mb']:.3f},"
+              f"{r['compression_x']:.1f},{r['qps']:.1f}")
+    return rows + curve
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import hamming, topk_distance
+from repro.kernels import hamming, pq_adc, topk_distance
 from repro.kernels import ref as R
 
 
@@ -39,6 +39,21 @@ def topk_agreement():
     return rows
 
 
+def pq_adc_agreement():
+    rng = np.random.default_rng(2)
+    rows = []
+    for (N, m, ksub, Q, k) in [(4096, 8, 256, 8, 10), (8192, 16, 256, 4, 10)]:
+        codes = jnp.asarray(rng.integers(0, ksub, (N, m)).astype(np.int32))
+        luts = jnp.asarray(rng.normal(size=(Q, m, ksub)).astype(np.float32))
+        s, i = pq_adc(codes, luts, k=k, blk_n=512, interpret=True)
+        rs, ri = R.pq_adc_ref(codes, luts, k=k)
+        ok = bool((np.asarray(i) == np.asarray(ri)).all())
+        oracle_t = _timeit(jax.jit(lambda c, l: R.pq_adc_ref(c, l, k=k)),
+                           codes, luts)
+        rows.append({"N": N, "m": m, "match": ok, "oracle_s": oracle_t})
+    return rows
+
+
 def hamming_agreement():
     rng = np.random.default_rng(1)
     rows = []
@@ -57,6 +72,8 @@ def main(quick: bool = False):
     print("name,case,match,oracle_s")
     for r in topk_agreement():
         print(f"kernels,topk_N{r['N']}d{r['d']},{r['match']},{r['oracle_s']:.4f}")
+    for r in pq_adc_agreement():
+        print(f"kernels,pq_adc_N{r['N']}m{r['m']},{r['match']},{r['oracle_s']:.4f}")
     for r in hamming_agreement():
         print(f"kernels,hamming_N{r['N']},{r['match']},{r['oracle_s']:.4f}")
 

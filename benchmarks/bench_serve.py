@@ -8,32 +8,34 @@ from repro.core import VectorDB
 from repro.serve import QueryEngine
 
 
-def run(n_corpus: int = 5000, n_requests: int = 400, d: int = 128):
+def run(n_corpus: int = 5000, n_requests: int = 400, d: int = 128,
+        engines=("flat", "ivf_pq")):
     rng = np.random.default_rng(0)
     corpus = rng.normal(size=(n_corpus, d)).astype(np.float32)
     rows = []
-    for max_batch in (1, 16, 64):
-        db = VectorDB("flat").load(corpus)
-        eng = QueryEngine(db, max_batch=max_batch, max_wait_ms=0.5)
-        for i in range(n_requests):
-            eng.submit(corpus[i % n_corpus] + 0.01 * rng.normal(size=d), k=10)
-            eng.pump()
-        eng.drain()
-        st = eng.latency_stats()
-        correct = sum(int(np.asarray(eng.result(r)[1])[0] == r % n_corpus)
-                      for r in range(n_requests))
-        rows.append({"max_batch": max_batch, **st,
-                     "top1_acc": correct / n_requests})
+    for engine in engines:
+        for max_batch in (1, 16, 64):
+            db = VectorDB(engine).load(corpus)
+            eng = QueryEngine(db, max_batch=max_batch, max_wait_ms=0.5)
+            for i in range(n_requests):
+                eng.submit(corpus[i % n_corpus] + 0.01 * rng.normal(size=d), k=10)
+                eng.pump()
+            eng.drain()
+            st = eng.latency_stats()
+            correct = sum(int(np.asarray(eng.result(r)[1])[0] == r % n_corpus)
+                          for r in range(n_requests))
+            rows.append({"max_batch": max_batch, **st,
+                         "top1_acc": correct / n_requests})
     return rows
 
 
 def main(quick: bool = False):
     rows = run(n_corpus=1000 if quick else 5000,
                n_requests=100 if quick else 400)
-    print("name,max_batch,p50_ms,p99_ms,mean_ms,top1_acc")
+    print("name,engine,max_batch,p50_ms,p99_ms,mean_ms,top1_acc")
     for r in rows:
-        print(f"serve,{r['max_batch']},{r['p50_ms']:.3f},{r['p99_ms']:.3f},"
-              f"{r['mean_ms']:.3f},{r['top1_acc']:.3f}")
+        print(f"serve,{r['engine']},{r['max_batch']},{r['p50_ms']:.3f},"
+              f"{r['p99_ms']:.3f},{r['mean_ms']:.3f},{r['top1_acc']:.3f}")
 
 
 if __name__ == "__main__":

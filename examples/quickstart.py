@@ -29,12 +29,22 @@ def main():
         return bow_hash_encoder(list(texts))
 
     print(f"corpus: {len(passages)} passages")
-    for engine in ("flat", "ivf", "graph", "lsh", "int8"):
+    for engine in ("flat", "ivf", "graph", "lsh", "int8", "pq", "ivf_pq"):
         db = VectorDB(engine, metric="cosine")
         db.load_texts(passages, encoder)
         scores, ids, hits = db.query_texts(queries[:200], encoder, k=3)
         acc = float(np.mean(np.asarray(ids)[:, 0] == np.arange(200)))
         print(f"  {engine:6s} top-1 accuracy on 200 queries: {acc:.3f}")
+
+    # the compressed engine: m bytes/row + codebooks instead of the f32 corpus
+    # (ksub=64 keeps codebook overhead small at this toy corpus size; the
+    # ratio climbs with N since codes dominate codebooks at scale)
+    db = VectorDB("ivf_pq", metric="cosine", m=8, ksub=64, nprobe=16)
+    db.load_texts(passages, encoder)
+    raw = 4 * db.index.d * len(passages)  # f32 corpus bytes
+    print(f"\nivf_pq resident index: {db.index.memory_bytes()/1024:.0f} KiB "
+          f"vs {raw/1024:.0f} KiB raw corpus "
+          f"({raw/db.index.memory_bytes():.1f}x compression)")
 
     db = VectorDB("flat", metric="cosine").load_texts(passages, encoder)
     q = queries[7]

@@ -1,4 +1,5 @@
-from repro.checkpoint.store import (CheckpointStore, latest_step, restore,
-                                    restore_resharded, save)
+from repro.checkpoint.store import (CheckpointStore, latest_step, load_arrays,
+                                    restore, restore_resharded, save)
 
-__all__ = ["CheckpointStore", "save", "restore", "restore_resharded", "latest_step"]
+__all__ = ["CheckpointStore", "save", "restore", "restore_resharded",
+           "latest_step", "load_arrays"]

@@ -117,6 +117,15 @@ def _load_leaf(path: str, meta: dict) -> np.ndarray:
     return _from_loaded(flat, meta["dtype"]).reshape(meta["shape"])
 
 
+def load_arrays(directory: str, step: int) -> dict:
+    """Load every leaf as a flat {path-key: np.ndarray} dict, shapes taken
+    from the manifest alone — no tree_like needed. This is how index
+    snapshots restore (a fresh engine has no arrays to mirror yet)."""
+    path, manifest = _load_manifest(directory, step)
+    return {key: _load_leaf(path, meta)
+            for key, meta in manifest["leaves"].items()}
+
+
 def restore(tree_like, directory: str, step: int):
     """Restore into the structure of tree_like (shapes must match)."""
     path, manifest = _load_manifest(directory, step)

@@ -1,0 +1,22 @@
+"""Version-portability shims over the moving jax API surface.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to ``jax.shard_map`` (kwarg ``check_vma``); pinning one
+spelling breaks on the other side of the migration. Call sites import
+``shard_map`` from here and pass ``check_replication`` — the shim maps it to
+whichever kwarg the installed jax understands.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    _impl, _check_kw = jax.shard_map, "check_vma"
+else:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _impl
+    _check_kw = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_replication: bool = True):
+    return _impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                 **{_check_kw: check_replication})

@@ -6,19 +6,25 @@ Engines (all load/query, per the paper's Rust trait):
   graph — kNN-graph batched beam search (TPU-adapted HNSW, dense walks)
   lsh   — random-hyperplane signatures + Hamming shortlist
   int8  — quantized exact (beyond paper)
+  pq    — product-quantized ADC scan, m bytes/row (beyond paper)
+  ivf_pq — IVF coarse quantizer over PQ residuals + exact re-rank (beyond paper)
 """
 from repro.core.db import ENGINES, DistributedVectorDB, VectorDB, register_engine
 from repro.core.distances import METRICS, pairwise_scores, l2_normalize
 from repro.core.flat import FlatIndex, flat_search
 from repro.core.graph import GraphIndex, beam_search, build_knn_graph
-from repro.core.ivf import IVFIndex, ivf_search, kmeans
+from repro.core.ivf import IVFIndex, build_buckets, ivf_search, kmeans
 from repro.core.lsh import LSHIndex, lsh_search, sign_codes, hamming_distance
+from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, ivf_pq_search,
+                           pq_decode, pq_encode, pq_search, train_pq)
 from repro.core.quant import Int8FlatIndex, int8_search, quantize_rows
 
 __all__ = [
     "ENGINES", "METRICS", "VectorDB", "DistributedVectorDB", "register_engine",
     "FlatIndex", "IVFIndex", "GraphIndex", "LSHIndex", "Int8FlatIndex",
+    "PQIndex", "IVFPQIndex",
     "flat_search", "ivf_search", "beam_search", "lsh_search", "int8_search",
-    "kmeans", "build_knn_graph", "sign_codes", "hamming_distance",
-    "pairwise_scores", "l2_normalize", "quantize_rows",
+    "pq_search", "ivf_pq_search", "train_pq", "pq_encode", "pq_decode",
+    "adc_tables", "kmeans", "build_buckets", "build_knn_graph", "sign_codes",
+    "hamming_distance", "pairwise_scores", "l2_normalize", "quantize_rows",
 ]

@@ -17,12 +17,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import checkpoint as ckpt
 from repro.core import distances as D
 from repro.core import distributed as dist
 from repro.core.flat import FlatIndex
 from repro.core.graph import GraphIndex
 from repro.core.ivf import IVFIndex
 from repro.core.lsh import LSHIndex
+from repro.core.pq import IVFPQIndex, PQIndex
 from repro.core.quant import Int8FlatIndex
 
 ENGINES: Dict[str, Type] = {
@@ -31,6 +33,8 @@ ENGINES: Dict[str, Type] = {
     "graph": GraphIndex,    # paper: HNSW adaptation (b) — graph beam search
     "lsh": LSHIndex,        # paper: LSH
     "int8": Int8FlatIndex,  # beyond-paper: quantized exact
+    "pq": PQIndex,          # beyond-paper: product-quantized ADC (m B/row)
+    "ivf_pq": IVFPQIndex,   # beyond-paper: IVF buckets of PQ residuals
 }
 
 
@@ -81,6 +85,30 @@ class VectorDB:
             hits = [[self._texts[j] for j in row] for row in ids.tolist()]
             return scores, ids, hits
         return scores, ids, None
+
+    # ----------------------------------------------------------- persistence
+    def save_index(self, directory: str, step: int = 0) -> str:
+        """Snapshot the engine's trained state (codebooks/codes/centroids)
+        through the sharding-aware checkpoint store. Engines opt in by
+        implementing ``state_dict()``."""
+        state_dict = getattr(self.index, "state_dict", None)
+        if state_dict is None:
+            raise NotImplementedError(
+                f"engine {self.engine_name!r} does not support persistence")
+        return ckpt.save(state_dict(), directory, step)
+
+    def restore_index(self, directory: str, step: Optional[int] = None) -> "VectorDB":
+        """Load a saved index snapshot into this (fresh) VectorDB — no
+        retraining; shapes come from the checkpoint manifest."""
+        load_state = getattr(self.index, "load_state", None)
+        if load_state is None:
+            raise NotImplementedError(
+                f"engine {self.engine_name!r} does not support persistence")
+        step = ckpt.latest_step(directory) if step is None else step
+        assert step is not None, "no index checkpoint to restore"
+        load_state(ckpt.load_arrays(directory, step))
+        self.n = self.index.size
+        return self
 
 
 class DistributedVectorDB:

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import distances as D
 from repro.core.flat import flat_search
 
@@ -90,8 +91,8 @@ def sharded_flat_search(corpus, q, *, mesh: Mesh, k: int, metric: str = "cosine"
         return s, jnp.take_along_axis(i_all, pos, axis=-1)
 
     args = (corpus, q) + ((valid,) if valid is not None else ())
-    return jax.shard_map(local_search, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(*args)
+    return shard_map(local_search, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_replication=False)(*args)
 
 
 def gspmd_flat_search(corpus, q, *, mesh: Mesh, k: int, metric: str = "cosine",
@@ -145,11 +146,11 @@ def two_level_search(corpus, q, *, mesh: Mesh, k: int, q_axes, c_axes,
         s, pos = jax.lax.top_k(s_all, k)
         return s, jnp.take_along_axis(i_all, pos, axis=-1)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(c_axes, None), P(q_axes, None)),
         out_specs=(P(q_axes, None), P(q_axes, None)),
-        check_vma=False)(corpus, q)
+        check_replication=False)(corpus, q)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

@@ -44,6 +44,25 @@ def assign_clusters(x, centroids):
     return jnp.argmax(D.pairwise_scores(x, centroids, "l2"), axis=-1)
 
 
+def build_buckets(assign, n_clusters: int):
+    """Host-side inverted lists: assign (N,) -> (buckets (C, cap) int32, cap).
+
+    Pad slots carry id -1 so query shapes stay static (shared by IVFIndex and
+    IVFPQIndex).
+    """
+    assign = np.asarray(assign)
+    counts = np.bincount(assign, minlength=n_clusters)
+    cap = max(1, int(counts.max()))
+    buckets = np.full((n_clusters, cap), -1, np.int32)
+    fill = np.zeros(n_clusters, np.int64)
+    order = np.argsort(assign, kind="stable")
+    for i in order:
+        c = assign[i]
+        buckets[c, fill[c]] = i
+        fill[c] += 1
+    return buckets, cap
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "k", "nprobe", "cap"))
 def ivf_search(corpus, centroids, buckets, q, *, metric: str, k: int,
                nprobe: int, cap: int, corpus_sq=None):
@@ -108,15 +127,7 @@ class IVFIndex:
         if self.metric == "cosine":
             cent = D.l2_normalize(cent)
         assign = np.asarray(assign_clusters(corpus, cent))
-        counts = np.bincount(assign, minlength=C)
-        cap = max(1, int(counts.max()))
-        buckets = np.full((C, cap), -1, np.int32)
-        fill = np.zeros(C, np.int64)
-        order = np.argsort(assign, kind="stable")
-        for i in order:
-            c = assign[i]
-            buckets[c, fill[c]] = i
-            fill[c] += 1
+        buckets, cap = build_buckets(assign, C)
         self.corpus = corpus.astype(self.dtype)
         self.centroids = cent.astype(self.dtype)
         self.buckets = jnp.asarray(buckets)

@@ -1,0 +1,444 @@
+"""Product quantization: compressed corpus + asymmetric distance computation.
+
+The exact engines keep the f32 corpus resident; at MS MARCO scale the HBM
+footprint — not compute — caps corpus size. PQ splits each d-dim vector into
+``m`` subspaces, k-means-quantizes every subspace to ``ksub`` (<= 256)
+centroids, and stores one byte per subspace: d*4 bytes -> m bytes per row
+(32x at d=64, m=8).
+
+Queries stay full precision (asymmetric distance computation, ADC): per
+query, one (m, ksub) lookup table of subspace partial scores is built
+against the codebooks, and a corpus row's score is m table gathers + a sum —
+no decode, no f32 corpus touch. The table scoring twin lives in
+``repro.kernels.pq_adc`` as a fused Pallas kernel (LUT-resident VMEM,
+streaming code tiles); this module is the jnp path the engines run
+everywhere, mirroring flat.py vs kernels/topk_distance.py.
+
+Two engines compose out of it:
+  * ``PQIndex``       — flat ADC scan over all N codes.
+  * ``IVFPQIndex``    — IVF coarse quantizer (repro.core.ivf) over PQ-coded
+                        *residuals* (x - centroid), the FAISS IVFADC layout:
+                        probe nprobe buckets, ADC-score only their codes.
+Both optionally keep the raw corpus to exactly re-rank the top ``refine``
+ADC candidates (recall repair; production stores park raw rows in slow
+storage, so index-resident memory is still codes + codebooks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as D
+from repro.core.ivf import assign_clusters, build_buckets, kmeans
+
+
+def subspace_split(x, m: int):
+    """x: (N, d) -> (N, m, dsub), zero-padding d up to a multiple of m."""
+    N, d = x.shape
+    dsub = -(-d // m)
+    pad = m * dsub - d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x.reshape(N, m, dsub)
+
+
+def train_pq(key, x, *, m: int, ksub: int = 256, iters: int = 10):
+    """Per-subspace Lloyd k-means. x: (N, d) f32 -> codebooks (m, ksub, dsub).
+
+    Zero-padded tail dims train like real dims (their centroids are ~0, so
+    they cannot change any ranking). ksub caps at N and 256 (codes are u8).
+    """
+    assert ksub <= 256, "codes are stored as uint8"
+    ksub = min(ksub, x.shape[0])
+    xs = subspace_split(jnp.asarray(x, jnp.float32), m)
+    keys = jax.random.split(key, m)
+    return jnp.stack([
+        kmeans(keys[j], xs[:, j, :], n_clusters=ksub, iters=iters)
+        for j in range(m)
+    ])
+
+
+@jax.jit
+def pq_encode(codebooks, x):
+    """x: (N, d) -> codes (N, m) uint8 (nearest centroid per subspace)."""
+    m = codebooks.shape[0]
+    xs = subspace_split(jnp.asarray(x, jnp.float32), m)  # (N, m, dsub)
+    dots = jnp.einsum("nmd,mkd->nmk", xs, codebooks,
+                      preferred_element_type=jnp.float32)
+    c_sq = jnp.sum(jnp.square(codebooks), axis=-1)  # (m, ksub)
+    # argmin ||x - c||^2 == argmax 2 x.c - |c|^2 (|x|^2 constant per row)
+    return jnp.argmax(2.0 * dots - c_sq[None], axis=-1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("d",))
+def pq_decode(codebooks, codes, *, d: int):
+    """codes: (N, m) -> reconstruction (N, d) from codebook centroids."""
+    m = codebooks.shape[0]
+    rec = codebooks[jnp.arange(m)[None, :], codes.astype(jnp.int32)]  # (N, m, dsub)
+    return rec.reshape(codes.shape[0], -1)[:, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def adc_tables(codebooks, q, *, metric: str):
+    """Per-query subspace score tables. q: (Q, d) -> luts (Q, m, ksub) f32.
+
+    dot:  lut[q, j, c] = q_j . c          (sum over j == q . decode)
+    l2:   lut[q, j, c] = -|q_j - c|^2     (sum over j == -|q - decode|^2)
+    Higher = closer, matching every other engine's score convention.
+    """
+    m = codebooks.shape[0]
+    qs = subspace_split(jnp.asarray(q, jnp.float32), m)  # (Q, m, dsub)
+    dots = jnp.einsum("qmd,mkd->qmk", qs, codebooks,
+                      preferred_element_type=jnp.float32)
+    if metric == "dot":
+        return dots
+    assert metric == "l2", metric
+    c_sq = jnp.sum(jnp.square(codebooks), axis=-1)  # (m, ksub)
+    q_sq = jnp.sum(jnp.square(qs), axis=-1)  # (Q, m)
+    return -(q_sq[:, :, None] - 2.0 * dots + c_sq[None])
+
+
+def adc_scores(luts, codes):
+    """Dense ADC scores. luts: (Q, m, ksub); codes: (N, m) -> (Q, N) f32.
+
+    m gathers of (Q, N) — the jnp scoring core shared by pq_topk and the
+    bucket path in ivf_pq_search.
+    """
+    Q = luts.shape[0]
+    m = codes.shape[1]
+    idx = codes.astype(jnp.int32).T  # (m, N)
+    total = jnp.zeros((Q, idx.shape[1]), jnp.float32)
+    for j in range(m):
+        total = total + jnp.take(luts[:, j, :], idx[j], axis=1)
+    return total
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile"))
+def pq_topk(luts, codes, *, k: int, tile: int = 4096, valid=None):
+    """Flat ADC top-k over all codes, tiled like flat_search.
+
+    luts: (Q, m, ksub); codes: (N, m) -> (scores (Q, k), ids (Q, k)).
+    Peak memory O(Q * tile), never O(Q * N).
+    """
+    N = codes.shape[0]
+    Q = luts.shape[0]
+    k = min(k, N)
+    if N <= tile:
+        scores = adc_scores(luts, codes)
+        return D.topk_scores(scores, k, valid)
+
+    n_tiles = (N + tile - 1) // tile
+    pad = n_tiles * tile - N
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    v = jnp.arange(N + pad) < N if valid is None else jnp.pad(valid, (0, pad))
+    tiles = codes.reshape(n_tiles, tile, -1)
+    v_t = v.reshape(n_tiles, tile)
+
+    def step(carry, xs):
+        best_s, best_i = carry
+        ti, ct, vt = xs
+        scores = jnp.where(vt[None, :], adc_scores(luts, ct), -jnp.inf)
+        s, i = jax.lax.top_k(scores, k)
+        return D.merge_topk(best_s, best_i, s, i + ti * tile, k), None
+
+    init = (jnp.full((Q, k), -jnp.inf, jnp.float32), jnp.zeros((Q, k), jnp.int32))
+    (s, i), _ = jax.lax.scan(step, init, (jnp.arange(n_tiles), tiles, v_t))
+    return s, i
+
+
+def _exact_rerank(corpus, corpus_sq, cand, q, *, metric: str, k: int):
+    """Re-score the top candidates exactly and re-sort. cand: (Q, R) ids
+    (-1 = pad). Returns (scores (Q, k), ids (Q, k))."""
+    valid = cand >= 0
+    safe = jnp.where(valid, cand, 0)
+    vecs = jnp.take(corpus, safe, axis=0)  # (Q, R, d)
+    dots = jnp.einsum("qd,qrd->qr", q.astype(jnp.float32),
+                      vecs.astype(jnp.float32), preferred_element_type=jnp.float32)
+    if metric == "dot":
+        scores = dots
+    else:
+        sq = (jnp.take(corpus_sq, safe, axis=-1) if corpus_sq is not None
+              else jnp.sum(jnp.square(vecs.astype(jnp.float32)), -1))
+        q_sq = jnp.sum(jnp.square(q.astype(jnp.float32)), -1)
+        scores = -(q_sq[:, None] - 2.0 * dots + sq)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    s, pos = jax.lax.top_k(scores, min(k, scores.shape[-1]))
+    ids = jnp.take_along_axis(cand, pos, axis=-1)
+    return _pad_to_k(s, ids, k)
+
+
+def _pad_to_k(s, ids, k: int):
+    kk = s.shape[-1]
+    if kk < k:
+        s = jnp.pad(s, ((0, 0), (0, k - kk)), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return s, ids
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "refine", "tile"))
+def pq_search(codebooks, codes, corpus, q, *, metric: str, k: int,
+              refine: int = 0, tile: int = 4096, corpus_sq=None):
+    """Flat ADC search (+ optional exact re-rank of the top ``refine``).
+
+    corpus is only touched (and may be None) when refine > 0.
+    """
+    N = codes.shape[0]
+    luts = adc_tables(codebooks, q, metric=metric)
+    if not refine:
+        return pq_topk(luts, codes, k=k)
+    R = min(max(refine, k), N)
+    _, cand = pq_topk(luts, codes, k=R)
+    return _exact_rerank(corpus, corpus_sq, cand, q, metric=metric, k=k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "k", "nprobe", "cap", "refine"))
+def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
+                  metric: str, k: int, nprobe: int, cap: int, refine: int = 0,
+                  corpus_sq=None):
+    """IVF-ADC: probe nprobe coarse buckets, ADC-score their residual codes.
+
+    codes are PQ codes of (x - centroid[assign]); scoring must therefore use
+    residual geometry per probed bucket:
+      dot: q.x = q.centroid_p + q.residual          -> one LUT on q, plus a
+           per-probe scalar offset q.centroid_p.
+      l2:  |q - x|^2 = |(q - centroid_p) - residual|^2 -> per-(query, probe)
+           LUTs on t = q - centroid_p.
+    Returns (scores (Q, k), ids (Q, k)); pad slots are -inf / -1.
+    """
+    Q = q.shape[0]
+    q = jnp.asarray(q, jnp.float32)
+    c_scores = D.pairwise_scores(q, centroids, metric if metric == "dot" else "l2")
+    _, probe = jax.lax.top_k(c_scores, nprobe)  # (Q, nprobe)
+    cand = jnp.take(buckets, probe, axis=0)  # (Q, nprobe, cap)
+    valid = cand >= 0
+    safe = jnp.where(valid, cand, 0)
+    bucket_codes = jnp.take(codes.astype(jnp.int32), safe, axis=0)  # (Q, nprobe, cap, m)
+    m = codebooks.shape[0]
+
+    if metric == "dot":
+        luts = adc_tables(codebooks, q, metric="dot")  # (Q, m, ksub)
+        flat_codes = bucket_codes.reshape(Q, nprobe * cap, m)
+        s = jnp.zeros((Q, nprobe * cap), jnp.float32)
+        for j in range(m):
+            s = s + jnp.take_along_axis(luts[:, j, :], flat_codes[..., j], axis=1)
+        s = s.reshape(Q, nprobe, cap)
+        offset = jnp.take_along_axis(
+            jnp.einsum("qd,cd->qc", q, centroids.astype(jnp.float32),
+                       preferred_element_type=jnp.float32), probe, axis=1)
+        s = s + offset[:, :, None]
+    else:
+        t = q[:, None, :] - jnp.take(centroids, probe, axis=0)  # (Q, nprobe, d)
+        luts = adc_tables(codebooks, t.reshape(Q * nprobe, -1), metric="l2")
+        luts = luts.reshape(Q, nprobe, m, -1)  # (Q, nprobe, m, ksub)
+        s = jnp.zeros((Q, nprobe, cap), jnp.float32)
+        for j in range(m):
+            s = s + jnp.take_along_axis(luts[:, :, j, :], bucket_codes[..., j],
+                                        axis=2)
+
+    s = jnp.where(valid, s, -jnp.inf).reshape(Q, nprobe * cap)
+    cand = cand.reshape(Q, nprobe * cap)
+    R = min(max(refine, k), nprobe * cap)
+    s, pos = jax.lax.top_k(s, R)
+    ids = jnp.take_along_axis(cand, pos, axis=-1)
+    if refine:
+        return _exact_rerank(corpus, corpus_sq, ids, q, metric=metric, k=k)
+    return _pad_to_k(s[:, :k], ids[:, :k], k)
+
+
+def _check_snapshot(state, engine: str, metric: str):
+    """Codes are metric-specific (cosine trains on normalized rows, l2 LUTs
+    differ from dot) — restoring across engine/metric would silently rank
+    wrong, so snapshots carry both and restore refuses a mismatch."""
+    got_engine = str(state.get("engine", engine))
+    got_metric = str(state.get("metric", metric))
+    if got_engine != engine or got_metric != metric:
+        raise ValueError(
+            f"snapshot was saved by engine={got_engine!r} metric={got_metric!r},"
+            f" cannot restore into engine={engine!r} metric={metric!r}")
+
+
+class PQIndex:
+    """Flat product-quantized engine: m bytes/row, ADC scan, optional exact
+    re-rank of the top ``refine`` candidates (refine=0 drops the raw corpus
+    entirely — pure compressed-domain search)."""
+
+    def __init__(self, metric: str = "cosine", m: int = 8, ksub: int = 256,
+                 kmeans_iters: int = 10, refine: int = 32, seed: int = 0):
+        assert metric in D.METRICS
+        self.metric = metric
+        self.m = m
+        self.ksub = ksub
+        self.kmeans_iters = kmeans_iters
+        self.refine = refine
+        self.seed = seed
+        self.codebooks = self.codes = self.corpus = self.corpus_sq = None
+        self.d = 0
+
+    @property
+    def size(self) -> int:
+        return 0 if self.codes is None else int(self.codes.shape[0])
+
+    def load(self, vectors):
+        x = jnp.asarray(vectors, jnp.float32)
+        self.d = x.shape[1]
+        corpus, sq = D.preprocess_corpus(x, self.metric)
+        self.corpus_sq = sq
+        self.codebooks = train_pq(jax.random.PRNGKey(self.seed), corpus,
+                                  m=self.m, ksub=self.ksub,
+                                  iters=self.kmeans_iters)
+        self.codes = pq_encode(self.codebooks, corpus)
+        self.corpus = corpus if self.refine else None
+        return self
+
+    def query(self, q, k: int = 10):
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+        metric = self.metric
+        if metric == "cosine":
+            q = D.l2_normalize(q)
+            metric = "dot"  # corpus rows were normalized at load time
+        return pq_search(self.codebooks, self.codes, self.corpus, q,
+                         metric=metric, k=min(k, self.size),
+                         refine=self.refine, corpus_sq=self.corpus_sq)
+
+    # ------------------------------------------------------- persistence
+    def state_dict(self):
+        state = {"engine": np.asarray("pq"), "metric": np.asarray(self.metric),
+                 "codebooks": self.codebooks, "codes": self.codes,
+                 "d": jnp.asarray(self.d, jnp.int32)}
+        if self.corpus is not None:
+            state["corpus"] = self.corpus
+        if self.corpus_sq is not None:
+            state["corpus_sq"] = self.corpus_sq
+        return state
+
+    def load_state(self, state):
+        _check_snapshot(state, "pq", self.metric)
+        self.codebooks = jnp.asarray(state["codebooks"], jnp.float32)
+        self.codes = jnp.asarray(state["codes"], jnp.uint8)
+        self.d = int(state["d"])
+        self.corpus = (jnp.asarray(state["corpus"], jnp.float32)
+                       if "corpus" in state else None)
+        self.corpus_sq = (jnp.asarray(state["corpus_sq"], jnp.float32)
+                          if "corpus_sq" in state else None)
+        if self.corpus is None:
+            self.refine = 0
+        self.m = int(self.codebooks.shape[0])
+        self.ksub = int(self.codebooks.shape[1])
+        return self
+
+    def memory_bytes(self, include_raw: bool = False) -> int:
+        """Index-resident bytes: codes + codebooks (+ raw re-rank corpus)."""
+        total = self.codes.size + self.codebooks.size * 4
+        if self.corpus_sq is not None:
+            total += self.corpus_sq.size * 4
+        if include_raw and self.corpus is not None:
+            total += self.corpus.size * 4
+        return int(total)
+
+
+class IVFPQIndex:
+    """IVF coarse quantizer over PQ-coded residuals + exact re-ranking —
+    the memory/recall rung the exact engines cannot reach (FAISS IVFADC)."""
+
+    def __init__(self, metric: str = "cosine", n_clusters: int = 0,
+                 nprobe: int = 8, m: int = 8, ksub: int = 256,
+                 kmeans_iters: int = 10, refine: int = 32, seed: int = 0):
+        assert metric in D.METRICS
+        self.metric = metric
+        self.n_clusters = n_clusters  # 0 => sqrt(N) at load time
+        self.nprobe = nprobe
+        self.m = m
+        self.ksub = ksub
+        self.kmeans_iters = kmeans_iters
+        self.refine = refine
+        self.seed = seed
+        self.codebooks = self.codes = self.centroids = self.buckets = None
+        self.corpus = self.corpus_sq = None
+        self.cap = 0
+        self.d = 0
+
+    @property
+    def size(self) -> int:
+        return 0 if self.codes is None else int(self.codes.shape[0])
+
+    def load(self, vectors):
+        x = jnp.asarray(vectors, jnp.float32)
+        N, self.d = x.shape
+        C = self.n_clusters or max(1, int(np.sqrt(N)))
+        C = min(C, N)
+        corpus, sq = D.preprocess_corpus(x, self.metric)
+        self.corpus_sq = sq
+        key = jax.random.PRNGKey(self.seed)
+        cent = kmeans(key, corpus, n_clusters=C, iters=self.kmeans_iters)
+        if self.metric == "cosine":
+            cent = D.l2_normalize(cent)
+        assign = assign_clusters(corpus, cent)
+        buckets, cap = build_buckets(assign, C)
+        residuals = corpus - jnp.take(cent, assign, axis=0)
+        self.codebooks = train_pq(jax.random.fold_in(key, 1), residuals,
+                                  m=self.m, ksub=self.ksub,
+                                  iters=self.kmeans_iters)
+        self.codes = pq_encode(self.codebooks, residuals)
+        self.centroids = cent
+        self.buckets = jnp.asarray(buckets)
+        self.cap = cap
+        self.corpus = corpus if self.refine else None
+        return self
+
+    def query(self, q, k: int = 10):
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+        metric = self.metric
+        if metric == "cosine":
+            q = D.l2_normalize(q)
+            metric = "dot"
+        nprobe = min(self.nprobe, self.centroids.shape[0])
+        return ivf_pq_search(self.codebooks, self.codes, self.centroids,
+                             self.buckets, self.corpus, q, metric=metric,
+                             k=min(k, self.size), nprobe=nprobe, cap=self.cap,
+                             refine=self.refine, corpus_sq=self.corpus_sq)
+
+    # ------------------------------------------------------- persistence
+    def state_dict(self):
+        state = {"engine": np.asarray("ivf_pq"),
+                 "metric": np.asarray(self.metric),
+                 "codebooks": self.codebooks, "codes": self.codes,
+                 "centroids": self.centroids, "buckets": self.buckets,
+                 "d": jnp.asarray(self.d, jnp.int32)}
+        if self.corpus is not None:
+            state["corpus"] = self.corpus
+        if self.corpus_sq is not None:
+            state["corpus_sq"] = self.corpus_sq
+        return state
+
+    def load_state(self, state):
+        _check_snapshot(state, "ivf_pq", self.metric)
+        self.codebooks = jnp.asarray(state["codebooks"], jnp.float32)
+        self.codes = jnp.asarray(state["codes"], jnp.uint8)
+        self.centroids = jnp.asarray(state["centroids"], jnp.float32)
+        self.buckets = jnp.asarray(state["buckets"], jnp.int32)
+        self.d = int(state["d"])
+        self.cap = int(self.buckets.shape[1])
+        self.corpus = (jnp.asarray(state["corpus"], jnp.float32)
+                       if "corpus" in state else None)
+        self.corpus_sq = (jnp.asarray(state["corpus_sq"], jnp.float32)
+                          if "corpus_sq" in state else None)
+        if self.corpus is None:
+            self.refine = 0
+        self.m = int(self.codebooks.shape[0])
+        self.ksub = int(self.codebooks.shape[1])
+        return self
+
+    def memory_bytes(self, include_raw: bool = False) -> int:
+        """Index-resident bytes: codes + codebooks + coarse structures."""
+        total = (self.codes.size + self.codebooks.size * 4
+                 + self.centroids.size * 4 + self.buckets.size * 4)
+        if self.corpus_sq is not None:
+            total += self.corpus_sq.size * 4
+        if include_raw and self.corpus is not None:
+            total += self.corpus.size * 4
+        return int(total)

@@ -2,12 +2,13 @@
 
 flash_attention — the encoder/LM forward ("99% of wall time was SBERT")
 topk_distance   — fused corpus scoring + top-k (the DB query path)
+pq_adc          — fused PQ table-gather scoring + top-k (compressed corpus)
 hamming         — LSH XOR+popcount ranking
 
 Each <name>.py holds the pl.pallas_call + BlockSpec tiling; ops.py is the
 jit'd public wrapper (padding, layout, backend auto-select); ref.py the
 pure-jnp oracle the tests sweep against.
 """
-from repro.kernels.ops import flash_attention, hamming, topk_distance
+from repro.kernels.ops import flash_attention, hamming, pq_adc, topk_distance
 
-__all__ = ["flash_attention", "hamming", "topk_distance"]
+__all__ = ["flash_attention", "hamming", "pq_adc", "topk_distance"]

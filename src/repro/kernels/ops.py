@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import hamming as _hm
+from repro.kernels import pq_adc as _pq
 from repro.kernels import topk_distance as _tk
 
 
@@ -85,6 +86,27 @@ def topk_distance(corpus, q, *, k: int, metric: str = "dot", corpus_sq=None,
     bias = jnp.where(keep, bias, -1e30)
     return _tk.topk_distance(corpus, q, k=k, l2=l2, bias=bias, blk_n=blk_n,
                              interpret=interpret)
+
+
+def pq_adc(codes, luts, *, k: int, valid=None, blk_n: int = 256,
+           interpret=None):
+    """Fused PQ ADC top-k. codes: (N, m); luts: (Q, m, ksub).
+
+    Pads N to the tile size; pad rows (and rows where ``valid`` is False) are
+    knocked out inside the kernel via the additive score bias.
+    """
+    interpret = _auto_interpret(interpret)
+    N = codes.shape[0]
+    blk_n = min(blk_n, N)
+    codes = codes.astype(jnp.int32)
+    codes, _ = _pad_axis(codes, 0, blk_n)
+    Np = codes.shape[0]
+    keep = jnp.arange(Np) < N
+    if valid is not None:
+        keep = keep & jnp.pad(valid, (0, Np - valid.shape[0]))
+    bias = jnp.where(keep, 0.0, -1e30)
+    return _pq.pq_adc(codes, luts, k=k, bias=bias, blk_n=blk_n,
+                      interpret=interpret)
 
 
 def hamming(q_codes, c_codes, *, blk_n: int = 1024, interpret=None):

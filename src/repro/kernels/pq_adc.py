@@ -1,0 +1,107 @@
+"""Fused PQ asymmetric-distance + top-k Pallas kernel — the compressed-
+corpus twin of topk_distance.py.
+
+ADC's hot loop is a table gather: score[q, n] = sum_j lut[q, j, codes[n, j]].
+Mosaic has no vector gather, but the gather IS a matmul against a one-hot
+expansion of the codes: with the (Q, m, ksub) LUT flattened to (Q, m*ksub)
+and sel[n, j*ksub + c] = (codes[n, j] == c), the score tile is one MXU
+contraction (Q, m*ksub) x (m*ksub, blk_n). m*ksub is 2048 lanes at the
+default m=8 geometry — a dense, layout-friendly contraction, and the one-hot
+never leaves VMEM.
+
+Corpus code tiles (blk_n, m) stream through VMEM; the LUT stays resident
+across grid steps; the running (Q, k) best-score/best-id scoreboard lives in
+VMEM scratch exactly like topk_distance.py (same unrolled knockout top-k).
+HBM traffic is codes-read + (Q, k) out — the f32 corpus is never touched,
+which is the entire point of PQ.
+
+Grid: (N / blk_n,), sequential on TPU. ``bias`` (N,) folds pad-row knockout
+into the score add (built by ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.topk_distance import NEG_INF, _select_topk
+
+
+def _pq_adc_kernel(c_ref, l_ref, bias_ref, s_out, i_out, bs_ref, bi_ref, *,
+                   blk_n: int, n_blocks: int, k: int, ksub: int):
+    ni = pl.program_id(0)
+
+    @pl.when(ni == 0)
+    def _init():
+        bs_ref[...] = jnp.full_like(bs_ref, NEG_INF)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    codes = c_ref[...]  # (blk_n, m) int32
+    lut = l_ref[...]    # (Q, m*ksub) f32
+    m = codes.shape[1]
+    # one-hot expansion: sel[n, j, c] = (codes[n, j] == c), collapsed to the
+    # flattened (blk_n, m*ksub) LUT axis — the gather becomes an MXU matmul
+    sub = jax.lax.broadcasted_iota(jnp.int32, (blk_n, m, ksub), 2)
+    sel = (codes[:, :, None] == sub).astype(lut.dtype).reshape(blk_n, m * ksub)
+    s = jax.lax.dot_general(lut, sel, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, blk_n)
+    s = s + bias_ref[...][None, :]
+    Q = s.shape[0]
+    ids = ni * blk_n + jax.lax.broadcasted_iota(jnp.int32, (Q, blk_n), 1)
+
+    comb_s = jnp.concatenate([bs_ref[...], s], axis=1)
+    comb_i = jnp.concatenate([bi_ref[...], ids], axis=1)
+    bs_ref[...], bi_ref[...] = _select_topk(comb_s, comb_i, k)
+
+    @pl.when(ni == n_blocks - 1)
+    def _finalize():
+        s_out[...] = bs_ref[...]
+        i_out[...] = bi_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "blk_n", "interpret"))
+def pq_adc(codes, luts, *, k: int, bias=None, blk_n: int = 256,
+           interpret: bool = False):
+    """codes: (N, m) int32; luts: (Q, m, ksub) f32
+    -> (scores (Q, k) f32, ids (Q, k) int32).
+
+    score[q, n] = sum_j luts[q, j, codes[n, j]] + bias[n]. N must divide by
+    blk_n; ``bias`` carries the pad/invalid-row knockout (ops.py builds it).
+    """
+    N, m = codes.shape
+    Q, m_l, ksub = luts.shape
+    assert m == m_l, (m, m_l)
+    blk_n = min(blk_n, N)
+    assert N % blk_n == 0, (N, blk_n)
+    n_blocks = N // blk_n
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    luts_flat = luts.astype(jnp.float32).reshape(Q, m * ksub)
+
+    kernel = functools.partial(_pq_adc_kernel, blk_n=blk_n, n_blocks=n_blocks,
+                               k=k, ksub=ksub)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((blk_n, m), lambda n: (n, 0)),
+            pl.BlockSpec((Q, m * ksub), lambda n: (0, 0)),
+            pl.BlockSpec((blk_n,), lambda n: (n,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Q, k), lambda n: (0, 0)),
+            pl.BlockSpec((Q, k), lambda n: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Q, k), jnp.float32),
+            pltpu.VMEM((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes.astype(jnp.int32), luts_flat, bias)

@@ -43,6 +43,21 @@ def topk_distance_ref(corpus, q, *, k: int, metric: str = "dot", corpus_sq=None)
     return s, i.astype(jnp.int32)
 
 
+def pq_adc_ref(codes, luts, *, k: int, bias=None):
+    """codes: (N, m) int; luts: (Q, m, ksub) f32 -> (scores (Q, k), ids).
+
+    Fused ADC-score + top-k oracle: score[q, n] = sum_j luts[q, j, codes[n, j]]
+    (+ bias[n]), higher = closer.
+    """
+    idx = jnp.asarray(codes, jnp.int32).T  # (m, N)
+    scores = sum(jnp.take(luts[:, j, :], idx[j], axis=1)
+                 for j in range(idx.shape[0]))
+    if bias is not None:
+        scores = scores + bias[None, :]
+    s, i = jax.lax.top_k(scores, k)
+    return s, i.astype(jnp.int32)
+
+
 def hamming_ref(q_codes, c_codes):
     """q: (T, Q, W) uint32; c: (T, N, W) uint32 -> (Q, N) int32 min-Hamming."""
     x = jnp.bitwise_xor(q_codes[:, :, None, :], c_codes[:, None, :, :])

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import GNNConfig
 
 
@@ -97,17 +98,24 @@ def make_partitioned_loss(cfg: GNNConfig, mesh: Mesh, dp_axes, n_nodes: int):
         n = jnp.sum(label_mask.astype(jnp.float32))
         acc_sum = jnp.sum(jnp.where(label_mask, jnp.argmax(logits, -1) == labels,
                                     False).astype(jnp.float32))
-        # scalar partials -> replicated totals
-        loss_sum, n, acc_sum = jax.lax.psum((loss_sum, n, acc_sum), dp)
-        return loss_sum / jnp.maximum(n, 1.0), acc_sum / jnp.maximum(n, 1.0)
+        # per-shard partial sums, reduced OUTSIDE the shard_map: a psum here
+        # sits on the loss's gradient path, and jax 0.4.x cannot transpose
+        # psum under check_rep=False (rank-0 cotangents pick up the psum axis
+        # names and fail the out-spec check). The (1, 3) row concatenates to
+        # (n_shards, 3) under P(dp, None); summing that is the same collective
+        # but in jit-land where AD is routine.
+        return jnp.stack([loss_sum, n, acc_sum])[None, :]
 
     def loss_fn(params, batch):
-        loss, acc = jax.shard_map(
+        parts = shard_map(
             local_loss, mesh=mesh,
             in_specs=(P(), P(dp, None), P(None, dp), P(dp), P(dp), P(dp)),
-            out_specs=(P(), P()), check_vma=False,
+            out_specs=P(dp, None), check_replication=False,
         )(params, batch["feats"], batch["edges"], batch["edge_valid"],
           batch["labels"], batch["label_mask"])
-        return loss, {"loss": loss, "acc": acc}
+        loss_sum, n, acc_sum = jnp.sum(parts, axis=0)
+        n = jnp.maximum(n, 1.0)
+        loss = loss_sum / n
+        return loss, {"loss": loss, "acc": acc_sum / n}
 
     return loss_fn

@@ -95,6 +95,7 @@ class QueryEngine:
         if not self.latencies_ms:
             return {}
         a = np.asarray(self.latencies_ms)
-        return {"p50_ms": float(np.percentile(a, 50)),
+        return {"engine": getattr(self.db, "engine_name", "?"),
+                "p50_ms": float(np.percentile(a, 50)),
                 "p99_ms": float(np.percentile(a, 99)),
                 "mean_ms": float(a.mean()), "n": int(a.size)}

@@ -116,24 +116,29 @@ def adamw_update(grads, state, params, *, lr, b1: float = 0.9, b2: float = 0.95,
     def leaf(g, s, p):
         g32 = g.astype(jnp.float32)
         if int8_state:
+            # v is quantized in the SQRT domain: v spans orders of magnitude,
+            # and linear absmax codes round small entries to 0, exploding the
+            # 1/(sqrt(v)+eps) preconditioner. sqrt compresses the dynamic
+            # range so the 127-level grid lands on sqrt(v) — exactly the
+            # quantity the update divides by.
             if _last_dim_blocks(p.shape):  # sharding-preserving path
                 m = _dq8_nd(s["m_q"], s["m_s"])
-                v = _dq8_nd(s["v_q"], s["v_s"])
+                v = jnp.square(_dq8_nd(s["v_q"], s["v_s"]))
                 m = b1 * m + (1 - b1) * g32
                 v = b2 * v + (1 - b2) * jnp.square(g32)
                 upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
                 mq, ms = _q8_nd(m)
-                vq, vs = _q8_nd(v)
+                vq, vs = _q8_nd(jnp.sqrt(v))
                 return _finish(upd, p), {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
             flat_g, n = _pad_flat(g32)
             m = _dq8(s["m_q"], s["m_s"])
-            v = _dq8(s["v_q"], s["v_s"])
+            v = jnp.square(_dq8(s["v_q"], s["v_s"]))
             m = b1 * m + (1 - b1) * flat_g
             v = b2 * v + (1 - b2) * jnp.square(flat_g)
             upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
             upd = upd[:n].reshape(p.shape)
             mq, ms = _q8(m)
-            vq, vs = _q8(v)
+            vq, vs = _q8(jnp.sqrt(v))
             new_s = {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
         else:
             m = b1 * s["m"] + (1 - b1) * g32

@@ -102,6 +102,7 @@ def test_compressed_allreduce_8way():
     run_spmd("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.train import make_compressed_allreduce
         from repro.train.compress import init_error_feedback
         mesh = jax.make_mesh((8,), ('dp',))
@@ -111,8 +112,9 @@ def test_compressed_allreduce_8way():
         def f(g, e):
             out, err = allreduce({'w': g}, {'w': e})
             return out['w'], err['w']
-        out, err = jax.shard_map(f, mesh=mesh, in_specs=(P('dp'), P('dp')),
-                                 out_specs=(P('dp'), P('dp')), check_vma=False)(g, e)
+        out, err = shard_map(f, mesh=mesh, in_specs=(P('dp'), P('dp')),
+                             out_specs=(P('dp'), P('dp')),
+                             check_replication=False)(g, e)
         # each shard's output approximates the mean over shards
         mean = np.mean(np.asarray(g), axis=0)
         got = np.asarray(out)[0]

@@ -1,0 +1,196 @@
+"""Product-quantization subsystem: codec bounds, ADC kernel parity,
+IVF-PQ recall/compression floor, and index checkpoint roundtrips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import VectorDB
+from repro.core.pq import (adc_scores, adc_tables, pq_decode, pq_encode,
+                           pq_topk, train_pq)
+from repro.kernels import pq_adc
+from repro.kernels import ref as R
+
+
+def _clustered(rng, n, d, n_clusters, spread=1.0, scale=2.0):
+    centers = rng.normal(size=(n_clusters, d)).astype(np.float32) * scale
+    x = (centers[rng.integers(0, n_clusters, n)]
+         + spread * rng.normal(size=(n, d)).astype(np.float32))
+    return x
+
+
+# ------------------------------------------------------------ codec
+
+def test_pq_roundtrip_reconstruction_bound(rng):
+    """Quantization error must shrink vs a coarser codebook and stay well
+    under the data scale — PQ with ksub centroids/subspace beats 1."""
+    x = jnp.asarray(rng.normal(size=(800, 32)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    var = float(jnp.mean(jnp.square(x)))
+    errs = {}
+    for ksub in (1, 16, 256):
+        cb = train_pq(key, x, m=8, ksub=ksub)
+        rec = pq_decode(cb, pq_encode(cb, x), d=32)
+        errs[ksub] = float(jnp.mean(jnp.square(x - rec)))
+    assert errs[256] < errs[16] < errs[1] + 1e-6
+    assert errs[256] < 0.25 * var, errs  # 256 centroids on 4-dim subspaces
+
+
+def test_pq_encode_is_nearest_centroid(rng):
+    x = jnp.asarray(rng.normal(size=(100, 16)).astype(np.float32))
+    cb = train_pq(jax.random.PRNGKey(1), x, m=4, ksub=32)
+    codes = np.asarray(pq_encode(cb, x))
+    xs = np.asarray(x).reshape(100, 4, 4)
+    cbn = np.asarray(cb)
+    for j in range(4):
+        d2 = np.sum((xs[:, j, None, :] - cbn[j][None]) ** 2, axis=-1)
+        np.testing.assert_array_equal(codes[:, j], np.argmin(d2, axis=-1))
+
+
+def test_adc_tables_match_decoded_scores(rng):
+    """sum_j lut[q, j, code] must equal the score of the decoded vector."""
+    x = jnp.asarray(rng.normal(size=(300, 24)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(7, 24)).astype(np.float32))
+    cb = train_pq(jax.random.PRNGKey(2), x, m=6, ksub=64)
+    codes = pq_encode(cb, x)
+    rec = pq_decode(cb, codes, d=24)
+    for metric in ("dot", "l2"):
+        got = adc_scores(adc_tables(cb, q, metric=metric), codes)
+        if metric == "dot":
+            want = np.asarray(q) @ np.asarray(rec).T
+        else:
+            want = -np.sum((np.asarray(q)[:, None] - np.asarray(rec)[None]) ** 2,
+                           axis=-1)
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-3, rtol=1e-4)
+
+
+def test_pq_topk_tiling_invariance(rng):
+    codes = jnp.asarray(rng.integers(0, 64, size=(1003, 8)).astype(np.uint8))
+    luts = jnp.asarray(rng.normal(size=(5, 8, 64)).astype(np.float32))
+    s1, i1 = pq_topk(luts, codes, k=9, tile=128)
+    s2, i2 = pq_topk(luts, codes, k=9, tile=4096)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ------------------------------------------------------------ Pallas kernel
+
+ADC_CASES = [
+    # (N, m, ksub, Q, k, blk_n)
+    (512, 8, 256, 4, 8, 128),
+    (1000, 4, 64, 3, 10, 256),   # N pads 1000 -> 1024
+    (777, 16, 32, 6, 12, 512),
+    (256, 8, 256, 1, 1, 256),
+]
+
+
+@pytest.mark.parametrize("N,m,ksub,Q,k,blk", ADC_CASES)
+def test_pq_adc_kernel_vs_oracle(N, m, ksub, Q, k, blk, rng):
+    codes = jnp.asarray(rng.integers(0, ksub, size=(N, m)).astype(np.int32))
+    luts = jnp.asarray(rng.normal(size=(Q, m, ksub)).astype(np.float32))
+    s, i = pq_adc(codes, luts, k=k, blk_n=blk, interpret=True)
+    rs, ri = R.pq_adc_ref(codes, luts, k=k)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_pq_adc_kernel_on_trained_codebooks(rng):
+    """Kernel == oracle on real (trained) LUT geometry, l2 metric."""
+    x = rng.normal(size=(600, 48)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(5, 48)).astype(np.float32))
+    cb = train_pq(jax.random.PRNGKey(0), jnp.asarray(x), m=8, ksub=64)
+    codes = pq_encode(cb, jnp.asarray(x))
+    luts = adc_tables(cb, q, metric="l2")
+    s, i = pq_adc(codes, luts, k=10, blk_n=128, interpret=True)
+    rs, ri = R.pq_adc_ref(codes, luts, k=10)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_pq_adc_respects_valid_mask(rng):
+    codes = jnp.asarray(rng.integers(0, 16, size=(64, 4)).astype(np.int32))
+    luts = jnp.asarray(rng.normal(size=(2, 4, 16)).astype(np.float32))
+    valid = jnp.arange(64) % 2 == 0
+    _, i = pq_adc(codes, luts, k=5, valid=valid, blk_n=64, interpret=True)
+    assert (np.asarray(i) % 2 == 0).all()
+
+
+# ------------------------------------------------------------ engines
+
+def test_ivf_pq_recall_floor_at_8x_compression(rng):
+    """Acceptance: recall@10 >= 0.8 vs flat on a 10k clustered corpus while
+    the resident index is >= 8x smaller than the f32 corpus."""
+    N, d = 10_000, 64
+    corpus = _clustered(rng, N, d, n_clusters=100)
+    q = _clustered(rng, 256, d, n_clusters=100)
+    exact = VectorDB("flat", metric="cosine").load(corpus)
+    _, eids = exact.query(q, k=10)
+    eids = np.asarray(eids)
+    db = VectorDB("ivf_pq", metric="cosine", m=8, nprobe=32,
+                  refine=128).load(corpus)
+    _, ids = db.query(q, k=10)
+    ids = np.asarray(ids)
+    recall = np.mean([len(set(ids[i]) & set(eids[i])) / 10
+                      for i in range(len(q))])
+    compression = corpus.nbytes / db.index.memory_bytes()
+    assert recall >= 0.8, recall
+    assert compression >= 8.0, compression
+
+
+def test_pq_beats_no_refine_on_recall(rng):
+    """Exact re-ranking must not hurt (and normally helps) recall."""
+    corpus = _clustered(rng, 2000, 32, n_clusters=40)
+    q = _clustered(rng, 64, 32, n_clusters=40)
+    exact = VectorDB("flat", metric="l2").load(corpus)
+    _, eids = exact.query(q, k=10)
+    eids = np.asarray(eids)
+
+    def recall(db):
+        ids = np.asarray(db.query(q, k=10)[1])
+        return np.mean([len(set(ids[i]) & set(eids[i])) / 10
+                        for i in range(len(q))])
+    r_raw = recall(VectorDB("pq", metric="l2", refine=0).load(corpus))
+    r_ref = recall(VectorDB("pq", metric="l2", refine=64).load(corpus))
+    assert r_ref >= r_raw - 1e-9, (r_raw, r_ref)
+    assert r_ref >= 0.7, r_ref
+
+
+@pytest.mark.parametrize("engine", ["pq", "ivf_pq"])
+@pytest.mark.parametrize("metric", ["cosine", "l2"])
+def test_checkpoint_roundtrip(tmp_path, rng, engine, metric):
+    corpus = rng.normal(size=(500, 32)).astype(np.float32)
+    q = corpus[:6] + 0.01 * rng.normal(size=(6, 32)).astype(np.float32)
+    db = VectorDB(engine, metric=metric).load(corpus)
+    s0, i0 = db.query(q, k=5)
+    db.save_index(str(tmp_path), step=2)
+    db2 = VectorDB(engine, metric=metric).restore_index(str(tmp_path))
+    assert db2.n == 500
+    s1, i1 = db2.query(q, k=5)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-6)
+
+
+def test_checkpoint_refuses_engine_or_metric_mismatch(tmp_path, rng):
+    """Codes are metric-specific; restoring across metric/engine must fail
+    loudly instead of silently ranking wrong."""
+    corpus = rng.normal(size=(200, 16)).astype(np.float32)
+    VectorDB("pq", metric="cosine").load(corpus).save_index(str(tmp_path))
+    with pytest.raises(ValueError, match="metric"):
+        VectorDB("pq", metric="l2").restore_index(str(tmp_path))
+    with pytest.raises(ValueError, match="engine"):
+        VectorDB("ivf_pq", metric="cosine").restore_index(str(tmp_path))
+
+
+def test_checkpoint_roundtrip_without_raw_corpus(tmp_path, rng):
+    """refine=0 snapshots carry no raw corpus and restore compressed-only."""
+    corpus = rng.normal(size=(300, 16)).astype(np.float32)
+    db = VectorDB("pq", metric="l2", refine=0).load(corpus)
+    s0, i0 = db.query(corpus[:3], k=4)
+    db.save_index(str(tmp_path))
+    db2 = VectorDB("pq", metric="l2").restore_index(str(tmp_path))
+    assert db2.index.corpus is None and db2.index.refine == 0
+    s1, i1 = db2.query(corpus[:3], k=4)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-6)
