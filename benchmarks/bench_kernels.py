@@ -70,12 +70,15 @@ def hamming_agreement():
 
 def main(quick: bool = False):
     print("name,case,match,oracle_s")
-    for r in topk_agreement():
+    rows = {"topk": topk_agreement(), "pq_adc": pq_adc_agreement(),
+            "hamming": hamming_agreement()}
+    for r in rows["topk"]:
         print(f"kernels,topk_N{r['N']}d{r['d']},{r['match']},{r['oracle_s']:.4f}")
-    for r in pq_adc_agreement():
+    for r in rows["pq_adc"]:
         print(f"kernels,pq_adc_N{r['N']}m{r['m']},{r['match']},{r['oracle_s']:.4f}")
-    for r in hamming_agreement():
+    for r in rows["hamming"]:
         print(f"kernels,hamming_N{r['N']},{r['match']},{r['oracle_s']:.4f}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -32,10 +32,12 @@ def run(n_corpus: int = 5000, n_requests: int = 400, d: int = 128,
 def main(quick: bool = False):
     rows = run(n_corpus=1000 if quick else 5000,
                n_requests=100 if quick else 400)
-    print("name,engine,max_batch,p50_ms,p99_ms,mean_ms,top1_acc")
+    print("name,engine,max_batch,p50_ms,p99_ms,mean_ms,plan_misses,top1_acc")
     for r in rows:
         print(f"serve,{r['engine']},{r['max_batch']},{r['p50_ms']:.3f},"
-              f"{r['p99_ms']:.3f},{r['mean_ms']:.3f},{r['top1_acc']:.3f}")
+              f"{r['p99_ms']:.3f},{r['mean_ms']:.3f},"
+              f"{r.get('plan_misses', -1)},{r['top1_acc']:.3f}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,14 +1,26 @@
-"""Embedding throughput — the paper's ">99% of wall time was SBERT" finding.
+"""Embedding + query-path throughput.
 
 Measures (CPU walltime; the TPU numbers live in the dry-run roofline):
   * encoder forward tokens/s at several batch sizes (mini-SBERT smoke),
   * end-to-end insert pipeline split: embed time vs index time — reproducing
-    the paper's observation that the DB machinery is noise next to the
-    encoder forward,
-  * dense vs chunked attention walltime at growing sequence length.
+    the paper's ">99% of wall time was SBERT" observation,
+  * dense vs chunked attention walltime at growing sequence length,
+  * the PQ ADC hot path: PR-1 jnp ``pq_topk`` scan vs the fused dispatch
+    (f32 and bf16-LUT twins of the Pallas kernel) — QPS and recall@10 per
+    path, plus the served ``pq`` engine end to end,
+  * ``DistributedPQ`` per-device resident bytes vs a replicated f32 corpus
+    on a forced multi-device host mesh (subprocess).
+
+``main(json_path=...)`` additionally dumps every section's rows as JSON —
+CI uploads it as the smoke artifact and gates on the pq recall field;
+``BENCH_pq_adc.json`` at the repo root is the committed full-size baseline.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -66,10 +78,122 @@ def insert_split(N: int = 1000):
             "embed_frac": t_embed / (t_embed + t_index)}
 
 
-def attention_scaling():
+def _clustered(rng, n, d, n_clusters, scale=2.0):
+    centers = rng.normal(size=(n_clusters, d)).astype(np.float32) * scale
+    return (centers[rng.integers(0, n_clusters, n)]
+            + rng.normal(size=(n, d)).astype(np.float32))
+
+
+def pq_adc_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
+                 k: int = 10, m: int = 8, seed: int = 0):
+    """QPS + recall@10 for every ADC scoring path on a clustered corpus.
+
+    Paths (same codes, same LUT build, scoring only):
+      * jnp_pq_topk — the PR-1 scanned gather baseline,
+      * fused_f32   — ops.adc_topk jnp twin (fused gather+sum+top_k),
+      * fused_bf16  — same with bf16 LUTs (half the gathered bytes),
+    plus the served ``pq`` engine end to end (LUT build + fused bf16 scan +
+    exact refine) whose recall@10 is the CI gate.
+    """
+    from repro.core.pq import adc_tables, pq_encode, pq_topk, train_pq
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(seed)
+    n_clusters = max(8, N // 100)
+    corpus = _clustered(rng, N, d, n_clusters)
+    q = _clustered(rng, n_queries, d, n_clusters)
+    exact = VectorDB("flat", metric="cosine").load(corpus)
+    eids = np.asarray(exact.query(q, k=k, bucketize=False)[1])
+
+    corpus_n = np.asarray(corpus / np.linalg.norm(corpus, axis=-1, keepdims=True))
+    qn = jnp.asarray(q / np.linalg.norm(q, axis=-1, keepdims=True))
+    cb = train_pq(jax.random.PRNGKey(seed), jnp.asarray(corpus_n), m=m)
+    codes = pq_encode(cb, jnp.asarray(corpus_n))
+    luts = adc_tables(cb, qn, metric="dot")
+
+    def recall(ids):
+        ids = np.asarray(ids)
+        return float(np.mean([len(set(ids[i]) & set(eids[i])) / k
+                              for i in range(n_queries)]))
+
+    # the served engine config (refine=128 exact re-rank, the recall-floor
+    # setting from tests/test_pq.py): what the CI recall gate reads
+    db_f32 = VectorDB("pq", metric="cosine", m=m, refine=128).load(corpus)
+    db_bf16 = VectorDB("pq", metric="cosine", m=m, refine=128,
+                       lut_dtype="bfloat16").load(corpus)
+    paths = {
+        "jnp_pq_topk": lambda: pq_topk(luts, codes, k=k),
+        "fused_f32": lambda: kops.adc_topk(codes, luts, k=k,
+                                           use_kernel=False),
+        "fused_bf16": lambda: kops.adc_topk(codes, luts, k=k,
+                                            use_kernel=False,
+                                            lut_dtype="bfloat16"),
+        "engine_pq_f32": lambda: db_f32.query(q, k=k),
+        "engine_pq_bf16": lambda: db_bf16.query(q, k=k),
+    }
+    # round-robin the reps so every path sees the same background load and
+    # the min-of-reps ratio is stable on noisy shared hosts
+    for fn in paths.values():
+        jax.block_until_ready(fn())  # compile
+    walls = {name: float("inf") for name in paths}
+    for _ in range(15):
+        for name, fn in paths.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            walls[name] = min(walls[name], time.perf_counter() - t0)
+    rows = [{"path": name, "N": N, "qps": n_queries / walls[name],
+             "recall_at_10": recall(paths[name]()[1])}
+            for name in paths]
+
+    base = next(r for r in rows if r["path"] == "jnp_pq_topk")
+    fused = next(r for r in rows if r["path"] == "fused_bf16")
+    rows.append({"path": "speedup_bf16_vs_pq_topk", "N": N,
+                 "qps": fused["qps"] / base["qps"],
+                 "recall_at_10": fused["recall_at_10"] - base["recall_at_10"]})
+    return rows
+
+
+_DIST_PQ_SNIPPET = """
+import json
+import jax, numpy as np
+from repro.core import DistributedPQ, VectorDB
+mesh = jax.make_mesh(({shards},), ('data',))
+rng = np.random.default_rng(0)
+corpus = rng.normal(size=({N}, {d})).astype(np.float32)
+q = corpus[:32] + 0.01 * rng.normal(size=(32, {d})).astype(np.float32)
+dpq = DistributedPQ(mesh, metric='cosine', m=8).load(corpus)
+ids = np.asarray(dpq.query(q, k=10)[1])
+ref = np.asarray(VectorDB('pq', metric='cosine', refine=0)
+                 .load(corpus).query(q, k=10, bucketize=False)[1])
+overlap = float(np.mean([len(set(ids[i]) & set(ref[i])) / 10
+                         for i in range(32)]))
+print(json.dumps({{
+    'shards': {shards}, 'N': {N}, 'd': {d},
+    'per_device_bytes': dpq.per_device_bytes(),
+    'f32_corpus_bytes': int(corpus.nbytes),
+    'frac_of_replicated_f32': dpq.per_device_bytes() / corpus.nbytes,
+    'overlap_vs_single_host_pq': overlap}}))
+"""
+
+
+def distributed_pq_memory(shards: int = 4, N: int = 4096, d: int = 64):
+    """Per-device resident bytes of DistributedPQ vs the replicated f32
+    corpus, on a forced {shards}-device host mesh (own process: jax pins the
+    device count at first init)."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={shards}",
+               PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _DIST_PQ_SNIPPET.format(shards=shards, N=N, d=d)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def attention_scaling(sizes=(256, 512, 1024)):
     from repro.models.attention import _chunked_attention, _dense_attention
     rows = []
-    for S in (256, 512, 1024):
+    for S in sizes:
         q = jax.random.normal(jax.random.PRNGKey(0), (1, S, 2, 2, 64))
         k = jax.random.normal(jax.random.PRNGKey(1), (1, S, 2, 64))
         v = jax.random.normal(jax.random.PRNGKey(2), (1, S, 2, 64))
@@ -83,18 +207,42 @@ def attention_scaling():
     return rows
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, json_path: str | None = None):
+    results = {}
     print("name,key,value")
-    for r in encoder_throughput():
+    results["encoder"] = encoder_throughput()
+    for r in results["encoder"]:
         print(f"throughput,encoder_b{r['batch']}_tok_per_s,{r['tokens_per_s']:.1f}")
     s = insert_split(300 if quick else 1000)
+    results["insert_split"] = s
     print(f"throughput,insert_embed_s,{s['embed_s']:.3f}")
     print(f"throughput,insert_index_s,{s['index_s']:.3f}")
     print(f"throughput,insert_embed_frac,{s['embed_frac']:.4f}")
-    for r in attention_scaling():
+    results["attention"] = attention_scaling((256, 512) if quick else
+                                             (256, 512, 1024))
+    for r in results["attention"]:
         print(f"throughput,attn_s{r['seq']}_dense_s,{r['dense_s']:.4f}")
         print(f"throughput,attn_s{r['seq']}_chunked_s,{r['chunked_s']:.4f}")
+    results["pq_adc"] = pq_adc_paths(
+        N=2000 if quick else 10_000, n_queries=64 if quick else 256)
+    print("name,path,N,qps,recall_at_10")
+    for r in results["pq_adc"]:
+        print(f"pq_adc,{r['path']},{r['N']},{r['qps']:.1f},"
+              f"{r['recall_at_10']:.4f}")
+    results["distributed_pq"] = distributed_pq_memory(
+        shards=4, N=2048 if quick else 4096)
+    dp = results["distributed_pq"]
+    print(f"distributed_pq,per_device_bytes,{dp['per_device_bytes']}")
+    print(f"distributed_pq,frac_of_replicated_f32,"
+          f"{dp['frac_of_replicated_f32']:.4f}")
+    print(f"distributed_pq,overlap_vs_single_host_pq,"
+          f"{dp['overlap_vs_single_host_pq']:.4f}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
 
 
 if __name__ == "__main__":
-    main()
+    main(json_path=sys.argv[sys.argv.index("--json") + 1]
+         if "--json" in sys.argv else None)

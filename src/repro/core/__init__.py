@@ -9,7 +9,8 @@ Engines (all load/query, per the paper's Rust trait):
   pq    — product-quantized ADC scan, m bytes/row (beyond paper)
   ivf_pq — IVF coarse quantizer over PQ residuals + exact re-rank (beyond paper)
 """
-from repro.core.db import ENGINES, DistributedVectorDB, VectorDB, register_engine
+from repro.core.db import (ENGINES, PLAN_BUCKETS, DistributedPQ,
+                           DistributedVectorDB, VectorDB, register_engine)
 from repro.core.distances import METRICS, pairwise_scores, l2_normalize
 from repro.core.flat import FlatIndex, flat_search
 from repro.core.graph import GraphIndex, beam_search, build_knn_graph
@@ -20,7 +21,8 @@ from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, ivf_pq_search,
 from repro.core.quant import Int8FlatIndex, int8_search, quantize_rows
 
 __all__ = [
-    "ENGINES", "METRICS", "VectorDB", "DistributedVectorDB", "register_engine",
+    "ENGINES", "METRICS", "PLAN_BUCKETS", "VectorDB", "DistributedPQ",
+    "DistributedVectorDB", "register_engine",
     "FlatIndex", "IVFIndex", "GraphIndex", "LSHIndex", "Int8FlatIndex",
     "PQIndex", "IVFPQIndex",
     "flat_search", "ivf_search", "beam_search", "lsh_search", "int8_search",

@@ -7,7 +7,19 @@
 Mirrors the paper's Rust Trait interface (load + query per engine) with a
 registry so new engines compose in. Under a mesh, ``DistributedVectorDB``
 shards corpus rows across every device and runs the SPMD merge program in
-``repro.core.distributed``.
+``repro.core.distributed``; ``DistributedPQ`` is its compressed twin —
+uint8 PQ codes sharded, LUTs replicated, 8-32x less HBM per device.
+
+Query plans: every engine's search is a jitted program whose executable is
+keyed on (batch shape, k, dtype), so a naive front end retraces for every
+distinct caller batch size. ``VectorDB.query`` therefore canonicalizes the
+batch to a fixed ladder of bucket sizes (``PLAN_BUCKETS``, shared with
+serve.QueryEngine) before dispatching, and keeps a plan ledger: a miss is
+the first use of a (engine, bucket, k, dtype) plan by THIS VectorDB (the
+process-wide jit cache may already hold the executable if another instance
+compiled the same shapes), every later call at the same key is a hit that
+reuses the cached executable. ``plan_stats`` feeds
+QueryEngine.latency_stats.
 """
 from __future__ import annotations
 
@@ -24,7 +36,8 @@ from repro.core.flat import FlatIndex
 from repro.core.graph import GraphIndex
 from repro.core.ivf import IVFIndex
 from repro.core.lsh import LSHIndex
-from repro.core.pq import IVFPQIndex, PQIndex
+from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, pq_encode,
+                           train_pq)
 from repro.core.quant import Int8FlatIndex
 
 ENGINES: Dict[str, Type] = {
@@ -42,6 +55,11 @@ def register_engine(name: str, cls: Type) -> None:
     ENGINES[name] = cls
 
 
+# jit-plan bucket ladder: batches pad up to the next bucket so one compiled
+# executable serves every batch size below it (serve.QueryEngine aliases this)
+PLAN_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+
+
 class VectorDB:
     """Single-host front end over the engine registry."""
 
@@ -54,6 +72,9 @@ class VectorDB:
         self.index = ENGINES[engine](metric=metric, **engine_kwargs)
         self.n = 0
         self._texts = None
+        self.plan_buckets = PLAN_BUCKETS
+        self._plans = set()
+        self.plan_stats = {"hits": 0, "misses": 0}
 
     # ----------------------------------------------------------- load
     def load(self, vectors) -> "VectorDB":
@@ -72,11 +93,41 @@ class VectorDB:
         return self.load(jnp.concatenate(embs, axis=0))
 
     # ----------------------------------------------------------- query
-    def query(self, q, k: int = 10):
-        """q: (d,) or (Q, d) -> (scores (Q, k) f32, ids (Q, k) int32)."""
+    def _bucket(self, n: int) -> int:
+        for b in self.plan_buckets:
+            if n <= b:
+                return b
+        top = self.plan_buckets[-1]  # bulk path: next multiple of the cap
+        return -(-n // top) * top
+
+    def query(self, q, k: int = 10, *, bucketize: bool = True):
+        """q: (d,) or (Q, d) -> (scores (Q, k) f32, ids (Q, k) int32).
+
+        ``bucketize`` pads Q up to the plan-bucket ladder so the engine's
+        jitted search compiles once per (bucket, k, dtype) plan instead of
+        once per caller batch size; rows are independent in every engine, so
+        the padded rows (repeats of the last query) cannot change the first
+        Q results, which are sliced back out lazily (no host sync).
+        """
         if self.n == 0:
             raise RuntimeError("query before load")
-        return self.index.query(q, k=min(k, self.n))
+        q = jnp.atleast_2d(jnp.asarray(q))
+        kk = min(k, self.n)
+        if not bucketize:
+            return self.index.query(q, k=kk)
+        Q = q.shape[0]
+        bucket = self._bucket(Q)
+        key = (self.engine_name, bucket, kk, str(q.dtype))
+        if key in self._plans:
+            self.plan_stats["hits"] += 1
+        else:
+            self.plan_stats["misses"] += 1
+            self._plans.add(key)
+        if bucket > Q:
+            pad = jnp.broadcast_to(q[-1:], (bucket - Q,) + q.shape[1:])
+            q = jnp.concatenate([q, pad])
+        scores, ids = self.index.query(q, k=kk)
+        return scores[:Q], ids[:Q]
 
     def query_texts(self, texts, encoder: Callable, k: int = 10):
         q = jnp.asarray(encoder(list(texts)))
@@ -147,3 +198,73 @@ class DistributedVectorDB:
         return dist.sharded_flat_search(
             self.corpus, qq, mesh=self.mesh, k=min(k, self.n), metric=metric,
             axes=self.axes, valid=self.valid, tile=self.tile)
+
+
+class DistributedPQ:
+    """PQ serving under the mesh: uint8 codes row-sharded, LUTs replicated.
+
+    ``DistributedVectorDB`` keeps an f32 corpus shard per device (N*d*4/S
+    bytes); at MS MARCO scale that — not compute — caps corpus size. This
+    engine shards the PQ *codes* instead (N*m/S bytes, 8-32x less at the
+    default geometries) and replicates only the codebooks and the per-query
+    (Q, m, ksub) score tables, reusing the exact local-top-k + all-gather
+    merge from the flat path. Each shard's local scan goes through the
+    fused ADC dispatch, so on TPU the Pallas kernel serves every shard.
+    """
+
+    def __init__(self, mesh: Mesh, metric: str = "cosine", m: int = 8,
+                 ksub: int = 256, kmeans_iters: int = 10, seed: int = 0,
+                 axes=None, use_kernel=None, lut_dtype: str = "float32"):
+        assert metric in D.METRICS
+        self.mesh = mesh
+        self.metric = metric
+        self.m = m
+        self.ksub = ksub
+        self.kmeans_iters = kmeans_iters
+        self.seed = seed
+        self.axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        self.use_kernel = use_kernel
+        self.lut_dtype = lut_dtype
+        self.codebooks = self.codes = self.valid = None
+        self.n = 0
+        self.d = 0
+        self.n_shards = 1
+        for a in self.axes:
+            self.n_shards *= mesh.shape[a]
+
+    def load(self, vectors) -> "DistributedPQ":
+        x = jnp.asarray(vectors, jnp.float32)
+        self.n, self.d = x.shape
+        corpus, _sq = D.preprocess_corpus(x, self.metric)
+        self.codebooks = train_pq(jax.random.PRNGKey(self.seed), corpus,
+                                  m=self.m, ksub=self.ksub,
+                                  iters=self.kmeans_iters)
+        codes = pq_encode(self.codebooks, corpus)
+        codes, valid = dist.pad_to_shards(codes, self.n_shards)
+        self.codes = jax.device_put(codes,
+                                    dist.corpus_sharding(self.mesh, self.axes))
+        self.valid = jax.device_put(valid,
+                                    NamedSharding(self.mesh, P(self.axes)))
+        return self
+
+    def query(self, q, k: int = 10):
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+        metric = self.metric
+        if metric == "cosine":
+            q = D.l2_normalize(q)
+            metric = "dot"
+        luts = adc_tables(self.codebooks, q, metric=metric)
+        return dist.sharded_pq_search(
+            self.codes, luts, mesh=self.mesh, k=min(k, self.n),
+            axes=self.axes, valid=self.valid, use_kernel=self.use_kernel,
+            lut_dtype=self.lut_dtype)
+
+    # ------------------------------------------------------------- memory
+    def per_device_bytes(self) -> int:
+        """Resident index bytes per device: the local code shard + the
+        replicated codebooks (the acceptance metric vs an f32 shard)."""
+        return int(self.codes.size // self.n_shards
+                   + self.codebooks.size * 4)
+
+    def memory_bytes(self) -> int:
+        return int(self.codes.size + self.codebooks.size * 4 * self.n_shards)

@@ -23,33 +23,80 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import distances as D
 from repro.core.flat import flat_search
 
 
 def build_knn_graph(corpus, *, degree: int, metric: str = "cosine",
-                    tile: int = 4096, chunk: int = 1024):
-    """Offline exact kNN graph build: (N, d) -> neighbors (N, degree) int32.
+                    tile: int = 4096, chunk: int = 1024,
+                    max_candidates: int | None = None, seed: int = 0):
+    """Offline kNN graph build: (N, d) -> neighbors (N, degree) int32.
 
     Runs the flat engine corpus-vs-corpus in query chunks (O(chunk * N)
     peak memory); drops self-edges by taking degree+1 then masking.
+
+    The exact build is O(N^2) scores — fine to ~10k rows, a wall above.
+    ``max_candidates`` caps it: when N exceeds the cap, each chunk searches
+    a fresh random subsample of ``max_candidates`` rows instead of the full
+    corpus (O(N * cap) total), and the result is symmetrized — a quarter of
+    each row's slots are rewritten with reverse edges so every row keeps
+    in-degree >= 1 (candidate-only edges would make non-candidates
+    unreachable by the beam). Edges are approximate (a cap/N sample per
+    row); recall degrades gracefully, see tests.
     """
     N = corpus.shape[0]
-    deg = min(degree, N - 1)
+    subsample = max_candidates is not None and N > max_candidates
+    deg = min(degree, (max_candidates if subsample else N) - 1)
+    rng = np.random.default_rng(seed) if subsample else None
     rows = []
     for start in range(0, N, chunk):
         qc = corpus[start:start + chunk]
-        _, ids = flat_search(corpus, qc, metric=metric, k=deg + 1, tile=tile)
+        if subsample:
+            cand_ids = jnp.asarray(
+                np.sort(rng.choice(N, size=max_candidates, replace=False)),
+                jnp.int32)
+            cand = jnp.take(corpus, cand_ids, axis=0)
+            _, local = flat_search(cand, qc, metric=metric, k=deg + 1, tile=tile)
+            ids = jnp.take(cand_ids, local)  # back to global row ids
+        else:
+            _, ids = flat_search(corpus, qc, metric=metric, k=deg + 1, tile=tile)
         own = jnp.arange(start, start + qc.shape[0])[:, None]
         not_self = ids != own
         # stable-partition each row: non-self ids first, keep `deg`
         order = jnp.argsort(~not_self, axis=-1, stable=True)
         rows.append(jnp.take_along_axis(ids, order, axis=-1)[:, :deg])
     nbrs = jnp.concatenate(rows, axis=0)
-    if deg < degree:  # tiny corpus: pad with self-loops
+    if subsample:
+        nbrs = jnp.asarray(_symmetrize(np.asarray(nbrs), N))
+    if deg < degree:  # tiny corpus / tight cap: pad with edge-repeats
         nbrs = jnp.pad(nbrs, ((0, 0), (0, degree - deg)), mode="edge")
     return nbrs.astype(jnp.int32)
+
+
+def _symmetrize(nbrs: np.ndarray, N: int, frac: int = 4) -> np.ndarray:
+    """Rewrite each row's last deg/frac slots with reverse edges (v gets
+    u for edges u->v), vectorized: sort edges by target, rank within group,
+    keep the first few reversals per target. Most rows gain in-edges they
+    could never get from candidate-only search (only candidates are edge
+    targets), which is what makes the subsampled graph navigable — beam
+    self-retrieval goes from ~0.45 to ~1.0 at cap=N/4 in the tests."""
+    deg = nbrs.shape[1]
+    r = max(1, deg // frac)
+    us = np.repeat(np.arange(N), deg)
+    vs = nbrs.reshape(-1)
+    order = np.argsort(vs, kind="stable")
+    vs_s, us_s = vs[order], us[order]
+    starts = np.searchsorted(vs_s, np.arange(N))
+    counts = np.diff(np.append(starts, vs_s.shape[0]))
+    rank = np.arange(vs_s.shape[0]) - np.repeat(starts, counts)
+    keep = rank < r
+    out = nbrs.copy()
+    # every write puts u into row v for an edge u->v with u != v (the build
+    # already dropped self-edges), so no self-edge can appear here
+    out[vs_s[keep], deg - r + rank[keep]] = us_s[keep]
+    return out
 
 
 def _dedup_topk(ids, scores, k: int):
@@ -122,7 +169,7 @@ class GraphIndex:
 
     def __init__(self, metric: str = "cosine", degree: int = 16, beam: int = 32,
                  n_hops: int = 8, entry_stride: int = 64, n_entry: int = 4,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, max_build_candidates: int | None = 16384):
         assert metric in D.METRICS
         self.metric = metric
         self.degree = degree
@@ -131,6 +178,9 @@ class GraphIndex:
         self.entry_stride = entry_stride
         self.n_entry = n_entry
         self.dtype = jnp.dtype(dtype)
+        # above this N the O(N^2) exact build switches to per-chunk candidate
+        # subsampling (None = always exact)
+        self.max_build_candidates = max_build_candidates
         self.corpus = self.neighbors = self.corpus_sq = None
 
     def load(self, vectors):
@@ -139,7 +189,8 @@ class GraphIndex:
         self.corpus_sq = sq
         self.neighbors = build_knn_graph(
             corpus, degree=self.degree,
-            metric="dot" if self.metric == "cosine" else self.metric)
+            metric="dot" if self.metric == "cosine" else self.metric,
+            max_candidates=self.max_build_candidates)
         self.corpus = corpus.astype(self.dtype)
         return self
 

@@ -9,10 +9,13 @@ centroids, and stores one byte per subspace: d*4 bytes -> m bytes per row
 Queries stay full precision (asymmetric distance computation, ADC): per
 query, one (m, ksub) lookup table of subspace partial scores is built
 against the codebooks, and a corpus row's score is m table gathers + a sum —
-no decode, no f32 corpus touch. The table scoring twin lives in
-``repro.kernels.pq_adc`` as a fused Pallas kernel (LUT-resident VMEM,
-streaming code tiles); this module is the jnp path the engines run
-everywhere, mirroring flat.py vs kernels/topk_distance.py.
+no decode, no f32 corpus touch. Scoring dispatches through
+``repro.kernels.ops.adc_topk``: the fused Pallas kernel (LUT-resident VMEM,
+streaming code tiles) on TPU, a fused jnp twin on CPU/GPU — both engines
+expose the override as ``use_kernel`` and table precision as ``lut_dtype``
+('bfloat16' halves LUT bytes at a bounded score error; see kernels/pq_adc).
+``pq_topk`` below is the original scanned jnp reference, kept as the
+tiling-invariance oracle and the benchmark baseline.
 
 Two engines compose out of it:
   * ``PQIndex``       — flat ADC scan over all N codes.
@@ -33,6 +36,7 @@ import numpy as np
 
 from repro.core import distances as D
 from repro.core.ivf import assign_clusters, build_buckets, kmeans
+from repro.kernels import ops as kops
 
 
 def subspace_split(x, m: int):
@@ -150,6 +154,7 @@ def pq_topk(luts, codes, *, k: int, tile: int = 4096, valid=None):
     return s, i
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "k"))
 def _exact_rerank(corpus, corpus_sq, cand, q, *, metric: str, k: int):
     """Re-score the top candidates exactly and re-sort. cand: (Q, R) ids
     (-1 = pad). Returns (scores (Q, k), ids (Q, k))."""
@@ -179,27 +184,38 @@ def _pad_to_k(s, ids, k: int):
     return s, ids
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "k", "refine", "tile"))
 def pq_search(codebooks, codes, corpus, q, *, metric: str, k: int,
-              refine: int = 0, tile: int = 4096, corpus_sq=None):
+              refine: int = 0, corpus_sq=None,
+              use_kernel=None, lut_dtype: str = "float32"):
     """Flat ADC search (+ optional exact re-rank of the top ``refine``).
 
-    corpus is only touched (and may be None) when refine > 0.
+    Deliberately NOT one monolithic jit: an orchestrator over jitted stages
+    (LUT build -> ops.adc_topk dispatch -> exact re-rank). The stage
+    boundary is what lets the dispatcher materialize a bf16-rounded LUT
+    once before the scan — fused into a single program, XLA re-rounds every
+    gathered element (see kernels.ops._round_lut_bf16). Scoring goes
+    through the backend dispatcher (Pallas kernel on TPU, fused jnp twin
+    elsewhere; ``use_kernel``/``lut_dtype`` override). corpus is only
+    touched (and may be None) when refine > 0.
     """
     N = codes.shape[0]
     luts = adc_tables(codebooks, q, metric=metric)
     if not refine:
-        return pq_topk(luts, codes, k=k)
+        return kops.adc_topk(codes, luts, k=k, use_kernel=use_kernel,
+                             lut_dtype=lut_dtype)
     R = min(max(refine, k), N)
-    _, cand = pq_topk(luts, codes, k=R)
+    _, cand = kops.adc_topk(codes, luts, k=R, use_kernel=use_kernel,
+                            lut_dtype=lut_dtype)
     return _exact_rerank(corpus, corpus_sq, cand, q, metric=metric, k=k)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("metric", "k", "nprobe", "cap", "refine"))
+                   static_argnames=("metric", "k", "nprobe", "cap", "refine",
+                                    "use_kernel", "lut_dtype"))
 def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
                   metric: str, k: int, nprobe: int, cap: int, refine: int = 0,
-                  corpus_sq=None):
+                  corpus_sq=None, assign=None, use_kernel=None,
+                  lut_dtype: str = "float32"):
     """IVF-ADC: probe nprobe coarse buckets, ADC-score their residual codes.
 
     codes are PQ codes of (x - centroid[assign]); scoring must therefore use
@@ -208,24 +224,60 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
            per-probe scalar offset q.centroid_p.
       l2:  |q - x|^2 = |(q - centroid_p) - residual|^2 -> per-(query, probe)
            LUTs on t = q - centroid_p.
+
+    Backend dispatch: when ops resolves to the fused kernel (TPU or
+    ``use_kernel=True``) and the metric is dot, the coarse offset folds into
+    the flat pq_adc scan as an (m+1)-th subspace — table q.centroids, codes
+    ``assign`` — and ALL residual codes stream through the kernel at memory
+    bandwidth. Bucket pruning then buys nothing (the kernel never gathers),
+    so nprobe only shapes the jnp path; kernel-path candidates are a
+    superset of any nprobe's, recall can only go up. l2's per-(query, probe)
+    LUT geometry cannot flatten to shared codes and always takes the jnp
+    path. ``lut_dtype`` applies to either backend's table gathers/matmul.
     Returns (scores (Q, k), ids (Q, k)); pad slots are -inf / -1.
     """
     Q = q.shape[0]
     q = jnp.asarray(q, jnp.float32)
+    m = codebooks.shape[0]
+    N = codes.shape[0]
+    kernel = (kops.resolve_adc_backend(use_kernel) == "kernel"
+              and metric == "dot" and assign is not None)
+
+    if kernel:
+        ksub = codebooks.shape[1]
+        C = centroids.shape[0]
+        qc = jnp.einsum("qd,cd->qc", q, centroids.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)  # (Q, C)
+        width = max(ksub, C)
+        luts = adc_tables(codebooks, q, metric="dot")  # (Q, m, ksub)
+        luts = jnp.pad(luts, ((0, 0), (0, 0), (0, width - ksub)))
+        coarse = jnp.pad(qc, ((0, 0), (0, width - C)))[:, None, :]
+        luts_aug = jnp.concatenate([luts, coarse], axis=1)  # (Q, m+1, width)
+        codes_aug = jnp.concatenate(
+            [codes.astype(jnp.int32), assign.astype(jnp.int32)[:, None]],
+            axis=1)  # (N, m+1)
+        R = min(max(refine, k), N)
+        s, ids = kops.adc_topk(codes_aug, luts_aug, k=R, use_kernel=True,
+                               lut_dtype=lut_dtype)
+        if refine:
+            return _exact_rerank(corpus, corpus_sq, ids, q, metric=metric, k=k)
+        return _pad_to_k(s[:, :k], ids[:, :k], k)
+
+    dt = jnp.dtype(lut_dtype)
     c_scores = D.pairwise_scores(q, centroids, metric if metric == "dot" else "l2")
     _, probe = jax.lax.top_k(c_scores, nprobe)  # (Q, nprobe)
     cand = jnp.take(buckets, probe, axis=0)  # (Q, nprobe, cap)
     valid = cand >= 0
     safe = jnp.where(valid, cand, 0)
     bucket_codes = jnp.take(codes.astype(jnp.int32), safe, axis=0)  # (Q, nprobe, cap, m)
-    m = codebooks.shape[0]
 
     if metric == "dot":
-        luts = adc_tables(codebooks, q, metric="dot")  # (Q, m, ksub)
+        luts = adc_tables(codebooks, q, metric="dot").astype(dt)  # (Q, m, ksub)
         flat_codes = bucket_codes.reshape(Q, nprobe * cap, m)
         s = jnp.zeros((Q, nprobe * cap), jnp.float32)
         for j in range(m):
-            s = s + jnp.take_along_axis(luts[:, j, :], flat_codes[..., j], axis=1)
+            s = s + jnp.take_along_axis(luts[:, j, :], flat_codes[..., j],
+                                        axis=1).astype(jnp.float32)
         s = s.reshape(Q, nprobe, cap)
         offset = jnp.take_along_axis(
             jnp.einsum("qd,cd->qc", q, centroids.astype(jnp.float32),
@@ -234,11 +286,11 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
     else:
         t = q[:, None, :] - jnp.take(centroids, probe, axis=0)  # (Q, nprobe, d)
         luts = adc_tables(codebooks, t.reshape(Q * nprobe, -1), metric="l2")
-        luts = luts.reshape(Q, nprobe, m, -1)  # (Q, nprobe, m, ksub)
+        luts = luts.reshape(Q, nprobe, m, -1).astype(dt)  # (Q, nprobe, m, ksub)
         s = jnp.zeros((Q, nprobe, cap), jnp.float32)
         for j in range(m):
             s = s + jnp.take_along_axis(luts[:, :, j, :], bucket_codes[..., j],
-                                        axis=2)
+                                        axis=2).astype(jnp.float32)
 
     s = jnp.where(valid, s, -jnp.inf).reshape(Q, nprobe * cap)
     cand = cand.reshape(Q, nprobe * cap)
@@ -268,14 +320,18 @@ class PQIndex:
     entirely — pure compressed-domain search)."""
 
     def __init__(self, metric: str = "cosine", m: int = 8, ksub: int = 256,
-                 kmeans_iters: int = 10, refine: int = 32, seed: int = 0):
+                 kmeans_iters: int = 10, refine: int = 32, seed: int = 0,
+                 use_kernel=None, lut_dtype: str = "float32"):
         assert metric in D.METRICS
+        assert lut_dtype in kops.ADC_LUT_DTYPES, lut_dtype
         self.metric = metric
         self.m = m
         self.ksub = ksub
         self.kmeans_iters = kmeans_iters
         self.refine = refine
         self.seed = seed
+        self.use_kernel = use_kernel  # None = auto (Pallas on TPU, jnp twin off)
+        self.lut_dtype = lut_dtype
         self.codebooks = self.codes = self.corpus = self.corpus_sq = None
         self.d = 0
 
@@ -303,7 +359,8 @@ class PQIndex:
             metric = "dot"  # corpus rows were normalized at load time
         return pq_search(self.codebooks, self.codes, self.corpus, q,
                          metric=metric, k=min(k, self.size),
-                         refine=self.refine, corpus_sq=self.corpus_sq)
+                         refine=self.refine, corpus_sq=self.corpus_sq,
+                         use_kernel=self.use_kernel, lut_dtype=self.lut_dtype)
 
     # ------------------------------------------------------- persistence
     def state_dict(self):
@@ -347,8 +404,10 @@ class IVFPQIndex:
 
     def __init__(self, metric: str = "cosine", n_clusters: int = 0,
                  nprobe: int = 8, m: int = 8, ksub: int = 256,
-                 kmeans_iters: int = 10, refine: int = 32, seed: int = 0):
+                 kmeans_iters: int = 10, refine: int = 32, seed: int = 0,
+                 use_kernel=None, lut_dtype: str = "float32"):
         assert metric in D.METRICS
+        assert lut_dtype in kops.ADC_LUT_DTYPES, lut_dtype
         self.metric = metric
         self.n_clusters = n_clusters  # 0 => sqrt(N) at load time
         self.nprobe = nprobe
@@ -357,7 +416,10 @@ class IVFPQIndex:
         self.kmeans_iters = kmeans_iters
         self.refine = refine
         self.seed = seed
+        self.use_kernel = use_kernel  # None = auto (Pallas on TPU, jnp twin off)
+        self.lut_dtype = lut_dtype
         self.codebooks = self.codes = self.centroids = self.buckets = None
+        self.assign = None
         self.corpus = self.corpus_sq = None
         self.cap = 0
         self.d = 0
@@ -386,6 +448,7 @@ class IVFPQIndex:
         self.codes = pq_encode(self.codebooks, residuals)
         self.centroids = cent
         self.buckets = jnp.asarray(buckets)
+        self.assign = jnp.asarray(assign, jnp.int32)
         self.cap = cap
         self.corpus = corpus if self.refine else None
         return self
@@ -400,7 +463,9 @@ class IVFPQIndex:
         return ivf_pq_search(self.codebooks, self.codes, self.centroids,
                              self.buckets, self.corpus, q, metric=metric,
                              k=min(k, self.size), nprobe=nprobe, cap=self.cap,
-                             refine=self.refine, corpus_sq=self.corpus_sq)
+                             refine=self.refine, corpus_sq=self.corpus_sq,
+                             assign=self.assign, use_kernel=self.use_kernel,
+                             lut_dtype=self.lut_dtype)
 
     # ------------------------------------------------------- persistence
     def state_dict(self):
@@ -422,6 +487,14 @@ class IVFPQIndex:
         self.centroids = jnp.asarray(state["centroids"], jnp.float32)
         self.buckets = jnp.asarray(state["buckets"], jnp.int32)
         self.d = int(state["d"])
+        # assign is derivable from the bucket table (buckets[c] lists the rows
+        # of cluster c), so snapshots stay at the PR-1 format
+        b = np.asarray(self.buckets)
+        assign = np.zeros(self.codes.shape[0], np.int32)
+        rows = np.broadcast_to(np.arange(b.shape[0], dtype=np.int32)[:, None],
+                               b.shape)
+        assign[b[b >= 0]] = rows[b >= 0]
+        self.assign = jnp.asarray(assign)
         self.cap = int(self.buckets.shape[1])
         self.corpus = (jnp.asarray(state["corpus"], jnp.float32)
                        if "corpus" in state else None)

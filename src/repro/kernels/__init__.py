@@ -7,8 +7,13 @@ hamming         — LSH XOR+popcount ranking
 
 Each <name>.py holds the pl.pallas_call + BlockSpec tiling; ops.py is the
 jit'd public wrapper (padding, layout, backend auto-select); ref.py the
-pure-jnp oracle the tests sweep against.
+pure-jnp oracle the tests sweep against. ops.adc_topk is the backend-aware
+ADC dispatcher (TPU -> pq_adc kernel, CPU/GPU -> fused jnp twin) that the
+PQ engines query through.
 """
-from repro.kernels.ops import flash_attention, hamming, pq_adc, topk_distance
+from repro.kernels.ops import (adc_topk, adc_topk_jnp, flash_attention,
+                               hamming, pq_adc, resolve_adc_backend,
+                               topk_distance)
 
-__all__ = ["flash_attention", "hamming", "pq_adc", "topk_distance"]
+__all__ = ["adc_topk", "adc_topk_jnp", "flash_attention", "hamming", "pq_adc",
+           "resolve_adc_backend", "topk_distance"]

@@ -4,8 +4,17 @@ Handle padding/alignment (MXU wants lane multiples of 128), GQA head layout,
 and backend selection: ``interpret=None`` auto-resolves to True off-TPU so
 the same call sites run everywhere (interpret executes the kernel body in
 Python on CPU; on TPU it lowers to Mosaic).
+
+This module is also the backend-aware dispatcher for the PQ ADC hot path
+(``adc_topk``): on TPU the fused Pallas kernel serves real queries; on
+CPU/GPU a fused jnp twin (``adc_topk_jnp``) runs instead — interpret-mode
+Pallas executes the kernel body block-by-block in Python and is a debugging
+tool, not a serving path. Engines expose the choice as a ``use_kernel``
+kwarg (None = auto by backend) and LUT precision as ``lut_dtype``.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -16,11 +25,25 @@ from repro.kernels import hamming as _hm
 from repro.kernels import pq_adc as _pq
 from repro.kernels import topk_distance as _tk
 
+ADC_LUT_DTYPES = ("float32", "bfloat16")
+
 
 def _auto_interpret(interpret):
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"
+
+
+def resolve_adc_backend(use_kernel=None) -> str:
+    """'kernel' (fused Pallas pq_adc) or 'jnp' (fused gather twin).
+
+    None auto-selects by backend: the Pallas kernel on TPU, the jnp twin
+    everywhere else. ``use_kernel=True`` forces the kernel (interpret mode
+    off-TPU — parity testing, not speed); False forces the jnp twin.
+    """
+    if use_kernel is None:
+        return "kernel" if jax.default_backend() == "tpu" else "jnp"
+    return "kernel" if use_kernel else "jnp"
 
 
 def _pad_axis(x, axis: int, mult: int):
@@ -89,11 +112,12 @@ def topk_distance(corpus, q, *, k: int, metric: str = "dot", corpus_sq=None,
 
 
 def pq_adc(codes, luts, *, k: int, valid=None, blk_n: int = 256,
-           interpret=None):
+           interpret=None, lut_dtype: str = "float32"):
     """Fused PQ ADC top-k. codes: (N, m); luts: (Q, m, ksub).
 
     Pads N to the tile size; pad rows (and rows where ``valid`` is False) are
-    knocked out inside the kernel via the additive score bias.
+    knocked out inside the kernel via the additive score bias. ``lut_dtype``
+    selects the in-kernel table precision (f32 or bf16).
     """
     interpret = _auto_interpret(interpret)
     N = codes.shape[0]
@@ -106,7 +130,116 @@ def pq_adc(codes, luts, *, k: int, valid=None, blk_n: int = 256,
         keep = keep & jnp.pad(valid, (0, Np - valid.shape[0]))
     bias = jnp.where(keep, 0.0, -1e30)
     return _pq.pq_adc(codes, luts, k=k, bias=bias, blk_n=blk_n,
-                      interpret=interpret)
+                      interpret=interpret, lut_dtype=lut_dtype)
+
+
+@jax.jit
+def _round_lut_bf16(luts):
+    """bf16-round LUT values, f32 storage (bit-identical to
+    astype(bf16).astype(f32)). Dispatched as its OWN executable from
+    adc_topk so the rounded table materializes once — fused into the
+    scoring program, XLA CPU re-rounds every gathered element instead
+    (~8 converts per scored row, a measured ~15% tax)."""
+    return jax.lax.reduce_precision(luts, exponent_bits=8, mantissa_bits=7)
+
+
+def _twolevel_topk(scores, k: int, group: int = 16):
+    """Exact top-k via group-max prefilter: any row holding a global top-k
+    score also holds its group's max, and that max outranks every max of a
+    group with no top-k member — so the true top-k lives inside the top-k
+    groups-by-max. One vectorized max pass + a top-k over N/group + a top-k
+    over k*group beats one top-k over N (the partial sort dominates).
+
+    Ties across groups can swap equal-scored ids vs lax.top_k; scores are
+    continuous f32 in every caller.
+    """
+    Q, N = scores.shape
+    pad = (-N) % group
+    if pad:
+        scores = jnp.pad(scores, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    n_groups = scores.shape[1] // group
+    gmax = scores.reshape(Q, n_groups, group).max(-1)
+    kg = min(k, n_groups)
+    _, gids = jax.lax.top_k(gmax, kg)
+    members = (gids[:, :, None] * group
+               + jnp.arange(group)[None, None, :]).reshape(Q, kg * group)
+    cand = jnp.take_along_axis(scores, members, axis=1)
+    s, pos = jax.lax.top_k(cand, k)
+    return s, jnp.take_along_axis(members, pos, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile", "lut_dtype"))
+def adc_topk_jnp(codes, luts, *, k: int, valid=None, tile: int = 32768,
+                 lut_dtype: str = "float32"):
+    """Fused jnp twin of the pq_adc kernel: m LUT gathers, f32 accumulate,
+    one exact two-level top-k per (large) row tile, merged pairwise.
+
+    Unlike the PR-1 ``pq_topk`` scan (lax.scan over 4k-row tiles), the whole
+    gather+sum+select per tile is one fused XLA program over row tiles big
+    enough that the selection epilogue is noise, and the selection itself is
+    the group-max two-level scheme — together ~2x over the scan on CPU.
+    ``lut_dtype="bfloat16"`` rounds the table to bf16 (the exact values the
+    TPU kernel contracts, so the recall guard tests the real thing) but
+    keeps f32 *storage* for the gathers off-TPU — XLA CPU gathers 32-bit
+    lanes faster than 16-bit, so widening is free accuracy-wise. Tiles
+    bound peak score memory at O(Q * tile), mirroring the kernel's VMEM
+    streaming.
+    """
+    N, m = codes.shape
+    Q = luts.shape[0]
+    k = min(k, N)
+    if jnp.dtype(lut_dtype) != jnp.float32:
+        luts = _round_lut_bf16(luts)
+    idx = codes.astype(jnp.int32).T  # (m, N): per-subspace rows contiguous
+    best = None
+    for start in range(0, N, tile):  # static unroll: N // tile + 1 fused blocks
+        stop = min(start + tile, N)
+        total = jnp.take(luts[:, 0, :], idx[0, start:stop], axis=1)
+        for j in range(1, m):
+            total = total + jnp.take(luts[:, j, :], idx[j, start:stop], axis=1)
+        if valid is not None:
+            total = jnp.where(valid[start:stop][None, :], total, -jnp.inf)
+        s, i = _twolevel_topk(total, min(k, stop - start))
+        i = (i + start).astype(jnp.int32)
+        if best is None:
+            best = (s, i)
+        else:
+            cs = jnp.concatenate([best[0], s], axis=-1)
+            ci = jnp.concatenate([best[1], i], axis=-1)
+            s, pos = jax.lax.top_k(cs, k)
+            best = (s, jnp.take_along_axis(ci, pos, axis=-1))
+    s, i = best
+    if s.shape[-1] < k:
+        s = jnp.pad(s, ((0, 0), (0, k - s.shape[-1])), constant_values=-jnp.inf)
+        i = jnp.pad(i, ((0, 0), (0, k - i.shape[-1])), constant_values=-1)
+    return s, i
+
+
+def adc_topk(codes, luts, *, k: int, valid=None, use_kernel=None,
+             lut_dtype: str = "float32", blk_n: int = 256, tile: int = 32768,
+             interpret=None):
+    """Backend-aware PQ ADC top-k dispatch — THE compressed hot-path entry.
+
+    codes: (N, m) uint8/int32; luts: (Q, m, ksub) f32. TPU (or
+    ``use_kernel=True``) routes to the fused Pallas kernel, everything else
+    to the fused jnp twin; both honor ``lut_dtype`` ('float32'/'bfloat16')
+    and a row ``valid`` mask, and return (scores (Q, k) f32, ids (Q, k)
+    int32) with identical semantics.
+
+    When called with concrete (non-traced) arrays, the bf16 rounding runs
+    as its own executable before the scan — see _round_lut_bf16; inside an
+    enclosing jit the rounding inlines into the scan instead (same values,
+    slower on CPU).
+    """
+    assert lut_dtype in ADC_LUT_DTYPES, lut_dtype
+    if resolve_adc_backend(use_kernel) == "kernel":
+        return pq_adc(codes, luts, k=k, valid=valid, blk_n=blk_n,
+                      interpret=interpret, lut_dtype=lut_dtype)
+    if lut_dtype != "float32" and not isinstance(luts, jax.core.Tracer):
+        luts = _round_lut_bf16(luts)  # materialize at the jit boundary
+        lut_dtype = "float32"
+    return adc_topk_jnp(codes, luts, k=k, valid=valid, tile=tile,
+                        lut_dtype=lut_dtype)
 
 
 def hamming(q_codes, c_codes, *, blk_n: int = 1024, interpret=None):

@@ -15,6 +15,15 @@ VMEM scratch exactly like topk_distance.py (same unrolled knockout top-k).
 HBM traffic is codes-read + (Q, k) out — the f32 corpus is never touched,
 which is the entire point of PQ.
 
+Mixed precision (``lut_dtype="bfloat16"``): the resident LUT is stored and
+contracted in bf16 and the one-hot selector is materialized as int8 before
+being widened to the LUT dtype at the MXU — bf16 x bf16 contractions run at
+2x the f32 MXU rate and halve the LUT's VMEM footprint. Accumulation stays
+f32 via ``preferred_element_type``, so the only precision loss is the one
+bf16 rounding of each table entry: |score - score_f32| <= m * 2^-8 *
+max|lut| (each of the m gathered partials carries at most half-ulp bf16
+error, 2^-9 relative). Tests pin this bound against the f32 oracle.
+
 Grid: (N / blk_n,), sequential on TPU. ``bias`` (N,) folds pad-row knockout
 into the score add (built by ops.py).
 """
@@ -40,13 +49,15 @@ def _pq_adc_kernel(c_ref, l_ref, bias_ref, s_out, i_out, bs_ref, bi_ref, *,
         bi_ref[...] = jnp.full_like(bi_ref, -1)
 
     codes = c_ref[...]  # (blk_n, m) int32
-    lut = l_ref[...]    # (Q, m*ksub) f32
+    lut = l_ref[...]    # (Q, m*ksub) f32 or bf16
     m = codes.shape[1]
     # one-hot expansion: sel[n, j, c] = (codes[n, j] == c), collapsed to the
-    # flattened (blk_n, m*ksub) LUT axis — the gather becomes an MXU matmul
+    # flattened (blk_n, m*ksub) LUT axis — the gather becomes an MXU matmul.
+    # int8 is the cheapest VMEM materialization of the selector; it widens to
+    # the LUT dtype at the contraction (bf16 LUTs hit the 2x MXU rate).
     sub = jax.lax.broadcasted_iota(jnp.int32, (blk_n, m, ksub), 2)
-    sel = (codes[:, :, None] == sub).astype(lut.dtype).reshape(blk_n, m * ksub)
-    s = jax.lax.dot_general(lut, sel, (((1,), (1,)), ((), ())),
+    sel = (codes[:, :, None] == sub).astype(jnp.int8).reshape(blk_n, m * ksub)
+    s = jax.lax.dot_general(lut, sel.astype(lut.dtype), (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (Q, blk_n)
     s = s + bias_ref[...][None, :]
     Q = s.shape[0]
@@ -62,14 +73,17 @@ def _pq_adc_kernel(c_ref, l_ref, bias_ref, s_out, i_out, bs_ref, bi_ref, *,
         i_out[...] = bi_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "blk_n", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("k", "blk_n", "interpret", "lut_dtype"))
 def pq_adc(codes, luts, *, k: int, bias=None, blk_n: int = 256,
-           interpret: bool = False):
+           interpret: bool = False, lut_dtype: str = "float32"):
     """codes: (N, m) int32; luts: (Q, m, ksub) f32
     -> (scores (Q, k) f32, ids (Q, k) int32).
 
     score[q, n] = sum_j luts[q, j, codes[n, j]] + bias[n]. N must divide by
     blk_n; ``bias`` carries the pad/invalid-row knockout (ops.py builds it).
+    ``lut_dtype="bfloat16"`` contracts the table in bf16 (f32 accumulate,
+    2x MXU rate; parity bound documented in the module docstring).
     """
     N, m = codes.shape
     Q, m_l, ksub = luts.shape
@@ -79,7 +93,7 @@ def pq_adc(codes, luts, *, k: int, bias=None, blk_n: int = 256,
     n_blocks = N // blk_n
     if bias is None:
         bias = jnp.zeros((N,), jnp.float32)
-    luts_flat = luts.astype(jnp.float32).reshape(Q, m * ksub)
+    luts_flat = luts.astype(jnp.dtype(lut_dtype)).reshape(Q, m * ksub)
 
     kernel = functools.partial(_pq_adc_kernel, blk_n=blk_n, n_blocks=n_blocks,
                                k=k, ksub=ksub)

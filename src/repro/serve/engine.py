@@ -6,9 +6,24 @@ requests until ``max_batch`` or ``max_wait_ms`` (whichever first), pads to a
 fixed set of bucket sizes so jit caches stay warm (one compile per bucket,
 not per batch size), runs encode -> db.query, and scatters results back.
 
-Synchronous-loop implementation (no asyncio): callers enqueue, ``pump()``
-drains. The latency ledger records enqueue->result walltime per request so
-benchmarks report p50/p99.
+Query execution
+---------------
+A pumped micro-batch takes one trip through the compiled query plan:
+
+  1. *bucketize* — the batch pads up to the shared ``BUCKETS`` ladder
+     (= ``repro.core.db.PLAN_BUCKETS``) BEFORE the encoder so both the
+     encoder forward and the DB search hit an already-compiled executable;
+  2. *plan lookup* — ``VectorDB.query`` re-buckets (a no-op here, the sizes
+     align), records a plan-cache hit/miss for the (engine, bucket, k,
+     dtype) key, and dispatches the engine's jitted search — on PQ engines
+     that is the fused ADC path picked by ``repro.kernels.ops.adc_topk``
+     (Pallas kernel on TPU, fused jnp twin elsewhere);
+  3. *one host sync* — scores and ids come back in a single device_get at
+     scatter time; nothing else blocks on the device.
+
+``latency_stats`` reports enqueue->result p50/p99 per request plus the
+DB's plan-cache counters, so a serving run can prove it stopped retracing
+(misses stay flat while hits grow).
 """
 from __future__ import annotations
 
@@ -16,7 +31,10 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
+import jax
 import numpy as np
+
+from repro.core.db import PLAN_BUCKETS
 
 
 @dataclasses.dataclass
@@ -30,7 +48,7 @@ class Request:
 
 
 class QueryEngine:
-    BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+    BUCKETS = PLAN_BUCKETS  # one ladder for encoder pads and DB query plans
 
     def __init__(self, db, *, encoder: Optional[Callable] = None,
                  max_batch: int = 64, max_wait_ms: float = 2.0):
@@ -72,7 +90,7 @@ class QueryEngine:
             q = np.concatenate([q, np.repeat(q[-1:], bucket - n, axis=0)])
         qv = self.encoder(q) if self.encoder is not None else q
         scores, ids = self.db.query(qv, k=k)
-        scores, ids = np.asarray(scores), np.asarray(ids)
+        scores, ids = jax.device_get((scores, ids))  # the batch's one host sync
         t = time.perf_counter()
         for i, r in enumerate(take):
             r.result = (scores[i, : r.k], ids[i, : r.k])
@@ -95,7 +113,12 @@ class QueryEngine:
         if not self.latencies_ms:
             return {}
         a = np.asarray(self.latencies_ms)
-        return {"engine": getattr(self.db, "engine_name", "?"),
-                "p50_ms": float(np.percentile(a, 50)),
-                "p99_ms": float(np.percentile(a, 99)),
-                "mean_ms": float(a.mean()), "n": int(a.size)}
+        stats = {"engine": getattr(self.db, "engine_name", "?"),
+                 "p50_ms": float(np.percentile(a, 50)),
+                 "p99_ms": float(np.percentile(a, 99)),
+                 "mean_ms": float(a.mean()), "n": int(a.size)}
+        plans = getattr(self.db, "plan_stats", None)
+        if plans is not None:  # compiled-plan reuse (misses = first compiles)
+            stats["plan_hits"] = int(plans["hits"])
+            stats["plan_misses"] = int(plans["misses"])
+        return stats

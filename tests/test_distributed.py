@@ -39,6 +39,50 @@ def test_distributed_db_matches_single_device():
     """)
 
 
+def test_distributed_pq_matches_single_host():
+    """Sharded codes + replicated LUTs give the single-host pq ranking, at
+    <= 1/4 the per-device bytes of the replicated f32 corpus (4 shards)."""
+    run_spmd("""
+        import jax, numpy as np
+        from repro.core import DistributedPQ, VectorDB
+        mesh = jax.make_mesh((4,), ('data',))
+        rng = np.random.default_rng(0)
+        corpus = rng.normal(size=(2000, 32)).astype(np.float32)
+        q = corpus[:16] + 0.01 * rng.normal(size=(16, 32)).astype(np.float32)
+        dpq = DistributedPQ(mesh, metric='cosine', m=8).load(corpus)
+        s, ids = dpq.query(q, k=10)
+        ref = VectorDB('pq', metric='cosine', refine=0).load(corpus)
+        rs, rids = ref.query(q, k=10, bucketize=False)
+        ids, rids = np.asarray(ids), np.asarray(rids)
+        recall = np.mean([len(set(ids[i]) & set(rids[i])) / 10
+                          for i in range(16)])
+        assert recall >= 0.95, recall
+        assert np.allclose(np.sort(np.asarray(s)), np.sort(np.asarray(rs)),
+                           atol=1e-4)
+        assert dpq.per_device_bytes() <= corpus.nbytes / 4, (
+            dpq.per_device_bytes(), corpus.nbytes)
+        print('OK', recall)
+    """, n_dev=4)
+
+
+def test_distributed_pq_bf16_luts():
+    run_spmd("""
+        import jax, numpy as np
+        from repro.core import DistributedPQ
+        mesh = jax.make_mesh((2,), ('data',))
+        rng = np.random.default_rng(1)
+        corpus = rng.normal(size=(512, 16)).astype(np.float32)
+        q = corpus[:8]
+        f32 = DistributedPQ(mesh, metric='l2').load(corpus)
+        bf16 = DistributedPQ(mesh, metric='l2', lut_dtype='bfloat16').load(corpus)
+        i0 = np.asarray(f32.query(q, k=5)[1])
+        i1 = np.asarray(bf16.query(q, k=5)[1])
+        overlap = np.mean([len(set(i0[r]) & set(i1[r])) / 5 for r in range(8)])
+        assert overlap >= 0.9, overlap
+        print('OK', overlap)
+    """, n_dev=2)
+
+
 def test_two_level_search_matches_flat():
     run_spmd("""
         import jax, jax.numpy as jnp, numpy as np

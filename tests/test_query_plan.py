@@ -1,0 +1,87 @@
+"""Jit-cached query plans: bucketized batches reuse compiled executables
+(no per-batch-size retrace), the plan ledger counts hits/misses, and the
+serving front surfaces both."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PLAN_BUCKETS, VectorDB
+from repro.kernels.ops import adc_topk_jnp
+from repro.serve import QueryEngine
+
+
+def _corpus(rng, n=400, d=32):
+    return rng.normal(size=(n, d)).astype(np.float32)
+
+
+def test_bucketized_query_matches_unbucketized(rng):
+    corpus = _corpus(rng)
+    q = corpus[:5] + 0.01 * rng.normal(size=(5, 32)).astype(np.float32)
+    for engine in ("flat", "pq", "ivf_pq", "lsh", "graph"):
+        db = VectorDB(engine, metric="cosine").load(corpus)
+        s0, i0 = db.query(q, k=7, bucketize=False)
+        s1, i1 = db.query(q, k=7)  # pads 5 -> bucket 8, slices back
+        assert s1.shape == (5, 7) and i1.shape == (5, 7), engine
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-5)
+
+
+def test_plan_ledger_counts_hits_and_misses(rng):
+    corpus = _corpus(rng)
+    db = VectorDB("flat", metric="cosine").load(corpus)
+    q = rng.normal(size=(5, 32)).astype(np.float32)
+    db.query(q, k=3)                       # miss: new (flat, 8, 3, f32) plan
+    assert db.plan_stats == {"hits": 0, "misses": 1}
+    db.query(q[:7 - 2], k=3)               # hit: Q=5 -> same bucket 8
+    db.query(rng.normal(size=(7, 32)).astype(np.float32), k=3)  # hit: 7 -> 8
+    assert db.plan_stats == {"hits": 2, "misses": 1}
+    db.query(q, k=4)                       # miss: k changes the plan
+    db.query(rng.normal(size=(9, 32)).astype(np.float32), k=3)  # miss: bucket 16
+    assert db.plan_stats == {"hits": 2, "misses": 3}
+
+
+def test_same_bucket_does_not_recompile(rng):
+    """Two different batch sizes in one bucket reuse one compiled scan: the
+    fused ADC executable cache must not grow on the second call."""
+    corpus = _corpus(rng, n=600)
+    db = VectorDB("pq", metric="cosine", refine=0).load(corpus)
+    db.query(rng.normal(size=(5, 32)).astype(np.float32), k=4)
+    size_after_first = adc_topk_jnp._cache_size()
+    db.query(rng.normal(size=(7, 32)).astype(np.float32), k=4)
+    db.query(rng.normal(size=(8, 32)).astype(np.float32), k=4)
+    assert adc_topk_jnp._cache_size() == size_after_first
+    assert db.plan_stats["hits"] == 2
+
+
+def test_bulk_batches_round_to_bucket_multiples(rng):
+    corpus = _corpus(rng)
+    db = VectorDB("flat", metric="cosine").load(corpus)
+    top = PLAN_BUCKETS[-1]
+    q = rng.normal(size=(top + 3, 32)).astype(np.float32)
+    s, i = db.query(q, k=2)  # pads to 2*top, slices back
+    assert s.shape == (top + 3, 2)
+    key_buckets = {key[1] for key in db._plans}
+    assert key_buckets == {2 * top}
+
+
+def test_query_engine_surfaces_plan_stats(rng):
+    corpus = _corpus(rng)
+    db = VectorDB("flat", metric="cosine").load(corpus)
+    eng = QueryEngine(db, max_batch=4, max_wait_ms=0.0)
+    for i in range(12):
+        eng.submit(corpus[i], k=3)
+        eng.pump()
+    eng.drain()
+    st = eng.latency_stats()
+    assert st["plan_misses"] >= 1
+    assert st["plan_hits"] + st["plan_misses"] == db.plan_stats["hits"] + \
+        db.plan_stats["misses"]
+    # steady state: repeated same-shape batches stop compiling
+    misses_before = st["plan_misses"]
+    for i in range(8):
+        eng.submit(corpus[i], k=3)
+        eng.pump(force=True)
+    assert eng.latency_stats()["plan_misses"] == misses_before
+
+
+def test_buckets_shared_between_db_and_serve():
+    assert QueryEngine.BUCKETS == PLAN_BUCKETS
