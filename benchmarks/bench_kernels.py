@@ -54,6 +54,52 @@ def pq_adc_agreement():
     return rows
 
 
+def ivf_adc_agreement():
+    """Bucket-resident IVF-ADC: dispatcher (twin) parity vs the gather
+    oracle, plus CPU walltimes of the three scoring strategies at the same
+    probe geometry — ivf_adc (bucket-resident twin) vs pq_adc (all-codes
+    fused twin) vs the materialize-everything jnp gather oracle."""
+    from repro.core import build_block_lists
+    from repro.kernels import adc_topk_jnp, ivf_adc_topk
+
+    rng = np.random.default_rng(3)
+    rows = []
+    for (N, C, blk, m, ksub, Q, nprobe, k) in [
+            (8192, 64, 32, 8, 256, 8, 8, 10),
+            (16384, 128, 32, 8, 256, 8, 4, 10)]:
+        assign = rng.integers(0, C, N)
+        slots, bstart, bcnt, spp = build_block_lists(assign, C, blk=blk)
+        slots = jnp.asarray(slots)
+        codes_flat = jnp.asarray(rng.integers(0, ksub, (N, m)).astype(np.int32))
+        codes = jnp.take(codes_flat, jnp.clip(slots, 0), axis=0)
+        luts = jnp.asarray(rng.normal(size=(Q, m, ksub)).astype(np.float32))
+        probe = jnp.asarray(np.stack(
+            [rng.choice(C, nprobe, replace=False) for _ in range(Q)]
+        ).astype(np.int32))
+        base = jnp.take(jnp.asarray(bstart), probe, axis=0)
+        cnt = jnp.take(jnp.asarray(bcnt), probe, axis=0)
+        r = jnp.arange(spp, dtype=jnp.int32)[None, None, :]
+        visit = jnp.where(r < cnt[:, :, None], base[:, :, None] + r,
+                          slots.shape[0] - 1).reshape(Q, nprobe * spp)
+
+        s, i = ivf_adc_topk(codes, slots, visit, luts, k=k,
+                            steps_per_probe=spp, use_kernel=False)
+        rs, ri = R.ivf_adc_ref(codes, slots, visit, luts, k=k,
+                               steps_per_probe=spp)
+        ok = bool((np.asarray(i) == np.asarray(ri)).all())
+        bucket_t = _timeit(
+            lambda: ivf_adc_topk(codes, slots, visit, luts, k=k,
+                                 steps_per_probe=spp, use_kernel=False))
+        all_codes_t = _timeit(lambda: adc_topk_jnp(codes_flat, luts, k=k))
+        gather_t = _timeit(
+            lambda: R.ivf_adc_ref(codes, slots, visit, luts, k=k,
+                                  steps_per_probe=spp))
+        rows.append({"N": N, "nprobe": nprobe, "match": ok,
+                     "bucket_s": bucket_t, "all_codes_s": all_codes_t,
+                     "gather_s": gather_t})
+    return rows
+
+
 def hamming_agreement():
     rng = np.random.default_rng(1)
     rows = []
@@ -71,11 +117,15 @@ def hamming_agreement():
 def main(quick: bool = False):
     print("name,case,match,oracle_s")
     rows = {"topk": topk_agreement(), "pq_adc": pq_adc_agreement(),
-            "hamming": hamming_agreement()}
+            "ivf_adc": ivf_adc_agreement(), "hamming": hamming_agreement()}
     for r in rows["topk"]:
         print(f"kernels,topk_N{r['N']}d{r['d']},{r['match']},{r['oracle_s']:.4f}")
     for r in rows["pq_adc"]:
         print(f"kernels,pq_adc_N{r['N']}m{r['m']},{r['match']},{r['oracle_s']:.4f}")
+    for r in rows["ivf_adc"]:
+        print(f"kernels,ivf_adc_N{r['N']}np{r['nprobe']},{r['match']},"
+              f"bucket={r['bucket_s']:.4f},all_codes={r['all_codes_s']:.4f},"
+              f"gather={r['gather_s']:.4f}")
     for r in rows["hamming"]:
         print(f"kernels,hamming_N{r['N']},{r['match']},{r['oracle_s']:.4f}")
     return rows

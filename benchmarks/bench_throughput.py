@@ -8,6 +8,11 @@ Measures (CPU walltime; the TPU numbers live in the dry-run roofline):
   * the PQ ADC hot path: PR-1 jnp ``pq_topk`` scan vs the fused dispatch
     (f32 and bf16-LUT twins of the Pallas kernel) — QPS and recall@10 per
     path, plus the served ``pq`` engine end to end,
+  * the IVF-ADC bucket path: the bucket-resident fused dispatch vs the
+    PR-2 all-codes augmented-LUT scan and the PR-2 jnp gather path over an
+    nprobe sweep, the f32/bf16/int8 LUT ladder, and the served ``ivf_pq``
+    engines (the second CI recall gate); the committed full-size run is
+    ``BENCH_ivf_adc.json``,
   * ``DistributedPQ`` per-device resident bytes vs a replicated f32 corpus
     on a forced multi-device host mesh (subprocess).
 
@@ -153,6 +158,132 @@ def pq_adc_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
     return rows
 
 
+def _gather_baseline(db, q, k: int, nprobe: int):
+    """The PR-2 jnp gather path, reconstructed as a baseline: probe, gather
+    the full (Q, nprobe, cap, m) bucket-code tensor, LUT-sum, top-k. This
+    is what ivf_pq used to run for l2/true-nprobe before the
+    bucket-resident kernel path — kept here (and as kernels.ref.ivf_adc_ref)
+    so the speedup rows keep an honest denominator."""
+    import functools
+
+    from repro.core.ivf import build_buckets
+    from repro.core.pq import adc_tables
+
+    idx = db.index
+    assign = idx._host_assign()
+    buckets, cap = build_buckets(assign, idx.centroids.shape[0])
+    buckets = jnp.asarray(buckets)
+    codes = idx._row_major_codes()
+
+    @functools.partial(jax.jit, static_argnames=("k", "nprobe", "cap"))
+    def search(codebooks, codes, centroids, buckets, qq, *, k, nprobe, cap):
+        Q = qq.shape[0]
+        m = codebooks.shape[0]
+        c_scores = jnp.einsum("qd,cd->qc", qq, centroids,
+                              preferred_element_type=jnp.float32)
+        _, probe = jax.lax.top_k(c_scores, nprobe)
+        cand = jnp.take(buckets, probe, axis=0)  # (Q, nprobe, cap)
+        valid = cand >= 0
+        safe = jnp.where(valid, cand, 0)
+        bucket_codes = jnp.take(codes.astype(jnp.int32), safe, axis=0)
+        luts = adc_tables(codebooks, qq, metric="dot")
+        flat = bucket_codes.reshape(Q, nprobe * cap, m)
+        s = jnp.zeros((Q, nprobe * cap), jnp.float32)
+        for j in range(m):
+            s = s + jnp.take_along_axis(luts[:, j, :], flat[..., j], axis=1)
+        s = s.reshape(Q, nprobe, cap) + jnp.take_along_axis(
+            c_scores, probe, axis=1)[:, :, None]
+        s = jnp.where(valid, s, -jnp.inf).reshape(Q, nprobe * cap)
+        s, pos = jax.lax.top_k(s, k)
+        return s, jnp.take_along_axis(cand.reshape(Q, nprobe * cap), pos,
+                                      axis=-1)
+
+    qq = jnp.asarray(q / np.linalg.norm(q, axis=-1, keepdims=True))
+    return lambda: search(idx.codebooks, codes, idx.centroids, buckets, qq,
+                          k=k, nprobe=nprobe, cap=cap)
+
+
+def ivf_adc_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
+                  k: int = 10, m: int = 8, nprobes=(1, 4, 8, 32),
+                  seed: int = 0):
+    """The tentpole measurement: QPS + recall@10 of the bucket-resident
+    fused IVF-ADC path vs the PR-2 all-codes augmented-LUT scan and the
+    PR-2 jnp gather path, swept over nprobe — scoring work should scale
+    with the probed candidate count, so the bucket path's margin grows as
+    nprobe shrinks. Also rows for l2 on the fused path (previously
+    jnp-gather-only), the f32/bf16/int8 LUT-dtype ladder, and the served
+    ``ivf_pq`` engines (refine=128) whose recall@10 is the CI gate.
+
+    All ivf_pq instances share seed/geometry, so every path probes the
+    same buckets at equal nprobe and recall deltas isolate the scoring
+    backend.
+    """
+    rng = np.random.default_rng(seed)
+    n_clusters = max(8, N // 100)
+    corpus = _clustered(rng, N, d, n_clusters)
+    q = _clustered(rng, n_queries, d, n_clusters)
+    exact = VectorDB("flat", metric="cosine").load(corpus)
+    eids = np.asarray(exact.query(q, k=k, bucketize=False)[1])
+
+    def recall(ids):
+        ids = np.asarray(ids)
+        return float(np.mean([len(set(ids[i]) & set(eids[i])) / k
+                              for i in range(n_queries)]))
+
+    kw = dict(metric="cosine", m=m, refine=0)
+    paths = {}
+    for p in nprobes:
+        db = VectorDB("ivf_pq", nprobe=p, **kw).load(corpus)
+        db_l2 = VectorDB("ivf_pq", metric="l2", m=m, refine=0,
+                         nprobe=p).load(corpus)
+        paths[f"bucket_fused_np{p}"] = (
+            lambda db=db: db.query(q, k=k, bucketize=False), "dot", p)
+        paths[f"bucket_fused_l2_np{p}"] = (
+            lambda db=db_l2: db.query(q, k=k, bucketize=False), "l2", p)
+        paths[f"jnp_gather_np{p}"] = (
+            _gather_baseline(db, q, k, min(p, db.index.centroids.shape[0])),
+            "dot", p)
+    scan_db = VectorDB("ivf_pq", nprobe=nprobes[0], scan_all=True,
+                       **kw).load(corpus)
+    paths["all_codes_scan"] = (
+        lambda: scan_db.query(q, k=k, bucketize=False), "dot", 0)
+    for dt in ("bfloat16", "int8"):  # LUT ladder at the middle nprobe
+        db = VectorDB("ivf_pq", nprobe=8, lut_dtype=dt, **kw).load(corpus)
+        paths[f"bucket_fused_np8_{dt}"] = (
+            lambda db=db: db.query(q, k=k, bucketize=False), "dot", 8)
+    for dt in ("float32", "int8"):  # the served engines the CI gate reads
+        db = VectorDB("ivf_pq", metric="cosine", m=m, nprobe=32, refine=128,
+                      lut_dtype=dt).load(corpus)
+        name = f"engine_ivf_pq_{'f32' if dt == 'float32' else dt}"
+        paths[name] = (lambda db=db: db.query(q, k=k), "cosine", 32)
+
+    for fn, _, _ in paths.values():
+        jax.block_until_ready(fn())  # compile
+    walls = {name: float("inf") for name in paths}
+    for _ in range(15):  # interleaved min-of-reps (see pq_adc_paths)
+        for name, (fn, _, _) in paths.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            walls[name] = min(walls[name], time.perf_counter() - t0)
+    rows = [{"path": name, "metric": metric, "nprobe": p, "N": N,
+             "qps": n_queries / walls[name],
+             "recall_at_10": recall(fn()[1])}
+            for name, (fn, metric, p) in paths.items()]
+
+    scan = next(r for r in rows if r["path"] == "all_codes_scan")
+    for p in nprobes:
+        b = next(r for r in rows if r["path"] == f"bucket_fused_np{p}")
+        g = next(r for r in rows if r["path"] == f"jnp_gather_np{p}")
+        rows.append({"path": f"speedup_bucket_vs_scan_np{p}", "metric": "dot",
+                     "nprobe": p, "N": N, "qps": b["qps"] / scan["qps"],
+                     "recall_at_10": b["recall_at_10"] - scan["recall_at_10"]})
+        rows.append({"path": f"speedup_bucket_vs_gather_np{p}",
+                     "metric": "dot", "nprobe": p, "N": N,
+                     "qps": b["qps"] / g["qps"],
+                     "recall_at_10": b["recall_at_10"] - g["recall_at_10"]})
+    return rows
+
+
 _DIST_PQ_SNIPPET = """
 import json
 import jax, numpy as np
@@ -229,6 +360,13 @@ def main(quick: bool = False, json_path: str | None = None):
     for r in results["pq_adc"]:
         print(f"pq_adc,{r['path']},{r['N']},{r['qps']:.1f},"
               f"{r['recall_at_10']:.4f}")
+    results["ivf_adc"] = ivf_adc_paths(
+        N=2000 if quick else 10_000, n_queries=64 if quick else 256,
+        nprobes=(1, 8) if quick else (1, 4, 8, 32))
+    print("name,path,metric,nprobe,N,qps,recall_at_10")
+    for r in results["ivf_adc"]:
+        print(f"ivf_adc,{r['path']},{r['metric']},{r['nprobe']},{r['N']},"
+              f"{r['qps']:.1f},{r['recall_at_10']:.4f}")
     results["distributed_pq"] = distributed_pq_memory(
         shards=4, N=2048 if quick else 4096)
     dp = results["distributed_pq"]

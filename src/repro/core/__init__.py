@@ -9,24 +9,27 @@ Engines (all load/query, per the paper's Rust trait):
   pq    — product-quantized ADC scan, m bytes/row (beyond paper)
   ivf_pq — IVF coarse quantizer over PQ residuals + exact re-rank (beyond paper)
 """
-from repro.core.db import (ENGINES, PLAN_BUCKETS, DistributedPQ,
-                           DistributedVectorDB, VectorDB, register_engine)
+from repro.core.db import (ENGINES, PLAN_BUCKETS, DistributedIVFPQ,
+                           DistributedPQ, DistributedVectorDB, VectorDB,
+                           register_engine)
 from repro.core.distances import METRICS, pairwise_scores, l2_normalize
 from repro.core.flat import FlatIndex, flat_search
 from repro.core.graph import GraphIndex, beam_search, build_knn_graph
-from repro.core.ivf import IVFIndex, build_buckets, ivf_search, kmeans
+from repro.core.ivf import (IVFIndex, build_block_lists, build_buckets,
+                            ivf_search, kmeans)
 from repro.core.lsh import LSHIndex, lsh_search, sign_codes, hamming_distance
 from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, ivf_pq_search,
                            pq_decode, pq_encode, pq_search, train_pq)
 from repro.core.quant import Int8FlatIndex, int8_search, quantize_rows
 
 __all__ = [
-    "ENGINES", "METRICS", "PLAN_BUCKETS", "VectorDB", "DistributedPQ",
-    "DistributedVectorDB", "register_engine",
+    "ENGINES", "METRICS", "PLAN_BUCKETS", "VectorDB", "DistributedIVFPQ",
+    "DistributedPQ", "DistributedVectorDB", "register_engine",
     "FlatIndex", "IVFIndex", "GraphIndex", "LSHIndex", "Int8FlatIndex",
     "PQIndex", "IVFPQIndex",
     "flat_search", "ivf_search", "beam_search", "lsh_search", "int8_search",
     "pq_search", "ivf_pq_search", "train_pq", "pq_encode", "pq_decode",
-    "adc_tables", "kmeans", "build_buckets", "build_knn_graph", "sign_codes",
-    "hamming_distance", "pairwise_scores", "l2_normalize", "quantize_rows",
+    "adc_tables", "kmeans", "build_block_lists", "build_buckets",
+    "build_knn_graph", "sign_codes", "hamming_distance", "pairwise_scores",
+    "l2_normalize", "quantize_rows",
 ]

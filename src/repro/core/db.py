@@ -8,14 +8,18 @@ Mirrors the paper's Rust Trait interface (load + query per engine) with a
 registry so new engines compose in. Under a mesh, ``DistributedVectorDB``
 shards corpus rows across every device and runs the SPMD merge program in
 ``repro.core.distributed``; ``DistributedPQ`` is its compressed twin —
-uint8 PQ codes sharded, LUTs replicated, 8-32x less HBM per device.
+uint8 PQ codes sharded, LUTs replicated, 8-32x less HBM per device — and
+``DistributedIVFPQ`` range-shards the block-aligned inverted lists so
+per-device QUERY WORK (not just bytes) scales with the probed candidate
+count instead of N/S.
 
 Query plans: every engine's search is a jitted program whose executable is
 keyed on (batch shape, k, dtype), so a naive front end retraces for every
-distinct caller batch size. ``VectorDB.query`` therefore canonicalizes the
-batch to a fixed ladder of bucket sizes (``PLAN_BUCKETS``, shared with
+distinct caller batch size. Every query front (``VectorDB`` AND the mesh
+fronts, via the shared ``_PlanLedger``) therefore canonicalizes the batch
+to a fixed ladder of bucket sizes (``PLAN_BUCKETS``, shared with
 serve.QueryEngine) before dispatching, and keeps a plan ledger: a miss is
-the first use of a (engine, bucket, k, dtype) plan by THIS VectorDB (the
+the first use of a (engine, bucket, k, dtype) plan by THIS front (the
 process-wide jit cache may already hold the executable if another instance
 compiled the same shapes), every later call at the same key is a hit that
 reuses the cached executable. ``plan_stats`` feeds
@@ -23,10 +27,12 @@ QueryEngine.latency_stats.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Dict, Optional, Type
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import checkpoint as ckpt
@@ -34,11 +40,13 @@ from repro.core import distances as D
 from repro.core import distributed as dist
 from repro.core.flat import FlatIndex
 from repro.core.graph import GraphIndex
-from repro.core.ivf import IVFIndex
+from repro.core.ivf import (IVFIndex, assign_clusters, build_block_lists,
+                            kmeans)
 from repro.core.lsh import LSHIndex
-from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, pq_encode,
-                           train_pq)
+from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, expand_visit,
+                           pq_encode, probe_luts, train_pq)
 from repro.core.quant import Int8FlatIndex
+from repro.kernels import ops as kops
 
 ENGINES: Dict[str, Type] = {
     "flat": FlatIndex,      # paper: Iterative (exact), cosine + l2
@@ -60,7 +68,45 @@ def register_engine(name: str, cls: Type) -> None:
 PLAN_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 
 
-class VectorDB:
+class _PlanLedger:
+    """Jit-plan bookkeeping shared by every query front (single-host AND
+    mesh): canonicalize the batch to the PLAN_BUCKETS ladder, count
+    hit/miss per (engine, bucket, k, dtype) plan key, pad the batch up to
+    its bucket. A miss is the first use of a plan key by THIS front (the
+    process-wide jit cache may already hold the executable); serve's
+    ``latency_stats`` surfaces the counters via ``plan_stats``."""
+
+    def _plan_init(self):
+        self.plan_buckets = PLAN_BUCKETS
+        self._plans = set()
+        self.plan_stats = {"hits": 0, "misses": 0}
+
+    def _bucket(self, n: int) -> int:
+        for b in self.plan_buckets:
+            if n <= b:
+                return b
+        top = self.plan_buckets[-1]  # bulk path: next multiple of the cap
+        return -(-n // top) * top
+
+    def _plan_batch(self, q, kk: int):
+        """Record the plan key and pad q up to its bucket. Returns
+        (padded q, original Q): padded rows repeat the last query, so the
+        first Q result rows are unchanged and get sliced back out."""
+        Q = q.shape[0]
+        bucket = self._bucket(Q)
+        key = (self.engine_name, bucket, kk, str(q.dtype))
+        if key in self._plans:
+            self.plan_stats["hits"] += 1
+        else:
+            self.plan_stats["misses"] += 1
+            self._plans.add(key)
+        if bucket > Q:
+            pad = jnp.broadcast_to(q[-1:], (bucket - Q,) + q.shape[1:])
+            q = jnp.concatenate([q, pad])
+        return q, Q
+
+
+class VectorDB(_PlanLedger):
     """Single-host front end over the engine registry."""
 
     def __init__(self, engine: str = "flat", metric: str = "cosine", **engine_kwargs):
@@ -72,9 +118,7 @@ class VectorDB:
         self.index = ENGINES[engine](metric=metric, **engine_kwargs)
         self.n = 0
         self._texts = None
-        self.plan_buckets = PLAN_BUCKETS
-        self._plans = set()
-        self.plan_stats = {"hits": 0, "misses": 0}
+        self._plan_init()
 
     # ----------------------------------------------------------- load
     def load(self, vectors) -> "VectorDB":
@@ -93,13 +137,6 @@ class VectorDB:
         return self.load(jnp.concatenate(embs, axis=0))
 
     # ----------------------------------------------------------- query
-    def _bucket(self, n: int) -> int:
-        for b in self.plan_buckets:
-            if n <= b:
-                return b
-        top = self.plan_buckets[-1]  # bulk path: next multiple of the cap
-        return -(-n // top) * top
-
     def query(self, q, k: int = 10, *, bucketize: bool = True):
         """q: (d,) or (Q, d) -> (scores (Q, k) f32, ids (Q, k) int32).
 
@@ -115,17 +152,7 @@ class VectorDB:
         kk = min(k, self.n)
         if not bucketize:
             return self.index.query(q, k=kk)
-        Q = q.shape[0]
-        bucket = self._bucket(Q)
-        key = (self.engine_name, bucket, kk, str(q.dtype))
-        if key in self._plans:
-            self.plan_stats["hits"] += 1
-        else:
-            self.plan_stats["misses"] += 1
-            self._plans.add(key)
-        if bucket > Q:
-            pad = jnp.broadcast_to(q[-1:], (bucket - Q,) + q.shape[1:])
-            q = jnp.concatenate([q, pad])
+        q, Q = self._plan_batch(q, kk)
         scores, ids = self.index.query(q, k=kk)
         return scores[:Q], ids[:Q]
 
@@ -162,9 +189,14 @@ class VectorDB:
         return self
 
 
-class DistributedVectorDB:
+class DistributedVectorDB(_PlanLedger):
     """Corpus row-sharded over a mesh; exact SPMD search with local top-k +
-    hierarchical all-gather merge (repro.core.distributed)."""
+    hierarchical all-gather merge (repro.core.distributed). Queries go
+    through the same plan-bucket ladder as the single-host front — the
+    shard_map program retraces per batch shape exactly like a jitted scan,
+    so mesh serving needs the plan cache MORE, not less."""
+
+    engine_name = "dist_flat"
 
     def __init__(self, mesh: Mesh, metric: str = "cosine", axes=None,
                  dtype=jnp.float32, tile: int = 65536):
@@ -180,6 +212,7 @@ class DistributedVectorDB:
         self.n_shards = 1
         for a in self.axes:
             self.n_shards *= mesh.shape[a]
+        self._plan_init()
 
     def load(self, vectors) -> "DistributedVectorDB":
         x = jnp.asarray(vectors, jnp.float32)
@@ -191,16 +224,23 @@ class DistributedVectorDB:
         self.n = x.shape[0]
         return self
 
-    def query(self, q, k: int = 10):
+    def query(self, q, k: int = 10, *, bucketize: bool = True):
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32)).astype(self.dtype)
         metric = "dot" if self.metric == "cosine" else self.metric
         qq = D.l2_normalize(q) if self.metric == "cosine" else q
-        return dist.sharded_flat_search(
-            self.corpus, qq, mesh=self.mesh, k=min(k, self.n), metric=metric,
+        kk = min(k, self.n)
+        if not bucketize:
+            return dist.sharded_flat_search(
+                self.corpus, qq, mesh=self.mesh, k=kk, metric=metric,
+                axes=self.axes, valid=self.valid, tile=self.tile)
+        qq, Q = self._plan_batch(qq, kk)
+        s, i = dist.sharded_flat_search(
+            self.corpus, qq, mesh=self.mesh, k=kk, metric=metric,
             axes=self.axes, valid=self.valid, tile=self.tile)
+        return s[:Q], i[:Q]
 
 
-class DistributedPQ:
+class DistributedPQ(_PlanLedger):
     """PQ serving under the mesh: uint8 codes row-sharded, LUTs replicated.
 
     ``DistributedVectorDB`` keeps an f32 corpus shard per device (N*d*4/S
@@ -210,12 +250,16 @@ class DistributedPQ:
     (Q, m, ksub) score tables, reusing the exact local-top-k + all-gather
     merge from the flat path. Each shard's local scan goes through the
     fused ADC dispatch, so on TPU the Pallas kernel serves every shard.
+    Queries bucketize through the shared plan ladder (see _PlanLedger).
     """
+
+    engine_name = "dist_pq"
 
     def __init__(self, mesh: Mesh, metric: str = "cosine", m: int = 8,
                  ksub: int = 256, kmeans_iters: int = 10, seed: int = 0,
                  axes=None, use_kernel=None, lut_dtype: str = "float32"):
         assert metric in D.METRICS
+        assert lut_dtype in kops.ADC_LUT_DTYPES, lut_dtype
         self.mesh = mesh
         self.metric = metric
         self.m = m
@@ -231,6 +275,7 @@ class DistributedPQ:
         self.n_shards = 1
         for a in self.axes:
             self.n_shards *= mesh.shape[a]
+        self._plan_init()
 
     def load(self, vectors) -> "DistributedPQ":
         x = jnp.asarray(vectors, jnp.float32)
@@ -247,17 +292,22 @@ class DistributedPQ:
                                     NamedSharding(self.mesh, P(self.axes)))
         return self
 
-    def query(self, q, k: int = 10):
+    def query(self, q, k: int = 10, *, bucketize: bool = True):
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
         metric = self.metric
         if metric == "cosine":
             q = D.l2_normalize(q)
             metric = "dot"
+        kk = min(k, self.n)
+        Q = q.shape[0]
+        if bucketize:
+            q, Q = self._plan_batch(q, kk)
         luts = adc_tables(self.codebooks, q, metric=metric)
-        return dist.sharded_pq_search(
-            self.codes, luts, mesh=self.mesh, k=min(k, self.n),
+        s, i = dist.sharded_pq_search(
+            self.codes, luts, mesh=self.mesh, k=kk,
             axes=self.axes, valid=self.valid, use_kernel=self.use_kernel,
             lut_dtype=self.lut_dtype)
+        return s[:Q], i[:Q]
 
     # ------------------------------------------------------------- memory
     def per_device_bytes(self) -> int:
@@ -268,3 +318,160 @@ class DistributedPQ:
 
     def memory_bytes(self) -> int:
         return int(self.codes.size + self.codebooks.size * 4 * self.n_shards)
+
+
+class DistributedIVFPQ(_PlanLedger):
+    """IVF-PQ serving under the mesh: inverted-list BLOCKS range-sharded,
+    coarse structures replicated — the bucket-resident fused path at pod
+    scale.
+
+    ``DistributedPQ`` still streams every shard's full code slab per query.
+    This engine shards the block-aligned inverted lists instead: each
+    device owns a contiguous range of (blk, m) code blocks (plus its own
+    all-pad block), and a query only touches the probed blocks that live
+    on each shard — per-device scoring work scales with the probed
+    candidate count, not N/S. Centroids + codebooks replicate (they are
+    the small side); probe selection, visit-table expansion, and LUT
+    builds run replicated outside the shard_map, and the merge is the same
+    O(Q*k*shards) all-gather as every other distributed path. Bucket ids
+    store global corpus rows, so no id lifting is needed.
+
+    Compressed-only serving (no exact re-rank — the raw corpus is exactly
+    what this engine exists to not hold). Queries bucketize through the
+    shared plan ladder (see _PlanLedger).
+    """
+
+    engine_name = "dist_ivf_pq"
+
+    def __init__(self, mesh: Mesh, metric: str = "cosine",
+                 n_clusters: int = 0, nprobe: int = 8, m: int = 8,
+                 ksub: int = 256, kmeans_iters: int = 10, seed: int = 0,
+                 axes=None, use_kernel=None, lut_dtype: str = "float32",
+                 block_size: int = 32):
+        assert metric in D.METRICS
+        assert lut_dtype in kops.ADC_LUT_DTYPES, lut_dtype
+        self.mesh = mesh
+        self.metric = metric
+        self.n_clusters = n_clusters  # 0 => sqrt(N) at load time
+        self.nprobe = nprobe
+        self.m = m
+        self.ksub = ksub
+        self.kmeans_iters = kmeans_iters
+        self.seed = seed
+        self.axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+        self.use_kernel = use_kernel
+        self.lut_dtype = lut_dtype
+        self.block_size = block_size
+        self.codebooks = self.centroids = None
+        self.codes_bm = self.bucket_ids = None
+        self.bstart = self.bcnt = None
+        self.spp = 1
+        self.blocks_per_shard = 0
+        self.n = 0
+        self.d = 0
+        self.n_shards = 1
+        for a in self.axes:
+            self.n_shards *= mesh.shape[a]
+        self._plan_init()
+
+    def load(self, vectors) -> "DistributedIVFPQ":
+        x = jnp.asarray(vectors, jnp.float32)
+        self.n, self.d = x.shape
+        C = self.n_clusters or max(1, int(np.sqrt(self.n)))
+        C = min(C, self.n)
+        corpus, _sq = D.preprocess_corpus(x, self.metric)
+        key = jax.random.PRNGKey(self.seed)
+        cent = kmeans(key, corpus, n_clusters=C, iters=self.kmeans_iters)
+        if self.metric == "cosine":
+            cent = D.l2_normalize(cent)
+        assign = np.asarray(assign_clusters(corpus, cent))
+        residuals = corpus - jnp.take(cent, jnp.asarray(assign), axis=0)
+        self.codebooks = train_pq(jax.random.fold_in(key, 1), residuals,
+                                  m=self.m, ksub=self.ksub,
+                                  iters=self.kmeans_iters)
+        codes = np.asarray(pq_encode(self.codebooks, residuals))
+        slots, bstart, bcnt, spp = build_block_lists(assign, C,
+                                                     blk=self.block_size)
+        # shard layout: pad real blocks to S * Bloc, then give every shard
+        # its own trailing all-pad block -> (S * (Bloc + 1), blk) slabs.
+        # visit tables stay in GLOBAL block numbering [0, S*Bloc); each
+        # shard localizes in the shard_map (off-shard -> its pad block).
+        blk = slots.shape[1]
+        real = slots[:-1]  # drop the single-host pad block
+        B = real.shape[0]
+        bloc = max(1, -(-B // self.n_shards))
+        pad_rows = self.n_shards * bloc - B
+        real = np.concatenate(
+            [real, np.full((pad_rows, blk), -1, np.int32)])
+        per_shard = real.reshape(self.n_shards, bloc, blk)
+        pad_block = np.full((self.n_shards, 1, blk), -1, np.int32)
+        slots_sharded = np.concatenate([per_shard, pad_block],
+                                       axis=1).reshape(-1, blk)
+        codes_bm = codes[np.clip(slots_sharded, 0, None)]
+        codes_bm[slots_sharded < 0] = 0
+        self.bstart = jnp.asarray(bstart)
+        self.bcnt = jnp.asarray(bcnt)
+        self.spp = spp
+        self.blocks_per_shard = bloc
+        self.centroids = cent
+        sharding = dist.corpus_sharding(self.mesh, self.axes)
+        self.bucket_ids = jax.device_put(jnp.asarray(slots_sharded), sharding)
+        self.codes_bm = jax.device_put(jnp.asarray(codes_bm), sharding)
+        return self
+
+    def query(self, q, k: int = 10, *, bucketize: bool = True):
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+        metric = self.metric
+        if metric == "cosine":
+            q = D.l2_normalize(q)
+            metric = "dot"
+        kk = min(k, self.n)
+        Q = q.shape[0]
+        if bucketize:
+            q, Q = self._plan_batch(q, kk)
+        nprobe = min(self.nprobe, self.centroids.shape[0])
+        s, i = _dist_ivf_pq_plan(
+            self.codes_bm, self.bucket_ids, self.bstart, self.bcnt,
+            self.codebooks, self.centroids, q, mesh=self.mesh, k=kk,
+            metric=metric, nprobe=nprobe, steps_per_probe=self.spp,
+            blocks_per_shard=self.blocks_per_shard, axes=self.axes,
+            use_kernel=self.use_kernel, lut_dtype=self.lut_dtype)
+        return s[:Q], i[:Q]
+
+    # ------------------------------------------------------------- memory
+    def per_device_bytes(self) -> int:
+        """Resident index bytes per device: the local block slab (codes +
+        slot ids) + the replicated coarse structures."""
+        S = self.n_shards
+        return int(self.codes_bm.size // S + self.bucket_ids.size * 4 // S
+                   + self.codebooks.size * 4 + self.centroids.size * 4
+                   + self.bstart.size * 4 + self.bcnt.size * 4)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "k", "metric", "nprobe", "steps_per_probe",
+                     "blocks_per_shard", "axes", "use_kernel", "lut_dtype"))
+def _dist_ivf_pq_plan(codes_bm, bucket_ids, bstart, bcnt, codebooks,
+                      centroids, q, *, mesh, k, metric, nprobe,
+                      steps_per_probe, blocks_per_shard, axes, use_kernel,
+                      lut_dtype):
+    """One jitted program per (batch bucket, k, dtype) plan: replicated
+    probe selection + visit expansion + LUT build (the shared helpers from
+    repro.core.pq), then the bucket-range-sharded search. The visit table
+    uses the -1 tail sentinel — each shard retargets it (and off-shard
+    blocks) at its own pad block inside sharded_ivf_pq_search."""
+    Q = q.shape[0]
+    c_scores = D.pairwise_scores(q, centroids,
+                                 metric if metric == "dot" else "l2")
+    _, probe = jax.lax.top_k(c_scores, nprobe)
+    visit = expand_visit(probe, bstart, bcnt,
+                         steps_per_probe=steps_per_probe, pad_block=-1)
+    luts, coarse = probe_luts(codebooks, centroids, q, probe, c_scores,
+                              metric=metric)
+    if coarse is None:
+        coarse = jnp.zeros((Q, nprobe), jnp.float32)
+    return dist.sharded_ivf_pq_search(
+        codes_bm, bucket_ids, visit, luts, coarse, mesh=mesh, k=k,
+        steps_per_probe=steps_per_probe, blocks_per_shard=blocks_per_shard,
+        axes=axes, use_kernel=use_kernel, lut_dtype=lut_dtype)

@@ -28,6 +28,30 @@ from repro.core.flat import flat_search
 from repro.kernels import ops as kops
 
 
+def _merge_local_topk(s, i, *, k: int, axes, hierarchical: bool = True):
+    """The shared SPMD merge tail (runs INSIDE a shard_map body): pad the
+    local (Q, k') candidates to k, optionally pre-merge along the fast
+    inner axes so only k survivors cross the outer (pod) axis, then
+    all-gather + top-k. The only collective in every query path."""
+    if s.shape[-1] < k:
+        s = jnp.pad(s, ((0, 0), (0, k - s.shape[-1])),
+                    constant_values=-jnp.inf)
+        i = jnp.pad(i, ((0, 0), (0, k - i.shape[-1])), constant_values=-1)
+    if hierarchical and len(axes) > 1:
+        for a in reversed(axes[1:]):
+            s_all = jax.lax.all_gather(s, a, axis=1, tiled=True)
+            i_all = jax.lax.all_gather(i, a, axis=1, tiled=True)
+            s, pos = jax.lax.top_k(s_all, k)
+            i = jnp.take_along_axis(i_all, pos, axis=-1)
+        merge_axes = (axes[0],)
+    else:
+        merge_axes = axes
+    s_all = jax.lax.all_gather(s, merge_axes, axis=1, tiled=True)
+    i_all = jax.lax.all_gather(i, merge_axes, axis=1, tiled=True)
+    s, pos = jax.lax.top_k(s_all, k)
+    return s, jnp.take_along_axis(i_all, pos, axis=-1)
+
+
 def corpus_sharding(mesh: Mesh, axes=None):
     """Row-sharding spec over every mesh axis (flattened)."""
     axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
@@ -72,24 +96,8 @@ def sharded_flat_search(corpus, q, *, mesh: Mesh, k: int, metric: str = "cosine"
         s, i = flat_search(c_blk, q_rep, metric=metric, k=min(k, local_n),
                            tile=tile, valid=v_blk)
         i = i + idx * local_n  # global ids
-        if s.shape[-1] < k:
-            s = jnp.pad(s, ((0, 0), (0, k - s.shape[-1])), constant_values=-jnp.inf)
-            i = jnp.pad(i, ((0, 0), (0, k - i.shape[-1])), constant_values=-1)
-        if hierarchical and len(axes) > 1:
-            # merge along the fast inner axes first, cross the outer (pod)
-            # axis with only k survivors per pod
-            for a in reversed(axes[1:]):
-                s_all = jax.lax.all_gather(s, a, axis=1, tiled=True)
-                i_all = jax.lax.all_gather(i, a, axis=1, tiled=True)
-                s, pos = jax.lax.top_k(s_all, k)
-                i = jnp.take_along_axis(i_all, pos, axis=-1)
-            merge_axes = (axes[0],)
-        else:
-            merge_axes = axes
-        s_all = jax.lax.all_gather(s, merge_axes, axis=1, tiled=True)
-        i_all = jax.lax.all_gather(i, merge_axes, axis=1, tiled=True)
-        s, pos = jax.lax.top_k(s_all, k)
-        return s, jnp.take_along_axis(i_all, pos, axis=-1)
+        return _merge_local_topk(s, i, k=k, axes=axes,
+                                 hierarchical=hierarchical)
 
     args = (corpus, q) + ((valid,) if valid is not None else ())
     return shard_map(local_search, mesh=mesh, in_specs=in_specs,
@@ -132,26 +140,71 @@ def sharded_pq_search(codes, luts, *, mesh: Mesh, k: int, axes=None,
         s, i = kops.adc_topk(c_blk, luts_rep, k=min(k, local_n), valid=v_blk,
                              use_kernel=use_kernel, lut_dtype=lut_dtype)
         i = i + idx * local_n  # global ids
-        if s.shape[-1] < k:
-            s = jnp.pad(s, ((0, 0), (0, k - s.shape[-1])), constant_values=-jnp.inf)
-            i = jnp.pad(i, ((0, 0), (0, k - i.shape[-1])), constant_values=-1)
-        if hierarchical and len(axes) > 1:
-            for a in reversed(axes[1:]):
-                s_all = jax.lax.all_gather(s, a, axis=1, tiled=True)
-                i_all = jax.lax.all_gather(i, a, axis=1, tiled=True)
-                s, pos = jax.lax.top_k(s_all, k)
-                i = jnp.take_along_axis(i_all, pos, axis=-1)
-            merge_axes = (axes[0],)
-        else:
-            merge_axes = axes
-        s_all = jax.lax.all_gather(s, merge_axes, axis=1, tiled=True)
-        i_all = jax.lax.all_gather(i, merge_axes, axis=1, tiled=True)
-        s, pos = jax.lax.top_k(s_all, k)
-        return s, jnp.take_along_axis(i_all, pos, axis=-1)
+        return _merge_local_topk(s, i, k=k, axes=axes,
+                                 hierarchical=hierarchical)
 
     args = (codes, luts) + ((valid,) if valid is not None else ())
     return shard_map(local_search, mesh=mesh, in_specs=in_specs,
                      out_specs=out_specs, check_replication=False)(*args)
+
+
+def sharded_ivf_pq_search(bucket_codes, bucket_ids, visit, luts, coarse, *,
+                          mesh: Mesh, k: int, steps_per_probe: int = 1,
+                          blocks_per_shard: int, axes=None,
+                          hierarchical: bool = True, use_kernel=None,
+                          lut_dtype: str = "float32"):
+    """Bucket-range-sharded IVF-PQ top-k: each device owns a contiguous
+    range of inverted-list BLOCKS (plus its own all-pad block), queries /
+    LUTs / visit tables replicated.
+
+    The caller computes probes and expands them into a ``visit`` table in
+    GLOBAL block numbering [0, S * blocks_per_shard), with tail steps of
+    short clusters already pointing at -1. Each shard keeps the steps whose
+    block falls in its range (localized to its (blocks_per_shard + 1, blk)
+    slab) and retargets every other step — off-shard probes AND -1 tails —
+    at its local all-pad block, so they knock out on id without any score
+    surgery. The local bucket-resident ADC dispatch (Pallas ivf_adc kernel
+    per shard on TPU, jnp twin elsewhere) then runs unchanged, local ids
+    are already global corpus rows (bucket_ids store them), and the same
+    local-top-k + hierarchical all-gather merge as the flat/pq paths
+    finishes the query — still O(Q*k*shards) collective bytes.
+
+    bucket_codes: (S*(blocks_per_shard+1), blk, m) — the per-shard slabs
+    concatenated, each ending in its pad block (DistributedIVFPQ builds
+    this at load); bucket_ids likewise; visit: (Q, T) int32,
+    T = nprobe * steps_per_probe; luts: (Q, m, ksub) or (Q, nprobe, m,
+    ksub); coarse: (Q, nprobe) f32. Returns (scores (Q, k), ids (Q, k)).
+    """
+    axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    assert bucket_codes.shape[0] == n_shards * (blocks_per_shard + 1), (
+        bucket_codes.shape, n_shards, blocks_per_shard)
+    local_cand = (blocks_per_shard + 1) * bucket_codes.shape[1]
+
+    in_specs = (P(axes, None, None), P(axes, None), P(None, None),
+                P(*((None,) * luts.ndim)), P(None, None))
+    out_specs = (P(None, None), P(None, None))
+
+    def local_search(c_blk, id_blk, visit_rep, luts_rep, coarse_rep):
+        idx = 0
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        off = idx * blocks_per_shard
+        in_shard = (visit_rep >= off) & (visit_rep < off + blocks_per_shard)
+        v_loc = jnp.where(in_shard, visit_rep - off, blocks_per_shard)
+        kk = min(k, local_cand)
+        s, i = kops.ivf_adc_topk(c_blk, id_blk, v_loc, luts_rep, k=kk,
+                                 coarse=coarse_rep,
+                                 steps_per_probe=steps_per_probe,
+                                 use_kernel=use_kernel, lut_dtype=lut_dtype)
+        return _merge_local_topk(s, i, k=k, axes=axes,
+                                 hierarchical=hierarchical)
+
+    return shard_map(local_search, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_replication=False)(
+                         bucket_codes, bucket_ids, visit, luts, coarse)
 
 
 def gspmd_flat_search(corpus, q, *, mesh: Mesh, k: int, metric: str = "cosine",

@@ -63,6 +63,39 @@ def build_buckets(assign, n_clusters: int):
     return buckets, cap
 
 
+def build_block_lists(assign, n_clusters: int, blk: int = 32):
+    """Host-side BLOCK-ALIGNED inverted lists for the bucket-resident kernel.
+
+    assign (N,) -> (slot_rows (B+1, blk) int32, bstart (C,) int32,
+    bcnt (C,) int32, steps_per_probe int). Cluster c owns the ``bcnt[c] =
+    ceil(count_c / blk)`` contiguous rows starting at ``bstart[c]``; its
+    last row is padded with -1 ids, and row B is a shared all-pad block
+    that probe expansion points tail steps at. Pad slack is <= blk-1 per
+    cluster — vs the (max_count - count_c) slack of the fixed-capacity
+    ``build_buckets`` table, the layout that keeps a compressed index's
+    resident bytes honest. ``steps_per_probe`` = max rows any cluster owns
+    (>= 1), the static width of one probe in the kernel's visit table.
+    """
+    assert blk % 8 == 0, blk  # TPU sublane multiple for the code blocks
+    assign = np.asarray(assign)
+    counts = np.bincount(assign, minlength=n_clusters)
+    bcnt = -(-counts // blk)  # ceil; an empty cluster owns 0 blocks
+    spp = max(1, int(bcnt.max()))
+    bstart = np.zeros(n_clusters, np.int64)
+    np.cumsum(bcnt[:-1], out=bstart[1:])
+    B = int(bcnt.sum())
+    slots = np.full(((B + 1) * blk,), -1, np.int32)
+    order = np.argsort(assign, kind="stable")
+    pos = 0
+    for c in range(n_clusters):
+        cnt = int(counts[c])
+        start = int(bstart[c]) * blk
+        slots[start:start + cnt] = order[pos:pos + cnt]
+        pos += cnt
+    return (slots.reshape(B + 1, blk), bstart.astype(np.int32),
+            bcnt.astype(np.int32), spp)
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "k", "nprobe", "cap"))
 def ivf_search(corpus, centroids, buckets, q, *, metric: str, k: int,
                nprobe: int, cap: int, corpus_sq=None):

@@ -10,18 +10,22 @@ Queries stay full precision (asymmetric distance computation, ADC): per
 query, one (m, ksub) lookup table of subspace partial scores is built
 against the codebooks, and a corpus row's score is m table gathers + a sum —
 no decode, no f32 corpus touch. Scoring dispatches through
-``repro.kernels.ops.adc_topk``: the fused Pallas kernel (LUT-resident VMEM,
-streaming code tiles) on TPU, a fused jnp twin on CPU/GPU — both engines
-expose the override as ``use_kernel`` and table precision as ``lut_dtype``
-('bfloat16' halves LUT bytes at a bounded score error; see kernels/pq_adc).
-``pq_topk`` below is the original scanned jnp reference, kept as the
-tiling-invariance oracle and the benchmark baseline.
+``repro.kernels.ops``: flat scans via ``adc_topk`` (fused Pallas pq_adc
+kernel on TPU, fused jnp twin on CPU/GPU) and bucket-probed scans via
+``ivf_adc_topk`` (bucket-resident Pallas ivf_adc kernel / probe-looped
+twin) — both engines expose the override as ``use_kernel`` and table
+precision as ``lut_dtype`` ('bfloat16' halves LUT bytes at a bounded score
+error; 'int8' halves them again with per-(query, subspace) scales; see
+kernels/pq_adc). ``pq_topk`` below is the original scanned jnp reference,
+kept as the tiling-invariance oracle and the benchmark baseline.
 
 Two engines compose out of it:
   * ``PQIndex``       — flat ADC scan over all N codes.
   * ``IVFPQIndex``    — IVF coarse quantizer (repro.core.ivf) over PQ-coded
                         *residuals* (x - centroid), the FAISS IVFADC layout:
-                        probe nprobe buckets, ADC-score only their codes.
+                        probe nprobe buckets, ADC-score only their codes —
+                        stored bucket-major so the fused kernel path's work
+                        scales with nprobe * cap on every metric.
 Both optionally keep the raw corpus to exactly re-rank the top ``refine``
 ADC candidates (recall repair; production stores park raw rows in slow
 storage, so index-resident memory is still codes + codebooks).
@@ -35,7 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distances as D
-from repro.core.ivf import assign_clusters, build_buckets, kmeans
+from repro.core.ivf import (assign_clusters, build_block_lists, build_buckets,
+                            kmeans)
 from repro.kernels import ops as kops
 
 
@@ -209,13 +214,46 @@ def pq_search(codebooks, codes, corpus, q, *, metric: str, k: int,
     return _exact_rerank(corpus, corpus_sq, cand, q, metric=metric, k=k)
 
 
+def expand_visit(probe, bstart, bcnt, *, steps_per_probe: int, pad_block):
+    """Probe ids -> (Q, nprobe * steps_per_probe) visit table of inverted-
+    list block ids. Cluster c's steps are its bstart[c]..bstart[c]+bcnt[c]
+    rows; tail steps of clusters shorter than steps_per_probe blocks point
+    at ``pad_block`` (the shared all-pad row, or -1 for the sharded front
+    which retargets per shard). The single source of the visit contract —
+    used by ivf_pq_search and the DistributedIVFPQ plan."""
+    Q, nprobe = probe.shape
+    base = jnp.take(bstart, probe, axis=0)  # (Q, nprobe)
+    cnt = jnp.take(bcnt, probe, axis=0)
+    r = jnp.arange(steps_per_probe, dtype=jnp.int32)[None, None, :]
+    return jnp.where(r < cnt[:, :, None], base[:, :, None] + r,
+                     pad_block).reshape(Q, nprobe * steps_per_probe)
+
+
+def probe_luts(codebooks, centroids, q, probe, c_scores, *, metric: str):
+    """(luts, coarse) for the bucket-resident dispatch, per metric:
+      dot: one shared (Q, m, ksub) LUT; coarse[q, p] = q . centroid_p
+           (c_scores for dot IS q . centroids, so it's a gather).
+      l2:  per-(query, probe) residual LUTs on t = q - centroid_p,
+           coarse None (ivf_adc_topk zero-fills)."""
+    Q, nprobe = probe.shape
+    m = codebooks.shape[0]
+    if metric == "dot":
+        return (adc_tables(codebooks, q, metric="dot"),
+                jnp.take_along_axis(c_scores, probe, axis=1))
+    t = q[:, None, :] - jnp.take(centroids, probe, axis=0)  # (Q, nprobe, d)
+    luts = adc_tables(codebooks, t.reshape(Q * nprobe, -1), metric="l2")
+    return luts.reshape(Q, nprobe, m, -1), None
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("metric", "k", "nprobe", "cap", "refine",
-                                    "use_kernel", "lut_dtype"))
+                   static_argnames=("metric", "k", "nprobe", "steps_per_probe",
+                                    "refine", "use_kernel", "lut_dtype",
+                                    "scan_all"))
 def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
-                  metric: str, k: int, nprobe: int, cap: int, refine: int = 0,
-                  corpus_sq=None, assign=None, use_kernel=None,
-                  lut_dtype: str = "float32"):
+                  metric: str, k: int, nprobe: int, refine: int = 0,
+                  corpus_sq=None, assign=None, block_lists=None,
+                  steps_per_probe: int = 1, use_kernel=None,
+                  lut_dtype: str = "float32", scan_all: bool = False):
     """IVF-ADC: probe nprobe coarse buckets, ADC-score their residual codes.
 
     codes are PQ codes of (x - centroid[assign]); scoring must therefore use
@@ -225,25 +263,39 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
       l2:  |q - x|^2 = |(q - centroid_p) - residual|^2 -> per-(query, probe)
            LUTs on t = q - centroid_p.
 
-    Backend dispatch: when ops resolves to the fused kernel (TPU or
-    ``use_kernel=True``) and the metric is dot, the coarse offset folds into
-    the flat pq_adc scan as an (m+1)-th subspace — table q.centroids, codes
-    ``assign`` — and ALL residual codes stream through the kernel at memory
-    bandwidth. Bucket pruning then buys nothing (the kernel never gathers),
-    so nprobe only shapes the jnp path; kernel-path candidates are a
-    superset of any nprobe's, recall can only go up. l2's per-(query, probe)
-    LUT geometry cannot flatten to shared codes and always takes the jnp
-    path. ``lut_dtype`` applies to either backend's table gathers/matmul.
-    Returns (scores (Q, k), ids (Q, k)); pad slots are -inf / -1.
-    """
-    Q = q.shape[0]
-    q = jnp.asarray(q, jnp.float32)
-    m = codebooks.shape[0]
-    N = codes.shape[0]
-    kernel = (kops.resolve_adc_backend(use_kernel) == "kernel"
-              and metric == "dot" and assign is not None)
+    Both metrics execute on the bucket-resident fused path
+    (``kops.ivf_adc_topk``: Pallas ivf_adc kernel on TPU, fused jnp twin
+    elsewhere): probes expand into a visit table over the block-aligned
+    layout in ``block_lists`` = (bucket_codes (B+1, blk, m), bucket_ids
+    (B+1, blk), bstart (C,), bcnt (C,)) with ``steps_per_probe`` blocks per
+    probe (IVFPQIndex builds it once at load via
+    repro.core.ivf.build_block_lists), and work scales with the probed
+    candidate count instead of N. nprobe genuinely prunes on EVERY backend
+    and metric. Callers without a prebuilt layout (tests, one-off scans)
+    may pass ``block_lists=None``: the fixed-capacity ``buckets`` table is
+    treated in-graph as a one-block-per-cluster layout (blk = cap,
+    steps_per_probe forced to 1).
 
-    if kernel:
+    ``scan_all=True`` is the explicit escape hatch to the PR-2
+    augmented-LUT scan (dot only, requires row-major ``codes`` +
+    ``assign``): the coarse term folds into the flat adc_topk scan as an
+    (m+1)-th subspace and ALL N codes stream through — candidates are a
+    superset of any nprobe's, at N/candidates times the scoring work.
+    Useful when the probed candidate count approaches N (tiny corpora,
+    recall studies); never the default.
+
+    ``lut_dtype`` ('float32'/'bfloat16'/'int8') applies to either backend's
+    tables. Returns (scores (Q, k), ids (Q, k)); pad slots are -inf / -1.
+    """
+    q = jnp.asarray(q, jnp.float32)
+
+    if scan_all:
+        assert metric == "dot", "scan_all folds the coarse term into the " \
+            "flat scan as an extra ADC subspace — dot/cosine only"
+        assert codes is not None and assign is not None, \
+            "scan_all needs row-major codes + assignments (IVFPQIndex keeps " \
+            "them only when constructed with scan_all=True)"
+        N = codes.shape[0]
         ksub = codebooks.shape[1]
         C = centroids.shape[0]
         qc = jnp.einsum("qd,cd->qc", q, centroids.astype(jnp.float32),
@@ -257,46 +309,38 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
             [codes.astype(jnp.int32), assign.astype(jnp.int32)[:, None]],
             axis=1)  # (N, m+1)
         R = min(max(refine, k), N)
-        s, ids = kops.adc_topk(codes_aug, luts_aug, k=R, use_kernel=True,
-                               lut_dtype=lut_dtype)
+        s, ids = kops.adc_topk(codes_aug, luts_aug, k=R,
+                               use_kernel=use_kernel, lut_dtype=lut_dtype)
         if refine:
             return _exact_rerank(corpus, corpus_sq, ids, q, metric=metric, k=k)
         return _pad_to_k(s[:, :k], ids[:, :k], k)
 
-    dt = jnp.dtype(lut_dtype)
-    c_scores = D.pairwise_scores(q, centroids, metric if metric == "dot" else "l2")
-    _, probe = jax.lax.top_k(c_scores, nprobe)  # (Q, nprobe)
-    cand = jnp.take(buckets, probe, axis=0)  # (Q, nprobe, cap)
-    valid = cand >= 0
-    safe = jnp.where(valid, cand, 0)
-    bucket_codes = jnp.take(codes.astype(jnp.int32), safe, axis=0)  # (Q, nprobe, cap, m)
-
-    if metric == "dot":
-        luts = adc_tables(codebooks, q, metric="dot").astype(dt)  # (Q, m, ksub)
-        flat_codes = bucket_codes.reshape(Q, nprobe * cap, m)
-        s = jnp.zeros((Q, nprobe * cap), jnp.float32)
-        for j in range(m):
-            s = s + jnp.take_along_axis(luts[:, j, :], flat_codes[..., j],
-                                        axis=1).astype(jnp.float32)
-        s = s.reshape(Q, nprobe, cap)
-        offset = jnp.take_along_axis(
-            jnp.einsum("qd,cd->qc", q, centroids.astype(jnp.float32),
-                       preferred_element_type=jnp.float32), probe, axis=1)
-        s = s + offset[:, :, None]
+    if block_lists is None:
+        # in-graph fallback: the fixed-cap bucket table IS a block layout
+        # with one cap-wide block per cluster (+ the shared all-pad block)
+        C, cap = buckets.shape
+        bucket_ids = jnp.concatenate(
+            [buckets, jnp.full((1, cap), -1, buckets.dtype)]).astype(jnp.int32)
+        bucket_codes = jnp.take(codes.astype(jnp.int32),
+                                jnp.clip(bucket_ids, 0), axis=0)
+        bstart = jnp.arange(C, dtype=jnp.int32)
+        bcnt = jnp.ones((C,), jnp.int32)
+        spp = 1
     else:
-        t = q[:, None, :] - jnp.take(centroids, probe, axis=0)  # (Q, nprobe, d)
-        luts = adc_tables(codebooks, t.reshape(Q * nprobe, -1), metric="l2")
-        luts = luts.reshape(Q, nprobe, m, -1).astype(dt)  # (Q, nprobe, m, ksub)
-        s = jnp.zeros((Q, nprobe, cap), jnp.float32)
-        for j in range(m):
-            s = s + jnp.take_along_axis(luts[:, :, j, :], bucket_codes[..., j],
-                                        axis=2).astype(jnp.float32)
-
-    s = jnp.where(valid, s, -jnp.inf).reshape(Q, nprobe * cap)
-    cand = cand.reshape(Q, nprobe * cap)
-    R = min(max(refine, k), nprobe * cap)
-    s, pos = jax.lax.top_k(s, R)
-    ids = jnp.take_along_axis(cand, pos, axis=-1)
+        bucket_codes, bucket_ids, bstart, bcnt = block_lists
+        spp = steps_per_probe
+    blk = bucket_codes.shape[1]
+    c_scores = D.pairwise_scores(q, centroids,
+                                 metric if metric == "dot" else "l2")
+    _, probe = jax.lax.top_k(c_scores, nprobe)  # (Q, nprobe)
+    visit = expand_visit(probe, bstart, bcnt, steps_per_probe=spp,
+                         pad_block=bucket_ids.shape[0] - 1)
+    luts, coarse = probe_luts(codebooks, centroids, q, probe, c_scores,
+                              metric=metric)
+    R = min(max(refine, k), nprobe * spp * blk)
+    s, ids = kops.ivf_adc_topk(bucket_codes, bucket_ids, visit, luts, k=R,
+                               coarse=coarse, steps_per_probe=spp,
+                               use_kernel=use_kernel, lut_dtype=lut_dtype)
     if refine:
         return _exact_rerank(corpus, corpus_sq, ids, q, metric=metric, k=k)
     return _pad_to_k(s[:, :k], ids[:, :k], k)
@@ -400,12 +444,23 @@ class PQIndex:
 
 class IVFPQIndex:
     """IVF coarse quantizer over PQ-coded residuals + exact re-ranking —
-    the memory/recall rung the exact engines cannot reach (FAISS IVFADC)."""
+    the memory/recall rung the exact engines cannot reach (FAISS IVFADC).
+
+    Codes live in the BLOCK-ALIGNED bucket-major layout (``codes_bm``
+    (B+1, blk, m) + ``bucket_ids``/``bstart``/``bcnt``, built once at
+    load/restore via ``repro.core.ivf.build_block_lists``) so the fused
+    bucket-resident kernel path DMAs one probed block per grid program at
+    <= blk-1 pad slack per cluster; the row-major (N, m) copy is
+    reconstructed on demand for snapshots (which stay at the PR-1 format)
+    and kept resident only under ``scan_all=True`` (the all-codes escape
+    hatch also needs ``assign``).
+    """
 
     def __init__(self, metric: str = "cosine", n_clusters: int = 0,
                  nprobe: int = 8, m: int = 8, ksub: int = 256,
                  kmeans_iters: int = 10, refine: int = 32, seed: int = 0,
-                 use_kernel=None, lut_dtype: str = "float32"):
+                 use_kernel=None, lut_dtype: str = "float32",
+                 scan_all: bool = False, block_size: int = 32):
         assert metric in D.METRICS
         assert lut_dtype in kops.ADC_LUT_DTYPES, lut_dtype
         self.metric = metric
@@ -418,19 +473,38 @@ class IVFPQIndex:
         self.seed = seed
         self.use_kernel = use_kernel  # None = auto (Pallas on TPU, jnp twin off)
         self.lut_dtype = lut_dtype
-        self.codebooks = self.codes = self.centroids = self.buckets = None
+        self.scan_all = scan_all  # True: PR-2 all-codes augmented-LUT scan
+        self.block_size = block_size  # inverted-list block width (x8)
+        self.codebooks = self.codes = self.centroids = None
+        self.codes_bm = self.bucket_ids = self.bstart = self.bcnt = None
+        self.spp = 1  # blocks per probe (static visit-table width)
         self.assign = None
         self.corpus = self.corpus_sq = None
-        self.cap = 0
         self.d = 0
+        self.n = 0
 
     @property
     def size(self) -> int:
-        return 0 if self.codes is None else int(self.codes.shape[0])
+        return self.n
+
+    def _finalize_layout(self, codes, assign):
+        """Build the block-aligned layout; keep row-major only for scan_all."""
+        C = self.centroids.shape[0]
+        slots, bstart, bcnt, spp = build_block_lists(assign, C,
+                                                     blk=self.block_size)
+        self.bucket_ids = jnp.asarray(slots)
+        self.bstart = jnp.asarray(bstart)
+        self.bcnt = jnp.asarray(bcnt)
+        self.spp = spp
+        self.codes_bm = jnp.take(codes, jnp.clip(self.bucket_ids, 0), axis=0)
+        self.codes = codes if self.scan_all else None
+        self.assign = (jnp.asarray(assign, jnp.int32)
+                       if self.scan_all else None)
 
     def load(self, vectors):
         x = jnp.asarray(vectors, jnp.float32)
         N, self.d = x.shape
+        self.n = int(N)
         C = self.n_clusters or max(1, int(np.sqrt(N)))
         C = min(C, N)
         corpus, sq = D.preprocess_corpus(x, self.metric)
@@ -439,17 +513,13 @@ class IVFPQIndex:
         cent = kmeans(key, corpus, n_clusters=C, iters=self.kmeans_iters)
         if self.metric == "cosine":
             cent = D.l2_normalize(cent)
-        assign = assign_clusters(corpus, cent)
-        buckets, cap = build_buckets(assign, C)
-        residuals = corpus - jnp.take(cent, assign, axis=0)
+        assign = np.asarray(assign_clusters(corpus, cent))
+        residuals = corpus - jnp.take(cent, jnp.asarray(assign), axis=0)
         self.codebooks = train_pq(jax.random.fold_in(key, 1), residuals,
                                   m=self.m, ksub=self.ksub,
                                   iters=self.kmeans_iters)
-        self.codes = pq_encode(self.codebooks, residuals)
         self.centroids = cent
-        self.buckets = jnp.asarray(buckets)
-        self.assign = jnp.asarray(assign, jnp.int32)
-        self.cap = cap
+        self._finalize_layout(pq_encode(self.codebooks, residuals), assign)
         self.corpus = corpus if self.refine else None
         return self
 
@@ -460,19 +530,47 @@ class IVFPQIndex:
             q = D.l2_normalize(q)
             metric = "dot"
         nprobe = min(self.nprobe, self.centroids.shape[0])
-        return ivf_pq_search(self.codebooks, self.codes, self.centroids,
-                             self.buckets, self.corpus, q, metric=metric,
-                             k=min(k, self.size), nprobe=nprobe, cap=self.cap,
-                             refine=self.refine, corpus_sq=self.corpus_sq,
-                             assign=self.assign, use_kernel=self.use_kernel,
-                             lut_dtype=self.lut_dtype)
+        return ivf_pq_search(
+            self.codebooks, self.codes, self.centroids, None, self.corpus, q,
+            metric=metric, k=min(k, self.size), nprobe=nprobe,
+            refine=self.refine, corpus_sq=self.corpus_sq, assign=self.assign,
+            block_lists=(self.codes_bm, self.bucket_ids, self.bstart,
+                         self.bcnt),
+            steps_per_probe=self.spp, use_kernel=self.use_kernel,
+            lut_dtype=self.lut_dtype, scan_all=self.scan_all)
 
     # ------------------------------------------------------- persistence
+    def _host_assign(self):
+        """(N,) cluster assignment recovered from the block lists."""
+        if self.assign is not None:
+            return np.asarray(self.assign)
+        slots = np.asarray(self.bucket_ids)
+        bstart, bcnt = np.asarray(self.bstart), np.asarray(self.bcnt)
+        assign = np.zeros(self.n, np.int32)
+        for c in range(bstart.shape[0]):
+            rows = slots[bstart[c]:bstart[c] + bcnt[c]].reshape(-1)
+            assign[rows[rows >= 0]] = c
+        return assign
+
+    def _row_major_codes(self):
+        """(N, m) uint8 codes reconstructed from the block layout —
+        snapshots stay at the PR-1 format regardless of ``scan_all``."""
+        if self.codes is not None:
+            return self.codes
+        slots = np.asarray(self.bucket_ids)
+        bm = np.asarray(self.codes_bm)
+        codes = np.zeros((self.n, bm.shape[-1]), np.uint8)
+        codes[slots[slots >= 0]] = bm[slots >= 0]
+        return jnp.asarray(codes)
+
     def state_dict(self):
+        buckets, _cap = build_buckets(self._host_assign(),
+                                      self.centroids.shape[0])
         state = {"engine": np.asarray("ivf_pq"),
                  "metric": np.asarray(self.metric),
-                 "codebooks": self.codebooks, "codes": self.codes,
-                 "centroids": self.centroids, "buckets": self.buckets,
+                 "codebooks": self.codebooks, "codes": self._row_major_codes(),
+                 "centroids": self.centroids,
+                 "buckets": jnp.asarray(buckets),
                  "d": jnp.asarray(self.d, jnp.int32)}
         if self.corpus is not None:
             state["corpus"] = self.corpus
@@ -483,19 +581,18 @@ class IVFPQIndex:
     def load_state(self, state):
         _check_snapshot(state, "ivf_pq", self.metric)
         self.codebooks = jnp.asarray(state["codebooks"], jnp.float32)
-        self.codes = jnp.asarray(state["codes"], jnp.uint8)
+        codes = jnp.asarray(state["codes"], jnp.uint8)
+        self.n = int(codes.shape[0])
         self.centroids = jnp.asarray(state["centroids"], jnp.float32)
-        self.buckets = jnp.asarray(state["buckets"], jnp.int32)
         self.d = int(state["d"])
         # assign is derivable from the bucket table (buckets[c] lists the rows
         # of cluster c), so snapshots stay at the PR-1 format
-        b = np.asarray(self.buckets)
-        assign = np.zeros(self.codes.shape[0], np.int32)
+        b = np.asarray(state["buckets"])
+        assign = np.zeros(self.n, np.int32)
         rows = np.broadcast_to(np.arange(b.shape[0], dtype=np.int32)[:, None],
                                b.shape)
         assign[b[b >= 0]] = rows[b >= 0]
-        self.assign = jnp.asarray(assign)
-        self.cap = int(self.buckets.shape[1])
+        self._finalize_layout(codes, assign)
         self.corpus = (jnp.asarray(state["corpus"], jnp.float32)
                        if "corpus" in state else None)
         self.corpus_sq = (jnp.asarray(state["corpus_sq"], jnp.float32)
@@ -507,9 +604,16 @@ class IVFPQIndex:
         return self
 
     def memory_bytes(self, include_raw: bool = False) -> int:
-        """Index-resident bytes: codes + codebooks + coarse structures."""
-        total = (self.codes.size + self.codebooks.size * 4
-                 + self.centroids.size * 4 + self.buckets.size * 4)
+        """Index-resident bytes: block-aligned codes + slot ids + codebooks
+        + coarse structures (+ row-major codes and assignments under
+        scan_all)."""
+        total = (self.codes_bm.size + self.bucket_ids.size * 4
+                 + self.bstart.size * 4 + self.bcnt.size * 4
+                 + self.codebooks.size * 4 + self.centroids.size * 4)
+        if self.codes is not None:
+            total += self.codes.size
+        if self.assign is not None:
+            total += self.assign.size * 4
         if self.corpus_sq is not None:
             total += self.corpus_sq.size * 4
         if include_raw and self.corpus is not None:

@@ -3,17 +3,21 @@
 flash_attention — the encoder/LM forward ("99% of wall time was SBERT")
 topk_distance   — fused corpus scoring + top-k (the DB query path)
 pq_adc          — fused PQ table-gather scoring + top-k (compressed corpus)
+ivf_adc         — bucket-resident IVF-PQ scoring + top-k (scalar-prefetch
+                  bucket gather; work scales with nprobe * cap, not N)
 hamming         — LSH XOR+popcount ranking
 
 Each <name>.py holds the pl.pallas_call + BlockSpec tiling; ops.py is the
 jit'd public wrapper (padding, layout, backend auto-select); ref.py the
-pure-jnp oracle the tests sweep against. ops.adc_topk is the backend-aware
-ADC dispatcher (TPU -> pq_adc kernel, CPU/GPU -> fused jnp twin) that the
-PQ engines query through.
+pure-jnp oracle the tests sweep against. ops.adc_topk / ops.ivf_adc_topk
+are the backend-aware ADC dispatchers (TPU -> Pallas kernel, CPU/GPU ->
+fused jnp twin) that the PQ engines query through.
 """
 from repro.kernels.ops import (adc_topk, adc_topk_jnp, flash_attention,
-                               hamming, pq_adc, resolve_adc_backend,
-                               topk_distance)
+                               hamming, ivf_adc_topk, ivf_adc_topk_jnp,
+                               pq_adc, quantize_lut_int8,
+                               resolve_adc_backend, topk_distance)
 
-__all__ = ["adc_topk", "adc_topk_jnp", "flash_attention", "hamming", "pq_adc",
+__all__ = ["adc_topk", "adc_topk_jnp", "flash_attention", "hamming",
+           "ivf_adc_topk", "ivf_adc_topk_jnp", "pq_adc", "quantize_lut_int8",
            "resolve_adc_backend", "topk_distance"]

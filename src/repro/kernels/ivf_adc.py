@@ -1,0 +1,190 @@
+"""Bucket-resident fused IVF-ADC + top-k Pallas kernel.
+
+``pq_adc`` streams ALL N codes per query batch — IVF's candidate-set
+reduction (probe nprobe buckets, score only their codes) buys nothing on
+that path, and l2's per-(query, probe) residual LUT geometry cannot flatten
+into it at all. This kernel executes the probe natively, so kernel-path
+work scales with the probed candidate count instead of N.
+
+Layout: inverted lists are BLOCK-ALIGNED (built by
+``repro.core.ivf.build_block_lists``): cluster c owns ``ceil(count_c/blk)``
+contiguous rows of a (B+1, blk) slot table (``bucket_ids`` global row ids,
+``bucket_codes`` their PQ codes), the last row of a cluster padded with -1
+ids, and row B is a shared all-pad block. Pad slack is <= blk-1 per cluster
+instead of the (max - count) of a fixed-capacity bucket table — the layout
+that keeps compressed-index bytes honest. Probing expands OUTSIDE the
+kernel into a ``visit`` table: (Q, T) block ids with T = nprobe *
+steps_per_probe, step t serving probe p = t // steps_per_probe (clusters
+shorter than steps_per_probe blocks point their tail steps at the shared
+pad block).
+
+The gather is driven by scalar prefetch (``pltpu.PrefetchScalarGridSpec``):
+``visit`` is available before the kernel body runs, and the code/id
+``index_map``s read ``visit[q, t]`` to pick which block the program's DMA
+fetches — the classic gather-via-prefetch pattern, no vector gather needed.
+
+Per program: the block's (blk, m) codes expand to a one-hot selector and
+contract against that query's LUT row on the MXU (exactly the pq_adc
+trick), plus a per-(query, probe) scalar ``coarse`` term that carries the
+metric geometry:
+
+  dot: one shared (m, ksub) LUT per query; coarse[q, p] = q . centroid_p
+       (residual codes score q.residual, the centroid term is additive).
+  l2:  per-(query, probe) LUTs on t = q - centroid_p (4-D luts input);
+       coarse[q, p] = 0.
+
+``coarse`` doubles as a probe knockout: callers mask a whole probe by
+adding NEG_INF to its coarse term; pad slots (id -1) knock out in-kernel.
+
+Results fold into a per-query (1, k) VMEM scoreboard across the T grid
+steps (same unrolled knockout top-k as topk_distance), written out at the
+last step. Returned ids are the GLOBAL row ids stored in ``bucket_ids``.
+
+LUT precision (``lut_dtype``): f32, bf16 (2x MXU rate, documented
+m * 2^-8 * max|lut| score bound), or int8 with per-(query, subspace) absmax
+scales — the table is stored and contracted as int8 (int8 x int8 one-hot ->
+int32 partials on the MXU, exact), then the m partials are scaled and summed
+in f32: score = sum_j scale[q, j] * lut_i8[q, j, codes[n, j]]. vs bf16 that
+is another 2x off the resident table bytes; the quantization error per
+subspace is <= scale/2 = max|lut_j| / 254.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pq_adc import quantize_lut_int8
+from repro.kernels.topk_distance import NEG_INF, _select_topk
+
+
+def _ivf_adc_kernel(visit_ref, c_ref, id_ref, l_ref, coarse_ref, *refs,
+                    n_steps: int, k: int, ksub: int, int8: bool):
+    if int8:
+        sc_ref, s_out, i_out, bs_ref, bi_ref = refs
+    else:
+        sc_ref = None
+        s_out, i_out, bs_ref, bi_ref = refs
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        bs_ref[...] = jnp.full_like(bs_ref, NEG_INF)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    codes = c_ref[...][0]  # (blk, m) int32 — the visited block's codes
+    ids = id_ref[...]      # (1, blk) int32 global row ids, -1 = pad slot
+    blk, m = codes.shape
+    # one-hot selector: the LUT gather as an MXU contraction (see pq_adc)
+    sub = jax.lax.broadcasted_iota(jnp.int32, (blk, m, ksub), 2)
+    sel = codes[:, :, None] == sub
+    lut = l_ref[...].reshape(1, m * ksub)
+    if int8:
+        # m int8 x int8 -> int32 sub-contractions (exact), scaled+summed f32
+        scale = sc_ref[...].reshape(1, m)
+        sel8 = sel.astype(jnp.int8)
+        s = None
+        for j in range(m):
+            pj = jax.lax.dot_general(
+                lut[:, j * ksub:(j + 1) * ksub], sel8[:, j, :],
+                (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+            pj = pj.astype(jnp.float32) * scale[:, j][:, None]
+            s = pj if s is None else s + pj
+    else:
+        sel_f = sel.astype(lut.dtype).reshape(blk, m * ksub)
+        s = jax.lax.dot_general(lut, sel_f, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (1, blk)
+    # coarse carries the metric's centroid term AND the caller's probe
+    # knockout (NEG_INF for masked probes); pad slots knock out on id
+    s = s + coarse_ref[...]
+    s = jnp.where(ids >= 0, s, NEG_INF)
+
+    comb_s = jnp.concatenate([bs_ref[...], s], axis=1)
+    comb_i = jnp.concatenate([bi_ref[...], ids], axis=1)
+    bs_ref[...], bi_ref[...] = _select_topk(comb_s, comb_i, k)
+
+    @pl.when(t == n_steps - 1)
+    def _finalize():
+        s_out[...] = bs_ref[...]
+        i_out[...] = bi_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "steps_per_probe", "interpret",
+                                    "lut_dtype"))
+def ivf_adc(bucket_codes, bucket_ids, visit, luts, coarse, *, k: int,
+            steps_per_probe: int = 1, interpret: bool = False,
+            lut_dtype: str = "float32"):
+    """bucket_codes: (B, blk, m) int32; bucket_ids: (B, blk) int32 (-1
+    pad); visit: (Q, T) int32 block ids, T = nprobe * steps_per_probe;
+    luts: (Q, m, ksub) f32 (shared, dot) or (Q, nprobe, m, ksub) f32
+    (per-probe, l2); coarse: (Q, nprobe) f32
+    -> (scores (Q, k) f32, ids (Q, k) int32).
+
+    Grid step (q, t) scores block visit[q, t] for probe
+    p = t // steps_per_probe:
+      score[q, n in block] = sum_j luts[q(, p), j, codes[n, j]] + coarse[q, p]
+    with pad slots (id -1) and anything the caller NEG_INF'd in ``coarse``
+    knocked to NEG_INF. Unfilled scoreboard slots come back NEG_INF / -1
+    (the ops.py dispatcher normalizes them to -inf / -1).
+    """
+    B, blk, m = bucket_codes.shape
+    Q, T = visit.shape
+    spp = steps_per_probe
+    assert T % spp == 0, (T, spp)
+    per_probe = luts.ndim == 4
+    ksub = luts.shape[-1]
+    scales = None
+    if lut_dtype == "int8":
+        luts, scales = quantize_lut_int8(luts)
+    elif jnp.dtype(lut_dtype) != jnp.float32:
+        luts = luts.astype(jnp.dtype(lut_dtype))
+    nprobe = T // spp
+    lut_shape = (Q, nprobe, m * ksub) if per_probe else (Q, m * ksub)
+    luts_flat = luts.reshape(lut_shape)
+
+    # every index_map sees the prefetched visit table as its last arg
+    in_specs = [
+        pl.BlockSpec((1, blk, m), lambda q, t, v: (v[q, t], 0, 0)),
+        pl.BlockSpec((1, blk), lambda q, t, v: (v[q, t], 0)),
+        (pl.BlockSpec((1, 1, m * ksub), lambda q, t, v: (q, t // spp, 0))
+         if per_probe else
+         pl.BlockSpec((1, m * ksub), lambda q, t, v: (q, 0))),
+        pl.BlockSpec((1, 1), lambda q, t, v: (q, t // spp)),
+    ]
+    args = [bucket_codes.astype(jnp.int32), bucket_ids.astype(jnp.int32),
+            luts_flat, coarse.astype(jnp.float32)]
+    if scales is not None:
+        in_specs.append(
+            pl.BlockSpec((1, 1, m), lambda q, t, v: (q, t // spp, 0))
+            if per_probe else
+            pl.BlockSpec((1, m), lambda q, t, v: (q, 0)))
+        args.append(scales)
+
+    kernel = functools.partial(_ivf_adc_kernel, n_steps=T, k=k, ksub=ksub,
+                               int8=scales is not None)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, T),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, k), lambda q, t, v: (q, 0)),
+            pl.BlockSpec((1, k), lambda q, t, v: (q, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(visit.astype(jnp.int32), *args)

@@ -5,12 +5,15 @@ and backend selection: ``interpret=None`` auto-resolves to True off-TPU so
 the same call sites run everywhere (interpret executes the kernel body in
 Python on CPU; on TPU it lowers to Mosaic).
 
-This module is also the backend-aware dispatcher for the PQ ADC hot path
-(``adc_topk``): on TPU the fused Pallas kernel serves real queries; on
-CPU/GPU a fused jnp twin (``adc_topk_jnp``) runs instead — interpret-mode
+This module is also the backend-aware dispatcher for the ADC hot paths:
+``adc_topk`` (flat scan over all codes) and ``ivf_adc_topk``
+(bucket-resident scan over probed inverted-list blocks). On TPU the fused
+Pallas kernels serve real queries; on CPU/GPU fused jnp twins
+(``adc_topk_jnp`` / ``ivf_adc_topk_jnp``) run instead — interpret-mode
 Pallas executes the kernel body block-by-block in Python and is a debugging
 tool, not a serving path. Engines expose the choice as a ``use_kernel``
-kwarg (None = auto by backend) and LUT precision as ``lut_dtype``.
+kwarg (None = auto by backend) and LUT precision as ``lut_dtype``
+('float32' / 'bfloat16' / 'int8' with per-(query, subspace) scales).
 """
 from __future__ import annotations
 
@@ -22,10 +25,13 @@ import numpy as np
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import hamming as _hm
+from repro.kernels import ivf_adc as _ivf
 from repro.kernels import pq_adc as _pq
 from repro.kernels import topk_distance as _tk
+from repro.kernels.pq_adc import quantize_lut_int8
+from repro.kernels.topk_distance import NEG_INF
 
-ADC_LUT_DTYPES = ("float32", "bfloat16")
+ADC_LUT_DTYPES = ("float32", "bfloat16", "int8")
 
 
 def _auto_interpret(interpret):
@@ -181,22 +187,35 @@ def adc_topk_jnp(codes, luts, *, k: int, valid=None, tile: int = 32768,
     ``lut_dtype="bfloat16"`` rounds the table to bf16 (the exact values the
     TPU kernel contracts, so the recall guard tests the real thing) but
     keeps f32 *storage* for the gathers off-TPU — XLA CPU gathers 32-bit
-    lanes faster than 16-bit, so widening is free accuracy-wise. Tiles
+    lanes faster than 16-bit, so widening is free accuracy-wise.
+    ``lut_dtype="int8"`` gathers absmax-quantized int8 entries and applies
+    the per-(query, subspace) scale — value-identical to the kernel's int8
+    per-subspace contraction (same quantizer, same f32 sum order). Tiles
     bound peak score memory at O(Q * tile), mirroring the kernel's VMEM
     streaming.
     """
     N, m = codes.shape
     Q = luts.shape[0]
     k = min(k, N)
-    if jnp.dtype(lut_dtype) != jnp.float32:
+    scales = None
+    if lut_dtype == "bfloat16":
         luts = _round_lut_bf16(luts)
+    elif lut_dtype == "int8":
+        luts, scales = quantize_lut_int8(luts)
+
+    def gather(j, idx_j):
+        g = jnp.take(luts[:, j, :], idx_j, axis=1)
+        if scales is None:
+            return g
+        return g.astype(jnp.float32) * scales[:, j][:, None]
+
     idx = codes.astype(jnp.int32).T  # (m, N): per-subspace rows contiguous
     best = None
     for start in range(0, N, tile):  # static unroll: N // tile + 1 fused blocks
         stop = min(start + tile, N)
-        total = jnp.take(luts[:, 0, :], idx[0, start:stop], axis=1)
+        total = gather(0, idx[0, start:stop])
         for j in range(1, m):
-            total = total + jnp.take(luts[:, j, :], idx[j, start:stop], axis=1)
+            total = total + gather(j, idx[j, start:stop])
         if valid is not None:
             total = jnp.where(valid[start:stop][None, :], total, -jnp.inf)
         s, i = _twolevel_topk(total, min(k, stop - start))
@@ -222,24 +241,148 @@ def adc_topk(codes, luts, *, k: int, valid=None, use_kernel=None,
 
     codes: (N, m) uint8/int32; luts: (Q, m, ksub) f32. TPU (or
     ``use_kernel=True``) routes to the fused Pallas kernel, everything else
-    to the fused jnp twin; both honor ``lut_dtype`` ('float32'/'bfloat16')
-    and a row ``valid`` mask, and return (scores (Q, k) f32, ids (Q, k)
-    int32) with identical semantics.
+    to the fused jnp twin; both honor ``lut_dtype``
+    ('float32'/'bfloat16'/'int8') and a row ``valid`` mask, and return
+    (scores (Q, k) f32, ids (Q, k) int32) with identical semantics.
 
     When called with concrete (non-traced) arrays, the bf16 rounding runs
     as its own executable before the scan — see _round_lut_bf16; inside an
     enclosing jit the rounding inlines into the scan instead (same values,
-    slower on CPU).
+    slower on CPU). int8 quantization stays in-graph on both backends (its
+    output changes dtype, so there is no free f32-lane widening to exploit).
     """
     assert lut_dtype in ADC_LUT_DTYPES, lut_dtype
     if resolve_adc_backend(use_kernel) == "kernel":
         return pq_adc(codes, luts, k=k, valid=valid, blk_n=blk_n,
                       interpret=interpret, lut_dtype=lut_dtype)
-    if lut_dtype != "float32" and not isinstance(luts, jax.core.Tracer):
+    if lut_dtype == "bfloat16" and not isinstance(luts, jax.core.Tracer):
         luts = _round_lut_bf16(luts)  # materialize at the jit boundary
         lut_dtype = "float32"
     return adc_topk_jnp(codes, luts, k=k, valid=valid, tile=tile,
                         lut_dtype=lut_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "steps_per_probe", "lut_dtype",
+                                    "probe_chunk"))
+def ivf_adc_topk_jnp(bucket_codes, bucket_ids, visit, luts, coarse, *,
+                     k: int, steps_per_probe: int = 1,
+                     lut_dtype: str = "float32", probe_chunk=None):
+    """Fused jnp twin of the ivf_adc kernel: a static-unrolled loop over
+    CHUNKS of probes, each iteration one fused gather+sum+select over that
+    chunk's block runs, folded into a running (Q, k) scoreboard.
+
+    The chunk size bounds peak memory at O(Q * probe_chunk *
+    steps_per_probe * blk) candidate slots (auto-sized to the same ~32k
+    slot budget as adc_topk_jnp's row tiles) — the full candidate set of a
+    large-nprobe query never materializes at once, and the block-aligned
+    slots carry <= blk-1 pad slack per cluster instead of the bucket-table
+    slack the old (Q, nprobe, cap, m) gather path paid. One fused XLA
+    program per chunk keeps the CPU path at big-gather speed instead of
+    per-probe op overhead.
+
+    bucket_codes: (B, blk, m); bucket_ids: (B, blk) int32 (-1 pad); visit:
+    (Q, T) int32 block ids, T = nprobe * steps_per_probe (see
+    kernels/ivf_adc for the layout); luts: (Q, m, ksub) (shared) or
+    (Q, nprobe, m, ksub) (per-probe); coarse: (Q, nprobe) f32 (centroid
+    term + probe knockout). Same NEG_INF sentinel semantics as the kernel
+    (dispatcher normalizes).
+    """
+    B, blk, m = bucket_codes.shape
+    Q, T = visit.shape
+    spp = steps_per_probe
+    nprobe = T // spp
+    run = spp * blk  # candidate slots per probe
+    per_probe = luts.ndim == 4
+    scales = None
+    if lut_dtype == "bfloat16":
+        luts = _round_lut_bf16(luts)
+    elif lut_dtype == "int8":
+        luts, scales = quantize_lut_int8(luts)
+    if probe_chunk is None:
+        probe_chunk = max(1, min(nprobe, 32768 // run))
+    codes_i = bucket_codes.astype(jnp.int32)
+    best_s = jnp.full((Q, k), NEG_INF, jnp.float32)
+    best_i = jnp.full((Q, k), -1, jnp.int32)
+    for start in range(0, nprobe, probe_chunk):  # static unroll
+        stop = min(start + probe_chunk, nprobe)
+        pc = stop - start
+        v = visit[:, start * spp:stop * spp]  # (Q, pc*spp)
+        cp = jnp.take(codes_i, v, axis=0).reshape(Q, pc, run, m)
+        ip = jnp.take(bucket_ids, v, axis=0).reshape(Q, pc, run)
+        s = None
+        for j in range(m):
+            if per_probe:
+                g = jnp.take_along_axis(luts[:, start:stop, j, :],
+                                        cp[..., j], axis=2)  # (Q, pc, run)
+                if scales is not None:
+                    g = (g.astype(jnp.float32)
+                         * scales[:, start:stop, j][:, :, None])
+            else:
+                g = jnp.take_along_axis(
+                    luts[:, j, :], cp[..., j].reshape(Q, pc * run),
+                    axis=1).reshape(Q, pc, run)
+                if scales is not None:
+                    g = g.astype(jnp.float32) * scales[:, j][:, None, None]
+            s = g if s is None else s + g
+        s = s.astype(jnp.float32) + coarse[:, start:stop][:, :, None]
+        s = jnp.where(ip >= 0, s, NEG_INF).reshape(Q, pc * run)
+        ip = ip.reshape(Q, pc * run)
+        ts, pos = jax.lax.top_k(s, min(k, pc * run))
+        ti = jnp.take_along_axis(ip, pos, axis=-1)
+        cs = jnp.concatenate([best_s, ts], axis=1)
+        ci = jnp.concatenate([best_i, ti], axis=1)
+        best_s, pos = jax.lax.top_k(cs, k)
+        best_i = jnp.take_along_axis(ci, pos, axis=-1)
+    return best_s, best_i
+
+
+def ivf_adc_topk(bucket_codes, bucket_ids, visit, luts, *, k: int,
+                 coarse=None, steps_per_probe: int = 1, use_kernel=None,
+                 lut_dtype: str = "float32", interpret=None):
+    """Backend-aware bucket-resident IVF-ADC top-k — the IVF-PQ hot-path
+    entry. Work scales with the probed candidate count, not N.
+
+    bucket_codes: (B, blk, m) uint8/int32 codes in the BLOCK-ALIGNED
+    bucket-major layout (row b of ``bucket_ids`` names the global row each
+    slot holds, -1 = pad; see repro.core.ivf.build_block_lists); visit:
+    (Q, T) int32 block ids with T = nprobe * steps_per_probe, step t
+    serving probe t // steps_per_probe (tail steps of short clusters point
+    at an all-pad block); luts: (Q, m, ksub) f32 shared tables (dot — pass
+    the centroid term via ``coarse``) or (Q, nprobe, m, ksub) per-probe
+    residual tables (l2); ``coarse``: optional (Q, nprobe) f32 additive
+    per-probe term — callers also use it as a probe knockout by passing
+    NEG_INF entries (sharded serving masks off-shard probes this way).
+
+    TPU (or ``use_kernel=True``) runs the Pallas ivf_adc kernel
+    (scalar-prefetch block gather), else the fused jnp twin. Both honor
+    ``lut_dtype`` ('float32'/'bfloat16'/'int8'). Unfilled/knocked-out
+    slots are normalized to (-inf, -1) — anything at or below NEG_INF/2 is
+    treated as knocked out (real ADC scores live many orders of magnitude
+    above). Returns (scores (Q, k) f32, ids (Q, k) int32) with global row
+    ids.
+    """
+    assert lut_dtype in ADC_LUT_DTYPES, lut_dtype
+    Q, T = visit.shape
+    nprobe = T // steps_per_probe
+    if coarse is None:
+        coarse = jnp.zeros((Q, nprobe), jnp.float32)
+    if resolve_adc_backend(use_kernel) == "kernel":
+        s, i = _ivf.ivf_adc(bucket_codes, bucket_ids.astype(jnp.int32),
+                            visit.astype(jnp.int32), luts, coarse, k=k,
+                            steps_per_probe=steps_per_probe,
+                            interpret=_auto_interpret(interpret),
+                            lut_dtype=lut_dtype)
+    else:
+        if lut_dtype == "bfloat16" and not isinstance(luts, jax.core.Tracer):
+            luts = _round_lut_bf16(luts)  # materialize at the jit boundary
+            lut_dtype = "float32"
+        s, i = ivf_adc_topk_jnp(bucket_codes, bucket_ids.astype(jnp.int32),
+                                visit.astype(jnp.int32), luts, coarse, k=k,
+                                steps_per_probe=steps_per_probe,
+                                lut_dtype=lut_dtype)
+    bad = s <= 0.5 * NEG_INF
+    return jnp.where(bad, -jnp.inf, s), jnp.where(bad, -1, i)
 
 
 def hamming(q_codes, c_codes, *, blk_n: int = 1024, interpret=None):

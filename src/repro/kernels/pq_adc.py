@@ -24,6 +24,17 @@ bf16 rounding of each table entry: |score - score_f32| <= m * 2^-8 *
 max|lut| (each of the m gathered partials carries at most half-ulp bf16
 error, 2^-9 relative). Tests pin this bound against the f32 oracle.
 
+``lut_dtype="int8"`` drops the resident table another 2x below bf16: each
+(query, subspace) LUT row is absmax-quantized (``quantize_lut_int8``) and
+the flattened one-hot contraction splits into m per-subspace int8 x int8 ->
+int32 MXU contractions — EXACT integer partials, since the one-hot just
+selects one int8 entry — which are then scaled by the f32 per-(query,
+subspace) scale and summed:
+    score = sum_j scale[q, j] * lut_i8[q, j, codes[n, j]].
+The split is what makes per-subspace scales sound: one flattened int8
+matmul would sum partials that carry different scales. Quantization error
+is <= scale/2 = max|lut_j| / 254 per subspace (sum: m * max|lut| / 254).
+
 Grid: (N / blk_n,), sequential on TPU. ``bias`` (N,) folds pad-row knockout
 into the score add (built by ops.py).
 """
@@ -39,8 +50,28 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.topk_distance import NEG_INF, _select_topk
 
 
-def _pq_adc_kernel(c_ref, l_ref, bias_ref, s_out, i_out, bs_ref, bi_ref, *,
-                   blk_n: int, n_blocks: int, k: int, ksub: int):
+def quantize_lut_int8(luts):
+    """Per-(query, subspace) absmax int8 quantization of ADC tables.
+
+    luts: (..., m, ksub) f32 -> (lut_i8 (..., m, ksub) int8, scales (..., m)
+    f32) with lut_i8 = round(lut / scale) in [-127, 127] and
+    scale = max|lut_row| / 127. Shared by the flat pq_adc and the
+    bucket-resident ivf_adc kernels and their jnp twins, so every backend
+    quantizes bit-identically.
+    """
+    absmax = jnp.max(jnp.abs(luts), axis=-1)  # (..., m)
+    scales = (jnp.maximum(absmax, 1e-30) / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(luts / scales[..., None]), -127.0, 127.0)
+    return q.astype(jnp.int8), scales
+
+
+def _pq_adc_kernel(c_ref, l_ref, bias_ref, *refs,
+                   blk_n: int, n_blocks: int, k: int, ksub: int, int8: bool):
+    if int8:
+        sc_ref, s_out, i_out, bs_ref, bi_ref = refs
+    else:
+        sc_ref = None
+        s_out, i_out, bs_ref, bi_ref = refs
     ni = pl.program_id(0)
 
     @pl.when(ni == 0)
@@ -49,16 +80,29 @@ def _pq_adc_kernel(c_ref, l_ref, bias_ref, s_out, i_out, bs_ref, bi_ref, *,
         bi_ref[...] = jnp.full_like(bi_ref, -1)
 
     codes = c_ref[...]  # (blk_n, m) int32
-    lut = l_ref[...]    # (Q, m*ksub) f32 or bf16
+    lut = l_ref[...]    # (Q, m*ksub) f32 / bf16 / int8
     m = codes.shape[1]
     # one-hot expansion: sel[n, j, c] = (codes[n, j] == c), collapsed to the
     # flattened (blk_n, m*ksub) LUT axis — the gather becomes an MXU matmul.
     # int8 is the cheapest VMEM materialization of the selector; it widens to
     # the LUT dtype at the contraction (bf16 LUTs hit the 2x MXU rate).
     sub = jax.lax.broadcasted_iota(jnp.int32, (blk_n, m, ksub), 2)
-    sel = (codes[:, :, None] == sub).astype(jnp.int8).reshape(blk_n, m * ksub)
-    s = jax.lax.dot_general(lut, sel.astype(lut.dtype), (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # (Q, blk_n)
+    sel = (codes[:, :, None] == sub).astype(jnp.int8)
+    if int8:
+        # per-subspace int8 x int8 -> int32 (exact), then f32 scale + sum —
+        # one flattened matmul would mix subspaces with different scales
+        scale = sc_ref[...]  # (Q, m) f32
+        s = None
+        for j in range(m):
+            pj = jax.lax.dot_general(
+                lut[:, j * ksub:(j + 1) * ksub], sel[:, j, :],
+                (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+            pj = pj.astype(jnp.float32) * scale[:, j][:, None]
+            s = pj if s is None else s + pj
+    else:
+        sel_f = sel.reshape(blk_n, m * ksub).astype(lut.dtype)
+        s = jax.lax.dot_general(lut, sel_f, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (Q, blk_n)
     s = s + bias_ref[...][None, :]
     Q = s.shape[0]
     ids = ni * blk_n + jax.lax.broadcasted_iota(jnp.int32, (Q, blk_n), 1)
@@ -83,7 +127,9 @@ def pq_adc(codes, luts, *, k: int, bias=None, blk_n: int = 256,
     score[q, n] = sum_j luts[q, j, codes[n, j]] + bias[n]. N must divide by
     blk_n; ``bias`` carries the pad/invalid-row knockout (ops.py builds it).
     ``lut_dtype="bfloat16"`` contracts the table in bf16 (f32 accumulate,
-    2x MXU rate; parity bound documented in the module docstring).
+    2x MXU rate); ``"int8"`` stores it as absmax-quantized int8 with
+    per-(query, subspace) f32 scales (parity bounds in the module
+    docstring).
     """
     N, m = codes.shape
     Q, m_l, ksub = luts.shape
@@ -93,18 +139,29 @@ def pq_adc(codes, luts, *, k: int, bias=None, blk_n: int = 256,
     n_blocks = N // blk_n
     if bias is None:
         bias = jnp.zeros((N,), jnp.float32)
-    luts_flat = luts.astype(jnp.dtype(lut_dtype)).reshape(Q, m * ksub)
+    scales = None
+    if lut_dtype == "int8":
+        luts, scales = quantize_lut_int8(luts)
+        luts_flat = luts.reshape(Q, m * ksub)
+    else:
+        luts_flat = luts.astype(jnp.dtype(lut_dtype)).reshape(Q, m * ksub)
+
+    in_specs = [
+        pl.BlockSpec((blk_n, m), lambda n: (n, 0)),
+        pl.BlockSpec((Q, m * ksub), lambda n: (0, 0)),
+        pl.BlockSpec((blk_n,), lambda n: (n,)),
+    ]
+    args = [codes.astype(jnp.int32), luts_flat, bias]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((Q, m), lambda n: (0, 0)))
+        args.append(scales)
 
     kernel = functools.partial(_pq_adc_kernel, blk_n=blk_n, n_blocks=n_blocks,
-                               k=k, ksub=ksub)
+                               k=k, ksub=ksub, int8=scales is not None)
     return pl.pallas_call(
         kernel,
         grid=(n_blocks,),
-        in_specs=[
-            pl.BlockSpec((blk_n, m), lambda n: (n, 0)),
-            pl.BlockSpec((Q, m * ksub), lambda n: (0, 0)),
-            pl.BlockSpec((blk_n,), lambda n: (n,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((Q, k), lambda n: (0, 0)),
             pl.BlockSpec((Q, k), lambda n: (0, 0)),
@@ -118,4 +175,4 @@ def pq_adc(codes, luts, *, k: int, bias=None, blk_n: int = 256,
             pltpu.VMEM((Q, k), jnp.int32),
         ],
         interpret=interpret,
-    )(codes.astype(jnp.int32), luts_flat, bias)
+    )(*args)

@@ -58,6 +58,48 @@ def pq_adc_ref(codes, luts, *, k: int, bias=None):
     return s, i.astype(jnp.int32)
 
 
+def ivf_adc_ref(bucket_codes, bucket_ids, visit, luts, coarse=None, *,
+                k: int, steps_per_probe: int = 1):
+    """Bucket-probed ADC oracle — the materialize-everything gather path.
+
+    bucket_codes: (B, blk, m) int; bucket_ids: (B, blk) int32 (-1 pad);
+    visit: (Q, T) int32 block ids, T = nprobe * steps_per_probe (step t
+    serves probe t // steps_per_probe); luts: (Q, m, ksub) shared or
+    (Q, nprobe, m, ksub) per-probe f32; coarse: optional (Q, nprobe)
+    additive term -> (scores (Q, k), ids (Q, k)) with knocked-out /
+    unfilled slots normalized to (-inf, -1) — the same contract
+    ops.ivf_adc_topk returns after its NEG_INF normalization. Gathers the
+    full (Q, T, blk, m) code tensor — the memory behavior the
+    bucket-resident kernel exists to avoid; kept as the correctness
+    contract and the benchmark baseline.
+    """
+    NEG_INF = -1e30
+    Q, T = visit.shape
+    B, blk, m = bucket_codes.shape
+    nprobe = T // steps_per_probe
+    codes = jnp.take(jnp.asarray(bucket_codes, jnp.int32), visit, axis=0)
+    ids = jnp.take(bucket_ids, visit, axis=0)  # (Q, T, blk)
+    if luts.ndim == 3:
+        luts = jnp.broadcast_to(luts[:, None], (Q, nprobe) + luts.shape[1:])
+    luts = jnp.repeat(luts, steps_per_probe, axis=1)  # (Q, T, m, ksub)
+    scores = sum(
+        jnp.take_along_axis(luts[:, :, j, :], codes[..., j], axis=2)
+        for j in range(m))  # (Q, T, blk)
+    if coarse is not None:
+        scores = scores + jnp.repeat(coarse, steps_per_probe, axis=1)[:, :, None]
+    scores = jnp.where(ids >= 0, scores, NEG_INF)
+    flat_s = scores.reshape(Q, T * blk)
+    flat_i = ids.reshape(Q, T * blk)
+    s, pos = jax.lax.top_k(flat_s, min(k, T * blk))
+    i = jnp.take_along_axis(flat_i, pos, axis=-1)
+    if s.shape[-1] < k:
+        pad = k - s.shape[-1]
+        s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        i = jnp.pad(i, ((0, 0), (0, pad)), constant_values=-1)
+    bad = s <= 0.5 * NEG_INF
+    return jnp.where(bad, -jnp.inf, s), jnp.where(bad, -1, i)
+
+
 def hamming_ref(q_codes, c_codes):
     """q: (T, Q, W) uint32; c: (T, N, W) uint32 -> (Q, N) int32 min-Hamming."""
     x = jnp.bitwise_xor(q_codes[:, :, None, :], c_codes[:, None, :, :])

@@ -23,7 +23,10 @@ A pumped micro-batch takes one trip through the compiled query plan:
 
 ``latency_stats`` reports enqueue->result p50/p99 per request plus the
 DB's plan-cache counters, so a serving run can prove it stopped retracing
-(misses stay flat while hits grow).
+(misses stay flat while hits grow). The counters come from the shared
+``repro.core.db._PlanLedger``, which every front implements — the engine
+serves ``VectorDB`` and the mesh fronts (``DistributedVectorDB``,
+``DistributedPQ``, ``DistributedIVFPQ``) interchangeably.
 """
 from __future__ import annotations
 

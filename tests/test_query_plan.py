@@ -85,3 +85,56 @@ def test_query_engine_surfaces_plan_stats(rng):
 
 def test_buckets_shared_between_db_and_serve():
     assert QueryEngine.BUCKETS == PLAN_BUCKETS
+
+
+# --------------------------------------------------- mesh query fronts
+# a 1-device mesh exercises the shard_map plan path in-process (the real
+# multi-device programs run in tests/test_distributed.py subprocesses)
+
+def _one_dev_mesh():
+    import jax
+    return jax.make_mesh((1,), ("data",))
+
+
+def test_distributed_fronts_bucketize_and_count_plans(rng):
+    """ROADMAP item: the mesh fronts reuse the PLAN_BUCKETS padding so
+    repeated batch shapes stop retracing — same ledger contract as
+    VectorDB, surfaced through QueryEngine.latency_stats."""
+    from repro.core import DistributedIVFPQ, DistributedPQ, DistributedVectorDB
+
+    mesh = _one_dev_mesh()
+    corpus = _corpus(rng, n=256)
+    q = corpus[:5] + 0.01 * rng.normal(size=(5, 32)).astype(np.float32)
+    fronts = [DistributedVectorDB(mesh, metric="cosine").load(corpus),
+              DistributedPQ(mesh, metric="cosine").load(corpus),
+              DistributedIVFPQ(mesh, metric="cosine", nprobe=4).load(corpus)]
+    for db in fronts:
+        s0, i0 = db.query(q, k=7, bucketize=False)
+        s1, i1 = db.query(q, k=7)  # pads 5 -> bucket 8, slices back
+        assert s1.shape == (5, 7) and i1.shape == (5, 7), db.engine_name
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-5)
+        assert db.plan_stats == {"hits": 0, "misses": 1}
+        db.query(corpus[:7], k=7)  # 7 -> same bucket 8 -> hit
+        db.query(corpus[:8], k=7)  # 8 -> same bucket 8 -> hit
+        assert db.plan_stats == {"hits": 2, "misses": 1}, db.engine_name
+        db.query(q, k=3)           # k changes the plan -> miss
+        assert db.plan_stats == {"hits": 2, "misses": 2}
+
+
+def test_query_engine_surfaces_mesh_plan_stats(rng):
+    from repro.core import DistributedPQ
+
+    db = DistributedPQ(_one_dev_mesh(), metric="cosine").load(_corpus(rng))
+    eng = QueryEngine(db, max_batch=4, max_wait_ms=0.0)
+    for i in range(8):
+        eng.submit(np.asarray(db_query_vec(rng)), k=3)
+        eng.pump(force=True)
+    st = eng.latency_stats()
+    assert st["engine"] == "dist_pq"
+    assert st["plan_misses"] >= 1
+    assert st["plan_hits"] + st["plan_misses"] == 8
+
+
+def db_query_vec(rng, d=32):
+    return rng.normal(size=(d,)).astype(np.float32)
