@@ -59,9 +59,15 @@ def run(sizes=(100, 1000, 10_000), noise: float = 0.15, encoder=None, seed=0):
         for engine, metric, kw in ENGINES:
             t0 = time.perf_counter()
             db = VectorDB(engine, metric=metric, **kw).load(p_emb)
+            sync = getattr(db.index, "_sync", None)
+            if sync is not None:
+                sync()  # mutable engines upload device mirrors lazily —
+                # charge that to insert time, not the first query
             ready = getattr(db.index, "corpus", None)
             if ready is None:
-                ready = db.index.codes
+                ready = getattr(db.index, "codes", None)
+            if ready is None:
+                ready = db.index.codes_bm
             jax.block_until_ready(ready)
             t_insert = time.perf_counter() - t0
             t0 = time.perf_counter()

@@ -13,6 +13,11 @@ Measures (CPU walltime; the TPU numbers live in the dry-run roofline):
     nprobe sweep, the f32/bf16/int8 LUT ladder, and the served ``ivf_pq``
     engines (the second CI recall gate); the committed full-size run is
     ``BENCH_ivf_adc.json``,
+  * the mutation lifecycle (``mutation_paths``): sustained insert QPS
+    (amortized vs spill-heavy), query QPS at 0/10/30% tombstones +
+    compact() cost, 1:8 write/read interleaved serving, and recall@10
+    after 20% churn vs a rebuilt-from-scratch index (the third CI gate);
+    the committed full-size run is ``BENCH_mutation.json``,
   * ``DistributedPQ`` per-device resident bytes vs a replicated f32 corpus
     on a forced multi-device host mesh (subprocess).
 
@@ -284,6 +289,131 @@ def ivf_adc_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
     return rows
 
 
+def mutation_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
+                   k: int = 10, m: int = 8, seed: int = 0):
+    """The streaming-ingestion scenario the mutation lifecycle opens:
+
+      * sustained insert QPS — amortized (capacity pre-reserved, every
+        batch appends into existing buckets) vs spill-heavy (no reserve:
+        the stream keeps overflowing capacity buckets and growing spp),
+      * query QPS at 0 / 10 / 30% tombstones (deleted slots ride through
+        the fused kernel as pad — the probed work does NOT shrink until
+        compaction), then compact() cost and the post-compact query rate,
+      * interleaved serving: QueryEngine absorbing writes and reads 1:8
+        under the read-your-writes pump,
+      * recall@10 after 20% churn (delete 20%, insert 20% new) vs a
+        REBUILT-from-scratch index on the same live corpus — the CI gate:
+        churned recall must stay >= 0.95x rebuilt (frozen
+        centroids/codebooks never saw the inserted rows).
+    """
+    from repro.serve import QueryEngine
+
+    rng = np.random.default_rng(seed)
+    n_clusters = max(8, N // 100)
+    # one pool, one set of cluster centers: the insert stream is drawn from
+    # the SAME distribution the codebooks trained on (steady-state churn;
+    # distribution SHIFT is the retrain trigger pq.stale_fraction flags)
+    pool = _clustered(rng, 2 * N, d, n_clusters)
+    corpus, extra = pool[:N], pool[N:]
+    q = _clustered(rng, n_queries, d, n_clusters)
+    kw = dict(metric="cosine", m=m, refine=0, compact_threshold=None)
+    rows = []
+
+    # ---- sustained insert QPS: amortized vs spill-heavy
+    half, batch = N // 2, 50
+    for label, pre_reserve in (("amortized", True), ("spill_heavy", False)):
+        db = VectorDB("ivf_pq", **kw).load(corpus[:half])
+        if pre_reserve:
+            db.reserve(half + batch, 8)
+        # compile this db's encode-path shapes outside the timer (the
+        # eager centroid ops key on C, so a shared warm db won't do)
+        db.insert(extra[:batch])
+        t0 = time.perf_counter()
+        for s0 in range(half, N, batch):
+            db.insert(corpus[s0:s0 + batch])
+        dt = time.perf_counter() - t0
+        rows.append({"path": f"insert_qps_{label}", "N": N,
+                     "rows_per_s": (N - half) / dt,
+                     "plan_generation": db.plan_generation})
+
+    # ---- query QPS vs tombstone fraction, then compact cost
+    db = VectorDB("ivf_pq", nprobe=8, **kw).load(corpus)
+    order = rng.permutation(N)
+    deleted = 0
+    for frac in (0.0, 0.1, 0.3):
+        want = int(N * frac)
+        if want > deleted:
+            db.delete(order[deleted:want])
+            deleted = want
+        fn = lambda: db.query(q, k=k, bucketize=False)
+        jax.block_until_ready(fn())  # compile + sync
+        wall = float("inf")
+        for _ in range(10):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            wall = min(wall, time.perf_counter() - t0)
+        rows.append({"path": f"query_qps_tomb{int(frac * 100)}", "N": N,
+                     "qps": n_queries / wall,
+                     "tombstone_fraction": db.index.layout.tombstone_fraction})
+    t0 = time.perf_counter()
+    db.compact()
+    compact_s = time.perf_counter() - t0
+    jax.block_until_ready(db.query(q, k=k, bucketize=False))  # re-sync
+    wall = float("inf")
+    for _ in range(10):
+        t0 = time.perf_counter()
+        jax.block_until_ready(db.query(q, k=k, bucketize=False))
+        wall = min(wall, time.perf_counter() - t0)
+    rows.append({"path": "compact", "N": N, "compact_s": compact_s,
+                 "qps_after": n_queries / wall})
+
+    # ---- interleaved serving, writes:reads 1:8
+    db = VectorDB("ivf_pq", nprobe=8, **kw).load(corpus)
+    db.reserve(2048, 8)
+    eng = QueryEngine(db, max_batch=8, max_wait_ms=0.0)
+    t0 = time.perf_counter()
+    served = 0
+    for i in range(64):
+        eng.submit_write("insert", extra[i * 8:(i + 1) * 8])
+        for j in range(8):
+            eng.submit(q[(i * 8 + j) % n_queries], k=k)
+        served += eng.pump(force=True)
+    served += eng.drain()
+    dt = time.perf_counter() - t0
+    st = eng.latency_stats()
+    rows.append({"path": "interleaved_1to8", "N": N,
+                 "reads_per_s": served / dt,
+                 "write_rows_per_s": st["write_inserts"] / dt,
+                 "p50_ms": st["p50_ms"],
+                 "plan_misses": st["plan_misses"]})
+
+    # ---- 20% churn recall vs rebuilt-from-scratch oracle (the CI gate)
+    gate_kw = dict(metric="cosine", m=m, nprobe=32, refine=128)
+    db = VectorDB("ivf_pq", **gate_kw).load(corpus)
+    churn = int(0.2 * N)
+    db.delete(order[:churn])
+    new_ids = db.insert(extra[:churn])
+    live = np.concatenate([order[churn:], new_ids])
+    live_rows = np.concatenate([corpus[order[churn:]], extra[:churn]])
+    exact = VectorDB("flat", metric="cosine").load(live_rows)
+    _, eidx = exact.query(q, k=k, bucketize=False)
+    eids = live[np.asarray(eidx)]  # exact ids in the churned id space
+    rebuilt = VectorDB("ivf_pq", **gate_kw).load(live_rows)
+
+    def recall(ids, ref):
+        ids = np.asarray(ids)
+        return float(np.mean([len(set(ids[i]) & set(ref[i])) / k
+                              for i in range(n_queries)]))
+
+    r_churn = recall(db.query(q, k=k, bucketize=False)[1], eids)
+    r_rebuilt = recall(rebuilt.query(q, k=k, bucketize=False)[1],
+                       np.asarray(eidx))
+    rows.append({"path": "recall_churn20", "N": N, "recall_at_10": r_churn,
+                 "recall_rebuilt": r_rebuilt,
+                 "ratio_vs_rebuilt": r_churn / max(r_rebuilt, 1e-9)})
+    return rows
+
+
 _DIST_PQ_SNIPPET = """
 import json
 import jax, numpy as np
@@ -367,6 +497,14 @@ def main(quick: bool = False, json_path: str | None = None):
     for r in results["ivf_adc"]:
         print(f"ivf_adc,{r['path']},{r['metric']},{r['nprobe']},{r['N']},"
               f"{r['qps']:.1f},{r['recall_at_10']:.4f}")
+    results["mutation"] = mutation_paths(
+        N=2000 if quick else 10_000, n_queries=64 if quick else 256)
+    print("name,path,N,fields")
+    for r in results["mutation"]:
+        extras = ",".join(f"{kk}={vv:.4f}" if isinstance(vv, float)
+                          else f"{kk}={vv}" for kk, vv in r.items()
+                          if kk not in ("path", "N"))
+        print(f"mutation,{r['path']},{r['N']},{extras}")
     results["distributed_pq"] = distributed_pq_memory(
         shards=4, N=2048 if quick else 4096)
     dp = results["distributed_pq"]

@@ -88,6 +88,43 @@ def main():
         print(f"  nprobe={nprobe:2d} acc={acc:.3f} p50={st['p50_ms']:.2f}ms "
               f"plans: {st['plan_hits']} hits / {st['plan_misses']} misses")
 
+    # the MUTATION LIFECYCLE: a database, not a frozen index. Writes go
+    # through the serving engine's queue (read-your-writes: a query
+    # submitted after a write observes it), deletes are tombstones the
+    # fused kernel scores as pad (zero kernel changes), compact() repacks
+    # the block lists without changing compiled shapes, and a snapshot of
+    # the mutated index round-trips exactly — tombstones stay deleted.
+    import tempfile
+    db = VectorDB("ivf_pq", metric="cosine", m=8, ksub=64, nprobe=16)
+    db.load_texts(passages, encoder)
+    eng = QueryEngine(db, max_batch=32, max_wait_ms=0.0)
+    probe = encoder([passages[3]])[0]
+    new_ids = db.insert(encoder(["a freshly ingested passage about topic 1"]))
+    r1 = eng.submit(probe, k=3)
+    eng.submit_write("delete", ids=[3])     # tombstone the true match...
+    r2 = eng.submit(probe, k=3)             # ...this read must not see it
+    eng.drain()
+    top_before = int(eng.result(r1)[1][0])
+    top_after = int(eng.result(r2)[1][0])
+    db.upsert(encoder([passages[3]]), new_ids)  # re-point the new id at it
+    db.compact()
+    st = eng.latency_stats()
+    print(f"\nmutation loop: top1 before delete={top_before} "
+          f"after={top_after} (id 3 tombstoned)")
+    print(f"  write counters: inserts={st['write_inserts']} "
+          f"deletes={st['write_deletes']} "
+          f"compactions={db.mutation_stats['compactions']} "
+          f"generation={db.generation}")
+    with tempfile.TemporaryDirectory() as tmp:
+        db.save_index(tmp)                  # generation-stamped snapshot
+        db2 = VectorDB("ivf_pq", metric="cosine", m=8, ksub=64,
+                       nprobe=16).restore_index(tmp)
+        s_a, i_a = db.query(probe[None], k=3)
+        s_b, i_b = db2.query(probe[None], k=3)
+        same = bool(np.array_equal(np.asarray(i_a), np.asarray(i_b)))
+        print(f"  snapshot round-trip: live={db2.n} "
+              f"generation={db2.generation} results identical={same}")
+
     db = VectorDB("flat", metric="cosine").load_texts(passages, encoder)
     q = queries[7]
     scores, ids, hits = db.query_texts([q], encoder, k=3)

@@ -1,5 +1,6 @@
 from repro.checkpoint.store import (CheckpointStore, latest_step, load_arrays,
-                                    restore, restore_resharded, save)
+                                    load_meta, restore, restore_resharded,
+                                    save)
 
 __all__ = ["CheckpointStore", "save", "restore", "restore_resharded",
-           "latest_step", "load_arrays"]
+           "latest_step", "load_arrays", "load_meta"]

@@ -55,13 +55,19 @@ def _flatten_with_paths(tree):
     return out
 
 
-def save(tree, directory: str, step: int, *, pspecs=None, chunk_mb: int = 512):
+def save(tree, directory: str, step: int, *, pspecs=None, chunk_mb: int = 512,
+         meta=None):
     """Serialize a pytree. pspecs: optional matching pytree of PartitionSpecs
-    recorded in the manifest for restore-time resharding."""
+    recorded in the manifest for restore-time resharding. ``meta``: optional
+    JSON-able dict stamped into the manifest (index snapshots record the
+    engine, metric, mutation generation, and live-row count here, so a
+    snapshot's provenance is readable without loading a single leaf)."""
     tmp = os.path.join(directory, f"step_{step:08d}.tmp")
     final = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "leaves": {}}
+    if meta is not None:
+        manifest["meta"] = dict(meta)
     spec_map = dict(_flatten_with_paths(pspecs)) if pspecs is not None else {}
     chunk_bytes = chunk_mb * 1024 * 1024
     for key, leaf in _flatten_with_paths(tree):
@@ -115,6 +121,16 @@ def _load_leaf(path: str, meta: dict) -> np.ndarray:
     parts = [np.load(os.path.join(path, f)) for f in meta["files"]]
     flat = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
     return _from_loaded(flat, meta["dtype"]).reshape(meta["shape"])
+
+
+def load_meta(directory: str, step: Optional[int] = None) -> dict:
+    """The manifest's ``meta`` stamp (empty dict for pre-meta snapshots) —
+    e.g. an index snapshot's engine/metric/generation, readable without
+    touching any array leaf."""
+    step = latest_step(directory) if step is None else step
+    assert step is not None, "no checkpoint to read meta from"
+    _path, manifest = _load_manifest(directory, step)
+    return manifest.get("meta", {})
 
 
 def load_arrays(directory: str, step: int) -> dict:

@@ -15,9 +15,11 @@ from repro.core.db import (ENGINES, PLAN_BUCKETS, DistributedIVFPQ,
 from repro.core.distances import METRICS, pairwise_scores, l2_normalize
 from repro.core.flat import FlatIndex, flat_search
 from repro.core.graph import GraphIndex, beam_search, build_knn_graph
-from repro.core.ivf import (IVFIndex, build_block_lists, build_buckets,
-                            ivf_search, kmeans)
+from repro.core.ivf import (BlockListLayout, IVFIndex, assign_from_buckets,
+                            build_block_lists, build_buckets, ivf_search,
+                            kmeans)
 from repro.core.lsh import LSHIndex, lsh_search, sign_codes, hamming_distance
+from repro.core.mutable import GrowableRows, MutableIndex
 from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, ivf_pq_search,
                            pq_decode, pq_encode, pq_search, train_pq)
 from repro.core.quant import Int8FlatIndex, int8_search, quantize_rows
@@ -26,10 +28,11 @@ __all__ = [
     "ENGINES", "METRICS", "PLAN_BUCKETS", "VectorDB", "DistributedIVFPQ",
     "DistributedPQ", "DistributedVectorDB", "register_engine",
     "FlatIndex", "IVFIndex", "GraphIndex", "LSHIndex", "Int8FlatIndex",
-    "PQIndex", "IVFPQIndex",
+    "PQIndex", "IVFPQIndex", "MutableIndex", "GrowableRows",
+    "BlockListLayout",
     "flat_search", "ivf_search", "beam_search", "lsh_search", "int8_search",
     "pq_search", "ivf_pq_search", "train_pq", "pq_encode", "pq_decode",
-    "adc_tables", "kmeans", "build_block_lists", "build_buckets",
-    "build_knn_graph", "sign_codes", "hamming_distance", "pairwise_scores",
-    "l2_normalize", "quantize_rows",
+    "adc_tables", "kmeans", "assign_from_buckets", "build_block_lists",
+    "build_buckets", "build_knn_graph", "sign_codes", "hamming_distance",
+    "pairwise_scores", "l2_normalize", "quantize_rows",
 ]

@@ -3,15 +3,23 @@
     db = VectorDB(engine="flat|int8|ivf|lsh|graph", metric="cosine|l2|dot")
     db.load(vectors)                      # or db.load_texts(texts, encoder)
     scores, ids = db.query(q, k=10)       # or db.query_texts(["..."], k=10)
+    ids = db.insert(new_vectors)          # online mutation (mutable engines)
+    db.delete(ids); db.upsert(vs, ids); db.compact()
 
 Mirrors the paper's Rust Trait interface (load + query per engine) with a
-registry so new engines compose in. Under a mesh, ``DistributedVectorDB``
-shards corpus rows across every device and runs the SPMD merge program in
-``repro.core.distributed``; ``DistributedPQ`` is its compressed twin —
-uint8 PQ codes sharded, LUTs replicated, 8-32x less HBM per device — and
-``DistributedIVFPQ`` range-shards the block-aligned inverted lists so
-per-device QUERY WORK (not just bytes) scales with the probed candidate
-count instead of N/S.
+registry so new engines compose in, plus the MUTATION LIFECYCLE
+(repro.core.mutable): insert/delete/upsert/compact forward to the engine,
+and the front tracks the engine's ``shape_key`` so a capacity-bucket
+overflow bumps ``plan_generation`` — the plan ledger then counts the
+retrace as a miss while steady-state inserts (contents change, shapes
+don't) keep hitting the same compiled plans. Under a mesh,
+``DistributedVectorDB`` shards corpus rows across every device and runs the
+SPMD merge program in ``repro.core.distributed``; ``DistributedPQ`` is its
+compressed twin — uint8 PQ codes sharded, LUTs replicated, 8-32x less HBM
+per device — and ``DistributedIVFPQ`` range-shards the block-aligned
+inverted lists so per-device QUERY WORK (not just bytes) scales with the
+probed candidate count instead of N/S; its inserts route each row's spilled
+blocks onto the shard owning the target cluster's slab.
 
 Query plans: every engine's search is a jitted program whose executable is
 keyed on (batch shape, k, dtype), so a naive front end retraces for every
@@ -19,10 +27,10 @@ distinct caller batch size. Every query front (``VectorDB`` AND the mesh
 fronts, via the shared ``_PlanLedger``) therefore canonicalizes the batch
 to a fixed ladder of bucket sizes (``PLAN_BUCKETS``, shared with
 serve.QueryEngine) before dispatching, and keeps a plan ledger: a miss is
-the first use of a (engine, bucket, k, dtype) plan by THIS front (the
-process-wide jit cache may already hold the executable if another instance
-compiled the same shapes), every later call at the same key is a hit that
-reuses the cached executable. ``plan_stats`` feeds
+the first use of a (engine, bucket, k, dtype, generation) plan by THIS
+front (the process-wide jit cache may already hold the executable if
+another instance compiled the same shapes), every later call at the same
+key is a hit that reuses the cached executable. ``plan_stats`` feeds
 QueryEngine.latency_stats.
 """
 from __future__ import annotations
@@ -40,9 +48,10 @@ from repro.core import distances as D
 from repro.core import distributed as dist
 from repro.core.flat import FlatIndex
 from repro.core.graph import GraphIndex
-from repro.core.ivf import (IVFIndex, assign_clusters, build_block_lists,
+from repro.core.ivf import (BlockListLayout, IVFIndex, assign_clusters,
                             kmeans)
 from repro.core.lsh import LSHIndex
+from repro.core.mutable import MutationMixin
 from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, expand_visit,
                            pq_encode, probe_luts, train_pq)
 from repro.core.quant import Int8FlatIndex
@@ -71,13 +80,17 @@ PLAN_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 class _PlanLedger:
     """Jit-plan bookkeeping shared by every query front (single-host AND
     mesh): canonicalize the batch to the PLAN_BUCKETS ladder, count
-    hit/miss per (engine, bucket, k, dtype) plan key, pad the batch up to
-    its bucket. A miss is the first use of a plan key by THIS front (the
-    process-wide jit cache may already hold the executable); serve's
-    ``latency_stats`` surfaces the counters via ``plan_stats``."""
+    hit/miss per (engine, bucket, k, dtype, generation) plan key, pad the
+    batch up to its bucket. A miss is the first use of a plan key by THIS
+    front (the process-wide jit cache may already hold the executable);
+    serve's ``latency_stats`` surfaces the counters via ``plan_stats``.
+    ``plan_generation`` bumps only when a mutation overflows a capacity
+    bucket (device shapes actually changed) — steady-state inserts keep the
+    same keys, so their queries stay hits."""
 
     def _plan_init(self):
         self.plan_buckets = PLAN_BUCKETS
+        self.plan_generation = 0
         self._plans = set()
         self.plan_stats = {"hits": 0, "misses": 0}
 
@@ -94,7 +107,8 @@ class _PlanLedger:
         first Q result rows are unchanged and get sliced back out."""
         Q = q.shape[0]
         bucket = self._bucket(Q)
-        key = (self.engine_name, bucket, kk, str(q.dtype))
+        key = (self.engine_name, bucket, kk, str(q.dtype),
+               self.plan_generation)
         if key in self._plans:
             self.plan_stats["hits"] += 1
         else:
@@ -104,6 +118,13 @@ class _PlanLedger:
             pad = jnp.broadcast_to(q[-1:], (bucket - Q,) + q.shape[1:])
             q = jnp.concatenate([q, pad])
         return q, Q
+
+
+def _empty_result(Q: int, k: int):
+    """Well-formed result for an empty (or fully-deleted) index: zero-wide
+    score/id rows, one per query — downstream slicing (serve scatters
+    ``result[:k]``) degrades gracefully instead of a reshape error."""
+    return (jnp.zeros((Q, 0), jnp.float32), jnp.full((Q, 0), -1, jnp.int32))
 
 
 class VectorDB(_PlanLedger):
@@ -117,6 +138,7 @@ class VectorDB(_PlanLedger):
         self.metric = metric
         self.index = ENGINES[engine](metric=metric, **engine_kwargs)
         self.n = 0
+        self._loaded = False
         self._texts = None
         self._plan_init()
 
@@ -126,6 +148,7 @@ class VectorDB(_PlanLedger):
         assert vectors.ndim == 2, vectors.shape
         self.index.load(vectors)
         self.n = vectors.shape[0]
+        self._loaded = True
         return self
 
     def load_texts(self, texts, encoder: Callable, batch_size: int = 128) -> "VectorDB":
@@ -136,6 +159,54 @@ class VectorDB(_PlanLedger):
         self._texts = list(texts)
         return self.load(jnp.concatenate(embs, axis=0))
 
+    # ----------------------------------------------------------- mutation
+    def _mutate(self, op: str, *args):
+        if not self._loaded:
+            raise RuntimeError(f"{op} before load")
+        fn = getattr(self.index, op, None)
+        if fn is None:
+            raise NotImplementedError(
+                f"engine {self.engine_name!r} does not support {op}")
+        before = getattr(self.index, "shape_key", None)
+        out = fn(*args)
+        if getattr(self.index, "shape_key", None) != before:
+            # capacity bucket overflowed: the next query at any batch size
+            # compiles fresh executables — make the ledger say so
+            self.plan_generation += 1
+        self.n = getattr(self.index, "size", self.n)
+        return out
+
+    def insert(self, vectors, ids=None) -> np.ndarray:
+        """Append rows online; returns the assigned (stable) ids."""
+        return self._mutate("insert", vectors, ids)
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by id; returns how many were live."""
+        return self._mutate("delete", ids)
+
+    def upsert(self, vectors, ids) -> np.ndarray:
+        """Re-encode existing ids in place (update-or-resurrect)."""
+        return self._mutate("upsert", vectors, ids)
+
+    def compact(self) -> dict:
+        """Reclaim tombstoned query work (engine-specific; see engines)."""
+        return self._mutate("compact")
+
+    def reserve(self, *args):
+        """Pre-size the engine's capacity buckets for a planned ingest
+        volume, so the insert stream stays inside one shape bucket (any
+        immediate shape change is counted against the plan ledger here,
+        not blamed on the first post-grow query)."""
+        return self._mutate("reserve", *args)
+
+    @property
+    def mutation_stats(self) -> Optional[dict]:
+        return getattr(self.index, "mutation_stats", None)
+
+    @property
+    def generation(self) -> int:
+        return getattr(self.index, "generation", 0)
+
     # ----------------------------------------------------------- query
     def query(self, q, k: int = 10, *, bucketize: bool = True):
         """q: (d,) or (Q, d) -> (scores (Q, k) f32, ids (Q, k) int32).
@@ -145,11 +216,17 @@ class VectorDB(_PlanLedger):
         once per caller batch size; rows are independent in every engine, so
         the padded rows (repeats of the last query) cannot change the first
         Q results, which are sliced back out lazily (no host sync).
+
+        An empty index — never inserted into, or fully deleted — returns
+        (Q, 0)-shaped results rather than erroring: emptiness is a normal
+        state for a database, unlike querying before ``load``.
         """
-        if self.n == 0:
+        if not self._loaded:
             raise RuntimeError("query before load")
         q = jnp.atleast_2d(jnp.asarray(q))
         kk = min(k, self.n)
+        if kk <= 0:
+            return _empty_result(q.shape[0], k)
         if not bucketize:
             return self.index.query(q, k=kk)
         q, Q = self._plan_batch(q, kk)
@@ -166,18 +243,24 @@ class VectorDB(_PlanLedger):
 
     # ----------------------------------------------------------- persistence
     def save_index(self, directory: str, step: int = 0) -> str:
-        """Snapshot the engine's trained state (codebooks/codes/centroids)
+        """Snapshot the engine's trained state (codebooks/codes/centroids —
+        plus tombstone state and the generation stamp on mutable engines)
         through the sharding-aware checkpoint store. Engines opt in by
         implementing ``state_dict()``."""
         state_dict = getattr(self.index, "state_dict", None)
         if state_dict is None:
             raise NotImplementedError(
                 f"engine {self.engine_name!r} does not support persistence")
-        return ckpt.save(state_dict(), directory, step)
+        meta = {"engine": self.engine_name, "metric": self.metric,
+                "generation": int(self.generation),
+                "live_rows": int(getattr(self.index, "size", self.n))}
+        return ckpt.save(state_dict(), directory, step, meta=meta)
 
     def restore_index(self, directory: str, step: Optional[int] = None) -> "VectorDB":
         """Load a saved index snapshot into this (fresh) VectorDB — no
-        retraining; shapes come from the checkpoint manifest."""
+        retraining; shapes come from the checkpoint manifest. A snapshot of
+        a mutated index round-trips exactly: tombstoned ids stay retired
+        and the restored layout serves bit-identical results."""
         load_state = getattr(self.index, "load_state", None)
         if load_state is None:
             raise NotImplementedError(
@@ -185,7 +268,8 @@ class VectorDB(_PlanLedger):
         step = ckpt.latest_step(directory) if step is None else step
         assert step is not None, "no index checkpoint to restore"
         load_state(ckpt.load_arrays(directory, step))
-        self.n = self.index.size
+        self.n = getattr(self.index, "size", 0)
+        self._loaded = True
         return self
 
 
@@ -320,7 +404,7 @@ class DistributedPQ(_PlanLedger):
         return int(self.codes.size + self.codebooks.size * 4 * self.n_shards)
 
 
-class DistributedIVFPQ(_PlanLedger):
+class DistributedIVFPQ(_PlanLedger, MutationMixin):
     """IVF-PQ serving under the mesh: inverted-list BLOCKS range-sharded,
     coarse structures replicated — the bucket-resident fused path at pod
     scale.
@@ -335,6 +419,16 @@ class DistributedIVFPQ(_PlanLedger):
     builds run replicated outside the shard_map, and the merge is the same
     O(Q*k*shards) all-gather as every other distributed path. Bucket ids
     store global corpus rows, so no id lifting is needed.
+
+    MUTABLE like the single-host engine, over the same
+    ``repro.core.ivf.BlockListLayout`` — the layout's storage capacity is
+    kept a multiple of the shard count so storage rows slice into equal
+    per-shard slabs, its allocation policy routes a cluster's spilled
+    blocks onto the shard already owning that cluster's slab (remote/tail
+    visit steps keep reusing the per-shard pad block, exactly as before),
+    and deletes tombstone slots to the -1 sentinel each shard's kernel
+    already knocks out. Mutations edit the host layout; the next query
+    re-device_puts the dirty slabs.
 
     Compressed-only serving (no exact re-rank — the raw corpus is exactly
     what this engine exists to not hold). Queries bucketize through the
@@ -363,16 +457,32 @@ class DistributedIVFPQ(_PlanLedger):
         self.lut_dtype = lut_dtype
         self.block_size = block_size
         self.codebooks = self.centroids = None
-        self.codes_bm = self.bucket_ids = None
-        self.bstart = self.bcnt = None
+        self.codes_bm = self.bucket_ids = self.block_table = None
+        self.layout = None
         self.spp = 1
         self.blocks_per_shard = 0
-        self.n = 0
+        self.n = 0  # id-space size; `size` is the live count
         self.d = 0
         self.n_shards = 1
         for a in self.axes:
             self.n_shards *= mesh.shape[a]
         self._plan_init()
+        self._mut_init(0)
+
+    @property
+    def size(self) -> int:
+        return 0 if self.layout is None else int(self.layout.live)
+
+    def _alloc_policy(self, cluster: int, free_rows) -> int:
+        """Spilled blocks land on the shard owning the cluster's slab (its
+        last block's shard); a full shard falls back to the emptiest row."""
+        lay = self.layout
+        if lay is None or lay.bcnt[cluster] == 0:
+            return min(free_rows)
+        bloc = lay.capacity // self.n_shards
+        shard = int(lay.block_table[cluster, lay.bcnt[cluster] - 1]) // bloc
+        same = [r for r in free_rows if r // bloc == shard]
+        return min(same) if same else min(free_rows)
 
     def load(self, vectors) -> "DistributedIVFPQ":
         x = jnp.asarray(vectors, jnp.float32)
@@ -390,48 +500,100 @@ class DistributedIVFPQ(_PlanLedger):
                                   m=self.m, ksub=self.ksub,
                                   iters=self.kmeans_iters)
         codes = np.asarray(pq_encode(self.codebooks, residuals))
-        slots, bstart, bcnt, spp = build_block_lists(assign, C,
-                                                     blk=self.block_size)
-        # shard layout: pad real blocks to S * Bloc, then give every shard
-        # its own trailing all-pad block -> (S * (Bloc + 1), blk) slabs.
-        # visit tables stay in GLOBAL block numbering [0, S*Bloc); each
-        # shard localizes in the shard_map (off-shard -> its pad block).
-        blk = slots.shape[1]
-        real = slots[:-1]  # drop the single-host pad block
-        B = real.shape[0]
-        bloc = max(1, -(-B // self.n_shards))
-        pad_rows = self.n_shards * bloc - B
-        real = np.concatenate(
-            [real, np.full((pad_rows, blk), -1, np.int32)])
-        per_shard = real.reshape(self.n_shards, bloc, blk)
-        pad_block = np.full((self.n_shards, 1, blk), -1, np.int32)
-        slots_sharded = np.concatenate([per_shard, pad_block],
-                                       axis=1).reshape(-1, blk)
-        codes_bm = codes[np.clip(slots_sharded, 0, None)]
-        codes_bm[slots_sharded < 0] = 0
-        self.bstart = jnp.asarray(bstart)
-        self.bcnt = jnp.asarray(bcnt)
-        self.spp = spp
-        self.blocks_per_shard = bloc
         self.centroids = cent
-        sharding = dist.corpus_sharding(self.mesh, self.axes)
-        self.bucket_ids = jax.device_put(jnp.asarray(slots_sharded), sharding)
-        self.codes_bm = jax.device_put(jnp.asarray(codes_bm), sharding)
+        # storage rows stay a multiple of the shard count so they slice into
+        # equal per-shard slabs; the policy steers spills to the owner shard
+        self.layout = BlockListLayout.from_assign(
+            assign, C, blk=self.block_size, payload=codes,
+            row_multiple=self.n_shards, alloc_policy=self._alloc_policy)
+        self._mut_init(self.n)
+        self._sync()
         return self
 
+    # ---------------------------------------------------------- mutation
+    def _encode_batch(self, vectors):
+        x = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
+        rows, _sq = D.preprocess_corpus(x, self.metric)
+        assign = np.asarray(assign_clusters(rows, self.centroids))
+        residuals = rows - jnp.take(self.centroids, jnp.asarray(assign),
+                                    axis=0)
+        return np.asarray(pq_encode(self.codebooks, residuals)), assign
+
+    def _after_mutation(self, shape_before) -> None:
+        if self.layout.shape_key != shape_before:
+            self.plan_generation += 1
+
+    def insert(self, vectors, ids=None) -> np.ndarray:
+        codes, assign = self._encode_batch(vectors)
+        ids = self._take_ids(codes.shape[0], ids)
+        before = self.layout.shape_key
+        self.layout.insert_rows(ids, assign, codes)
+        self.n = self.next_id
+        self._record("inserts", len(ids))
+        self._after_mutation(before)
+        return ids
+
+    def delete(self, ids) -> int:
+        n = self.layout.delete_rows(ids)
+        if n:
+            self._record("deletes", n)
+        return n
+
+    def upsert(self, vectors, ids) -> np.ndarray:
+        codes, assign = self._encode_batch(vectors)
+        ids = self._check_upsert_ids(codes.shape[0], ids)
+        before = self.layout.shape_key
+        self.layout.delete_rows(ids)
+        self.layout.insert_rows(ids, assign, codes)
+        self._record("upserts", len(ids))
+        self._after_mutation(before)
+        return ids
+
+    def compact(self) -> dict:
+        stats = self.layout.compact()
+        self._record("compactions", 1)
+        return stats
+
+    # ------------------------------------------------------------- query
+    def _sync(self) -> None:
+        """Re-slab the host layout onto the mesh: per-shard contiguous rows
+        + one trailing all-pad block per shard, global (storage-row) visit
+        numbering localized inside sharded_ivf_pq_search."""
+        if not self._dirty:
+            return
+        lay = self.layout
+        S = self.n_shards
+        blk = lay.blk
+        bloc = lay.capacity // S
+        slots = lay.slots.reshape(S, bloc, blk)
+        pad = np.full((S, 1, blk), -1, np.int32)
+        slots_sharded = np.concatenate([slots, pad], axis=1).reshape(-1, blk)
+        codes = lay.codes.reshape(S, bloc, blk, self.m)
+        padc = np.zeros((S, 1, blk, self.m), np.uint8)
+        codes_sharded = np.concatenate([codes, padc],
+                                       axis=1).reshape(-1, blk, self.m)
+        sharding = dist.corpus_sharding(self.mesh, self.axes)
+        self.bucket_ids = jax.device_put(jnp.asarray(slots_sharded), sharding)
+        self.codes_bm = jax.device_put(jnp.asarray(codes_sharded), sharding)
+        self.block_table = jnp.asarray(lay.block_table)
+        self.spp = lay.steps_per_probe
+        self.blocks_per_shard = bloc
+        self._dirty = False
+
     def query(self, q, k: int = 10, *, bucketize: bool = True):
+        self._sync()
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
         metric = self.metric
         if metric == "cosine":
             q = D.l2_normalize(q)
             metric = "dot"
-        kk = min(k, self.n)
+        kk = min(k, max(self.size, 1))
         Q = q.shape[0]
         if bucketize:
             q, Q = self._plan_batch(q, kk)
         nprobe = min(self.nprobe, self.centroids.shape[0])
         s, i = _dist_ivf_pq_plan(
-            self.codes_bm, self.bucket_ids, self.bstart, self.bcnt,
+            self.codes_bm, self.bucket_ids, self.block_table,
             self.codebooks, self.centroids, q, mesh=self.mesh, k=kk,
             metric=metric, nprobe=nprobe, steps_per_probe=self.spp,
             blocks_per_shard=self.blocks_per_shard, axes=self.axes,
@@ -445,14 +607,14 @@ class DistributedIVFPQ(_PlanLedger):
         S = self.n_shards
         return int(self.codes_bm.size // S + self.bucket_ids.size * 4 // S
                    + self.codebooks.size * 4 + self.centroids.size * 4
-                   + self.bstart.size * 4 + self.bcnt.size * 4)
+                   + self.block_table.size * 4)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "k", "metric", "nprobe", "steps_per_probe",
                      "blocks_per_shard", "axes", "use_kernel", "lut_dtype"))
-def _dist_ivf_pq_plan(codes_bm, bucket_ids, bstart, bcnt, codebooks,
+def _dist_ivf_pq_plan(codes_bm, bucket_ids, block_table, codebooks,
                       centroids, q, *, mesh, k, metric, nprobe,
                       steps_per_probe, blocks_per_shard, axes, use_kernel,
                       lut_dtype):
@@ -465,7 +627,7 @@ def _dist_ivf_pq_plan(codes_bm, bucket_ids, bstart, bcnt, codebooks,
     c_scores = D.pairwise_scores(q, centroids,
                                  metric if metric == "dot" else "l2")
     _, probe = jax.lax.top_k(c_scores, nprobe)
-    visit = expand_visit(probe, bstart, bcnt,
+    visit = expand_visit(probe, block_table,
                          steps_per_probe=steps_per_probe, pad_block=-1)
     luts, coarse = probe_luts(codebooks, centroids, q, probe, c_scores,
                               metric=metric)

@@ -53,6 +53,16 @@ def topk_scores(scores, k: int, valid=None):
     return jax.lax.top_k(scores, k)
 
 
+def mask_invalid_ids(scores, ids):
+    """Normalize knocked-out top-k slots to id -1. lax.top_k over a row with
+    fewer than k valid entries returns -inf scores but arbitrary indices
+    (whatever -inf slot sorted last) — with tombstones in the corpus that
+    arbitrary index could name a deleted row, so every engine passes its
+    results through here."""
+    bad = jnp.isneginf(scores)
+    return scores, jnp.where(bad, -1, ids)
+
+
 def merge_topk(scores_a, idx_a, scores_b, idx_b, k: int):
     """Merge two (Q, ka/kb) candidate sets into global top-k."""
     s = jnp.concatenate([scores_a, scores_b], axis=-1)

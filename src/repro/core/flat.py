@@ -12,8 +12,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import distances as D
+from repro.core.mutable import GrowableRows, MutationMixin
 
 # Accounting flag (see repro.models.attention.UNROLL): unroll the corpus-tile
 # scan so dry-run cost_analysis counts every tile.
@@ -72,8 +74,15 @@ def flat_search(corpus, q, *, metric: str = "cosine", k: int = 10,
     return s, i
 
 
-class FlatIndex:
-    """Exact-kNN engine (Thistle's Iterative, both metrics)."""
+class FlatIndex(MutationMixin):
+    """Exact-kNN engine (Thistle's Iterative, both metrics).
+
+    Mutable: the corpus is an id-indexed host array with power-of-two
+    capacity doubling plus a live mask — inserts append (amortized O(1)),
+    deletes tombstone the mask, upserts overwrite in place. Queries scan the
+    whole capacity bucket with the mask knocking out dead/pad rows, so the
+    compiled scan's shapes only change when the capacity bucket does.
+    """
 
     def __init__(self, metric: str = "cosine", tile: int = 4096, dtype=jnp.float32):
         assert metric in D.METRICS, metric
@@ -82,15 +91,90 @@ class FlatIndex:
         self.dtype = jnp.dtype(dtype)
         self.corpus = None
         self.corpus_sq = None
+        self.valid = None
+        self._corpus = self._sq = self._valid = None  # host mirrors
+        self._mut_init(0)
+
+    @property
+    def size(self) -> int:
+        return 0 if self._valid is None else int(self._valid.data.sum())
+
+    @property
+    def shape_key(self) -> tuple:
+        return (0 if self._corpus is None else self._corpus.capacity,)
 
     def load(self, vectors):
-        vectors = jnp.asarray(vectors)
-        corpus, sq = D.preprocess_corpus(vectors.astype(jnp.float32), self.metric)
-        self.corpus = corpus.astype(self.dtype)
-        self.corpus_sq = sq
+        vectors = jnp.asarray(vectors, jnp.float32)
+        corpus, sq = D.preprocess_corpus(vectors, self.metric)
+        self._corpus = GrowableRows.from_array(np.asarray(corpus))
+        self._sq = (GrowableRows.from_array(np.asarray(sq))
+                    if sq is not None else None)
+        self._valid = GrowableRows.from_array(
+            np.ones(vectors.shape[0], bool))
+        self._mut_init(vectors.shape[0])
         return self
 
+    # ---------------------------------------------------------- mutation
+    def _encode_batch(self, vectors):
+        x = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
+        rows, sq = D.preprocess_corpus(x, self.metric)
+        return np.asarray(rows), None if sq is None else np.asarray(sq)
+
+    def _write_rows(self, ids, rows, sq) -> None:
+        self._write_mirrors(ids, ((self._corpus, rows), (self._sq, sq),
+                                  (self._valid, np.ones(len(ids), bool))))
+
+    def insert(self, vectors, ids=None) -> np.ndarray:
+        rows, sq = self._encode_batch(vectors)
+        ids = self._take_ids(rows.shape[0], ids)
+        self._write_rows(ids, rows, sq)
+        self._record("inserts", len(ids))
+        return ids
+
+    def delete(self, ids) -> int:
+        ids = self._tombstone_valid(ids)
+        if ids.size:
+            self._record("deletes", ids.size)
+        return int(ids.size)
+
+    def upsert(self, vectors, ids) -> np.ndarray:
+        rows, sq = self._encode_batch(vectors)
+        ids = self._check_upsert_ids(rows.shape[0], ids)
+        self._write_rows(ids, rows, sq)
+        self._record("upserts", len(ids))
+        return ids
+
+    def compact(self) -> dict:
+        """Ids are addresses here — nothing repacks; the mask already makes
+        dead rows free to skip in the scan's knockout. Counted for parity."""
+        self._record("compactions", 1)
+        return {"dropped_tombstones": 0}
+
+    def reserve(self, extra_rows: int) -> tuple:
+        """Pre-size capacity buckets for a planned ingest volume (see
+        IVFPQIndex.reserve)."""
+        for g in (self._corpus, self._sq, self._valid):
+            if g is not None:
+                g.reserve(self.next_id + extra_rows)
+        self._dirty = True
+        return self.shape_key
+
+    # ------------------------------------------------------------- query
+    def _sync(self) -> None:
+        if not self._dirty:
+            return
+        self.corpus = jnp.asarray(self._corpus.data).astype(self.dtype)
+        self.corpus_sq = (jnp.asarray(self._sq.data)
+                          if self._sq is not None else None)
+        mask = self._valid.data.copy()
+        mask[self._valid.n:] = False
+        self.valid = jnp.asarray(mask)
+        self._dirty = False
+
     def query(self, q, k: int = 10):
+        self._sync()
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
-        return flat_search(self.corpus, q.astype(self.dtype), metric=self.metric,
-                           k=k, tile=self.tile, corpus_sq=self.corpus_sq)
+        s, i = flat_search(self.corpus, q.astype(self.dtype),
+                           metric=self.metric, k=k, tile=self.tile,
+                           corpus_sq=self.corpus_sq, valid=self.valid)
+        return D.mask_invalid_ids(s, i)

@@ -1,0 +1,180 @@
+"""The mutation lifecycle shared by every engine: insert / delete / upsert.
+
+Thistle presents itself as a vector *database*, but a load-once engine is a
+search index — mutability is the difference. Every mutable engine in
+``repro.core`` implements the same small protocol:
+
+    ids = idx.insert(vectors)            # append rows, returns assigned ids
+    n   = idx.delete(ids)                # tombstone rows (ids stay retired)
+    ids = idx.upsert(vectors, ids)       # re-encode existing ids in place
+    idx.compact()                        # reclaim tombstoned query work
+    idx.size                             # LIVE row count
+    idx.generation                       # bumps once per mutation batch
+    idx.shape_key                        # changes iff jit-visible shapes do
+
+Design rules, shared across engines so the query kernels need zero changes:
+
+  * **Ids are stable.** A row's id is assigned at insert and never reused or
+    renumbered — deletes tombstone, compaction repacks *layout* structures
+    (bucket tables, block lists) but id-indexed storage keeps its holes.
+    That is what lets the fused kernels keep treating ``id == -1`` as the
+    only knockout they know about.
+  * **Capacity buckets, not exact shapes.** Device-visible arrays are padded
+    to power-of-two capacity buckets (``row_capacity``), mirroring the
+    query-batch bucketing in ``repro.core.db.PLAN_BUCKETS``: steady-state
+    inserts mutate array *contents*, shapes only change when a bucket
+    overflows — so the jitted query plans do not retrace per insert.
+    ``shape_key`` is the engine's summary of those shapes; the DB front
+    folds it into the plan-ledger key so a real retrace is *counted* as a
+    plan miss instead of silently mislabelled a hit.
+  * **Host mirrors, lazy device sync.** Mutations edit numpy mirrors
+    (amortized O(1) per row); the next query uploads the dirty arrays once.
+    A burst of writes between queries costs one transfer, not one per batch.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+
+def row_capacity(n: int, minimum: int = 8) -> int:
+    """Power-of-two capacity bucket for n rows (the shape ladder)."""
+    cap = max(int(minimum), 1)
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+@runtime_checkable
+class MutableIndex(Protocol):
+    """Duck-typed mutation protocol (see module docstring for semantics)."""
+
+    def insert(self, vectors, ids=None) -> np.ndarray: ...
+    def delete(self, ids) -> int: ...
+    def upsert(self, vectors, ids) -> np.ndarray: ...
+    def compact(self) -> dict: ...
+    @property
+    def size(self) -> int: ...
+
+
+class GrowableRows:
+    """Id-indexed host array with power-of-two capacity doubling.
+
+    ``data`` is always the full (capacity, *row_shape) buffer — engines
+    device_put it whole so device shapes track the capacity bucket, not the
+    row count. Rows beyond ``n`` are zero and must be masked by the caller
+    (every engine's query path already knocks out invalid rows).
+    """
+
+    def __init__(self, row_shape, dtype, n: int = 0, minimum: int = 8):
+        self.row_shape = tuple(row_shape)
+        self.dtype = np.dtype(dtype)
+        self.n = 0
+        self.data = np.zeros((row_capacity(n, minimum),) + self.row_shape,
+                             self.dtype)
+        self.n = int(n)
+
+    @classmethod
+    def from_array(cls, arr, minimum: int = 8) -> "GrowableRows":
+        arr = np.asarray(arr)
+        g = cls(arr.shape[1:], arr.dtype, n=arr.shape[0], minimum=minimum)
+        g.data[: arr.shape[0]] = arr
+        return g
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    def reserve(self, n: int) -> bool:
+        """Grow capacity to hold n rows; True if the bucket changed."""
+        if n <= self.capacity:
+            return False
+        new = np.zeros((row_capacity(n),) + self.row_shape, self.dtype)
+        new[: self.n] = self.data[: self.n]
+        self.data = new
+        return True
+
+    def append(self, rows) -> tuple:
+        """Append rows; returns (start, grew) — grew means shapes changed."""
+        rows = np.asarray(rows, self.dtype)
+        start = self.n
+        grew = self.reserve(start + rows.shape[0])
+        self.data[start: start + rows.shape[0]] = rows
+        self.n = start + rows.shape[0]
+        return start, grew
+
+    def write(self, ids, rows) -> None:
+        """In-place overwrite of existing rows (upsert path)."""
+        self.data[np.asarray(ids, np.int64)] = np.asarray(rows, self.dtype)
+
+
+class MutationMixin:
+    """Bookkeeping shared by every mutable engine: counters, generation,
+    the dirty flag driving lazy device sync, and id validation."""
+
+    def _mut_init(self, n: int = 0) -> None:
+        self.mutation_stats = {"inserts": 0, "deletes": 0, "upserts": 0,
+                               "compactions": 0}
+        self.generation = 0
+        self.next_id = int(n)  # id space is append-only, never reused
+        self._dirty = True
+
+    def _record(self, kind: str, n: int) -> None:
+        self.mutation_stats[kind] += int(n)
+        self.generation += 1
+        self._dirty = True
+
+    def _write_mirrors(self, ids, pairs) -> None:
+        """Write rows into each (GrowableRows, values) mirror pair at the
+        given ids, growing every mirror to the current id space first —
+        the one insert/upsert storage body shared by the engines (None
+        mirror or values = that side not kept, skip)."""
+        for g, values in pairs:
+            if g is None or values is None:
+                continue
+            g.reserve(self.next_id)
+            g.write(ids, values)
+            g.n = max(g.n, self.next_id)
+
+    def _tombstone_valid(self, ids) -> np.ndarray:
+        """Tombstone ids in the engine's ``_valid`` live mask; returns the
+        ids that were actually live (out-of-range and already-dead ids are
+        ignored) — the one delete body for mask-based engines."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        ids = ids[(ids >= 0) & (ids < self._valid.n)]
+        ids = ids[self._valid.data[ids]]
+        self._valid.data[ids] = False
+        return ids
+
+    def _take_ids(self, n: int, ids=None) -> np.ndarray:
+        """Assign (or validate caller-provided) ids for n inserted rows.
+        Explicit ids must be fresh — at or beyond the current id space —
+        so inserts can never silently shadow a live row (that is upsert)."""
+        if ids is None:
+            ids = np.arange(self.next_id, self.next_id + n, dtype=np.int64)
+        else:
+            ids = np.asarray(ids, np.int64)
+            assert ids.shape == (n,), (ids.shape, n)
+            if ids.size and ids.min() < self.next_id:
+                raise ValueError(
+                    f"insert ids must be fresh (>= {self.next_id}); use "
+                    "upsert to re-encode existing ids in place")
+            if ids.size != np.unique(ids).size:
+                raise ValueError("duplicate ids in one insert batch")
+        if ids.size:
+            self.next_id = max(self.next_id, int(ids.max()) + 1)
+        return ids
+
+    def _check_upsert_ids(self, n: int, ids) -> np.ndarray:
+        if ids is None:
+            raise ValueError("upsert needs explicit ids; use insert for "
+                             "fresh rows")
+        ids = np.asarray(ids, np.int64)
+        assert ids.shape == (n,), (ids.shape, n)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.next_id):
+            raise ValueError(
+                f"upsert ids must name existing rows (< {self.next_id})")
+        if ids.size != np.unique(ids).size:
+            raise ValueError("duplicate ids in one upsert batch")
+        return ids

@@ -29,6 +29,14 @@ Two engines compose out of it:
 Both optionally keep the raw corpus to exactly re-rank the top ``refine``
 ADC candidates (recall repair; production stores park raw rows in slow
 storage, so index-resident memory is still codes + codebooks).
+
+Both engines are MUTABLE (repro.core.mutable): inserts encode against the
+frozen codebooks and append — the flat engine into a capacity-doubling code
+array with a live mask, IVF-PQ by assign -> residual-encode -> block append
+into the ``BlockListLayout``. Deletes are tombstones expressed entirely in
+the layout (slot id -> -1 pad sentinel), so the fused ADC kernels serve a
+churning index without a single kernel change; ``compact()`` repacks once
+the tombstone fraction crosses the engine's threshold.
 """
 from __future__ import annotations
 
@@ -39,8 +47,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distances as D
-from repro.core.ivf import (assign_clusters, build_block_lists, build_buckets,
-                            kmeans)
+from repro.core.ivf import (BlockListLayout, assign_clusters,
+                            assign_from_buckets, build_block_lists,
+                            build_buckets, kmeans)
+from repro.core.mutable import GrowableRows, MutationMixin
 from repro.kernels import ops as kops
 
 
@@ -178,7 +188,7 @@ def _exact_rerank(corpus, corpus_sq, cand, q, *, metric: str, k: int):
     scores = jnp.where(valid, scores, -jnp.inf)
     s, pos = jax.lax.top_k(scores, min(k, scores.shape[-1]))
     ids = jnp.take_along_axis(cand, pos, axis=-1)
-    return _pad_to_k(s, ids, k)
+    return _pad_to_k(*D.mask_invalid_ids(s, ids), k)
 
 
 def _pad_to_k(s, ids, k: int):
@@ -190,7 +200,7 @@ def _pad_to_k(s, ids, k: int):
 
 
 def pq_search(codebooks, codes, corpus, q, *, metric: str, k: int,
-              refine: int = 0, corpus_sq=None,
+              refine: int = 0, corpus_sq=None, valid=None,
               use_kernel=None, lut_dtype: str = "float32"):
     """Flat ADC search (+ optional exact re-rank of the top ``refine``).
 
@@ -200,33 +210,45 @@ def pq_search(codebooks, codes, corpus, q, *, metric: str, k: int,
     once before the scan — fused into a single program, XLA re-rounds every
     gathered element (see kernels.ops._round_lut_bf16). Scoring goes
     through the backend dispatcher (Pallas kernel on TPU, fused jnp twin
-    elsewhere; ``use_kernel``/``lut_dtype`` override). corpus is only
+    elsewhere; ``use_kernel``/``lut_dtype`` override). ``valid`` masks
+    tombstoned/pad rows of a mutable corpus out of the scan. corpus is only
     touched (and may be None) when refine > 0.
     """
     N = codes.shape[0]
     luts = adc_tables(codebooks, q, metric=metric)
     if not refine:
-        return kops.adc_topk(codes, luts, k=k, use_kernel=use_kernel,
-                             lut_dtype=lut_dtype)
+        s, i = kops.adc_topk(codes, luts, k=k, valid=valid,
+                             use_kernel=use_kernel, lut_dtype=lut_dtype)
+        return D.mask_invalid_ids(s, i)
     R = min(max(refine, k), N)
-    _, cand = kops.adc_topk(codes, luts, k=R, use_kernel=use_kernel,
-                            lut_dtype=lut_dtype)
+    s, cand = kops.adc_topk(codes, luts, k=R, valid=valid,
+                            use_kernel=use_kernel, lut_dtype=lut_dtype)
+    _, cand = D.mask_invalid_ids(s, cand)
     return _exact_rerank(corpus, corpus_sq, cand, q, metric=metric, k=k)
 
 
-def expand_visit(probe, bstart, bcnt, *, steps_per_probe: int, pad_block):
+def expand_visit(probe, block_table, *, steps_per_probe: int, pad_block):
     """Probe ids -> (Q, nprobe * steps_per_probe) visit table of inverted-
-    list block ids. Cluster c's steps are its bstart[c]..bstart[c]+bcnt[c]
-    rows; tail steps of clusters shorter than steps_per_probe blocks point
-    at ``pad_block`` (the shared all-pad row, or -1 for the sharded front
-    which retargets per shard). The single source of the visit contract —
-    used by ivf_pq_search and the DistributedIVFPQ plan."""
+    list block ids. ``block_table`` (C, steps_per_probe) lists the storage
+    blocks cluster c owns in visit order, -1 = absent — absent steps (tails
+    of short clusters) point at ``pad_block`` (the shared all-pad row, or -1
+    for the sharded front which retargets per shard). The single source of
+    the visit contract — used by ivf_pq_search and the DistributedIVFPQ
+    plan. An explicit table rather than (bstart, bcnt) ranges so ONLINE
+    INSERTS can spill a cluster into any free block without relayout."""
     Q, nprobe = probe.shape
-    base = jnp.take(bstart, probe, axis=0)  # (Q, nprobe)
-    cnt = jnp.take(bcnt, probe, axis=0)
-    r = jnp.arange(steps_per_probe, dtype=jnp.int32)[None, None, :]
-    return jnp.where(r < cnt[:, :, None], base[:, :, None] + r,
+    rows = jnp.take(block_table, probe, axis=0)  # (Q, nprobe, spp)
+    return jnp.where(rows >= 0, rows,
                      pad_block).reshape(Q, nprobe * steps_per_probe)
+
+
+def block_table_from_ranges(bstart, bcnt, steps_per_probe: int):
+    """(bstart, bcnt) contiguous ranges (build_block_lists output) -> the
+    explicit (C, steps_per_probe) block table expand_visit consumes."""
+    r = jnp.arange(steps_per_probe, dtype=jnp.int32)[None, :]
+    bstart = jnp.asarray(bstart, jnp.int32)
+    bcnt = jnp.asarray(bcnt, jnp.int32)
+    return jnp.where(r < bcnt[:, None], bstart[:, None] + r, -1)
 
 
 def probe_luts(codebooks, centroids, q, probe, c_scores, *, metric: str):
@@ -251,7 +273,7 @@ def probe_luts(codebooks, centroids, q, probe, c_scores, *, metric: str):
                                     "scan_all"))
 def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
                   metric: str, k: int, nprobe: int, refine: int = 0,
-                  corpus_sq=None, assign=None, block_lists=None,
+                  corpus_sq=None, assign=None, valid=None, block_lists=None,
                   steps_per_probe: int = 1, use_kernel=None,
                   lut_dtype: str = "float32", scan_all: bool = False):
     """IVF-ADC: probe nprobe coarse buckets, ADC-score their residual codes.
@@ -266,23 +288,27 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
     Both metrics execute on the bucket-resident fused path
     (``kops.ivf_adc_topk``: Pallas ivf_adc kernel on TPU, fused jnp twin
     elsewhere): probes expand into a visit table over the block-aligned
-    layout in ``block_lists`` = (bucket_codes (B+1, blk, m), bucket_ids
-    (B+1, blk), bstart (C,), bcnt (C,)) with ``steps_per_probe`` blocks per
-    probe (IVFPQIndex builds it once at load via
-    repro.core.ivf.build_block_lists), and work scales with the probed
-    candidate count instead of N. nprobe genuinely prunes on EVERY backend
-    and metric. Callers without a prebuilt layout (tests, one-off scans)
-    may pass ``block_lists=None``: the fixed-capacity ``buckets`` table is
-    treated in-graph as a one-block-per-cluster layout (blk = cap,
+    layout in ``block_lists`` = (bucket_codes (B, blk, m), bucket_ids
+    (B, blk), block_table (C, steps_per_probe)) whose last storage row is
+    the shared all-pad block (IVFPQIndex maintains it online via
+    repro.core.ivf.BlockListLayout; the legacy 4-tuple with (bstart, bcnt)
+    contiguous ranges is still accepted and converted in-graph), and work
+    scales with the probed candidate count instead of N. nprobe genuinely
+    prunes on EVERY backend and metric. Tombstoned rows carry slot id -1 in
+    ``bucket_ids`` and score exactly like pad slots — the kernel is
+    mutation-oblivious. Callers without a prebuilt layout (tests, one-off
+    scans) may pass ``block_lists=None``: the fixed-capacity ``buckets``
+    table is treated in-graph as a one-block-per-cluster layout (blk = cap,
     steps_per_probe forced to 1).
 
     ``scan_all=True`` is the explicit escape hatch to the PR-2
     augmented-LUT scan (dot only, requires row-major ``codes`` +
     ``assign``): the coarse term folds into the flat adc_topk scan as an
     (m+1)-th subspace and ALL N codes stream through — candidates are a
-    superset of any nprobe's, at N/candidates times the scoring work.
-    Useful when the probed candidate count approaches N (tiny corpora,
-    recall studies); never the default.
+    superset of any nprobe's, at N/candidates times the scoring work
+    (``valid`` masks tombstoned rows on this path). Useful when the probed
+    candidate count approaches N (tiny corpora, recall studies); never the
+    default.
 
     ``lut_dtype`` ('float32'/'bfloat16'/'int8') applies to either backend's
     tables. Returns (scores (Q, k), ids (Q, k)); pad slots are -inf / -1.
@@ -309,8 +335,9 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
             [codes.astype(jnp.int32), assign.astype(jnp.int32)[:, None]],
             axis=1)  # (N, m+1)
         R = min(max(refine, k), N)
-        s, ids = kops.adc_topk(codes_aug, luts_aug, k=R,
+        s, ids = kops.adc_topk(codes_aug, luts_aug, k=R, valid=valid,
                                use_kernel=use_kernel, lut_dtype=lut_dtype)
+        s, ids = D.mask_invalid_ids(s, ids)
         if refine:
             return _exact_rerank(corpus, corpus_sq, ids, q, metric=metric, k=k)
         return _pad_to_k(s[:, :k], ids[:, :k], k)
@@ -323,17 +350,20 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
             [buckets, jnp.full((1, cap), -1, buckets.dtype)]).astype(jnp.int32)
         bucket_codes = jnp.take(codes.astype(jnp.int32),
                                 jnp.clip(bucket_ids, 0), axis=0)
-        bstart = jnp.arange(C, dtype=jnp.int32)
-        bcnt = jnp.ones((C,), jnp.int32)
+        block_table = jnp.arange(C, dtype=jnp.int32)[:, None]
         spp = 1
-    else:
+    elif len(block_lists) == 4:  # legacy contiguous-range form
         bucket_codes, bucket_ids, bstart, bcnt = block_lists
+        spp = steps_per_probe
+        block_table = block_table_from_ranges(bstart, bcnt, spp)
+    else:
+        bucket_codes, bucket_ids, block_table = block_lists
         spp = steps_per_probe
     blk = bucket_codes.shape[1]
     c_scores = D.pairwise_scores(q, centroids,
                                  metric if metric == "dot" else "l2")
     _, probe = jax.lax.top_k(c_scores, nprobe)  # (Q, nprobe)
-    visit = expand_visit(probe, bstart, bcnt, steps_per_probe=spp,
+    visit = expand_visit(probe, block_table, steps_per_probe=spp,
                          pad_block=bucket_ids.shape[0] - 1)
     luts, coarse = probe_luts(codebooks, centroids, q, probe, c_scores,
                               metric=metric)
@@ -358,14 +388,31 @@ def _check_snapshot(state, engine: str, metric: str):
             f" cannot restore into engine={engine!r} metric={metric!r}")
 
 
-class PQIndex:
+def _snapshot_live(state, n: int) -> np.ndarray:
+    """Tombstone state persisted since the mutation lifecycle; PR-1-format
+    snapshots (no ``live`` leaf) restore as fully live."""
+    if "live" in state:
+        return np.asarray(state["live"]).astype(bool).reshape(n)
+    return np.ones(n, bool)
+
+
+class PQIndex(MutationMixin):
     """Flat product-quantized engine: m bytes/row, ADC scan, optional exact
     re-rank of the top ``refine`` candidates (refine=0 drops the raw corpus
-    entirely — pure compressed-domain search)."""
+    entirely — pure compressed-domain search).
+
+    Mutable: inserts ENCODE WITH THE FROZEN CODEBOOKS and append into a
+    capacity-doubling code array; a staleness counter tracks how much of the
+    index the codebooks never saw (``stale_fraction`` /
+    ``needs_retrain``) — codebook drift repair is retraining, flagged here,
+    not hidden. Deletes tombstone the live mask the ADC dispatch already
+    honors.
+    """
 
     def __init__(self, metric: str = "cosine", m: int = 8, ksub: int = 256,
                  kmeans_iters: int = 10, refine: int = 32, seed: int = 0,
-                 use_kernel=None, lut_dtype: str = "float32"):
+                 use_kernel=None, lut_dtype: str = "float32",
+                 retrain_threshold: float = 0.25):
         assert metric in D.METRICS
         assert lut_dtype in kops.ADC_LUT_DTYPES, lut_dtype
         self.metric = metric
@@ -376,91 +423,205 @@ class PQIndex:
         self.seed = seed
         self.use_kernel = use_kernel  # None = auto (Pallas on TPU, jnp twin off)
         self.lut_dtype = lut_dtype
+        self.retrain_threshold = retrain_threshold
         self.codebooks = self.codes = self.corpus = self.corpus_sq = None
+        self.valid = None
+        self._codes = self._corpus = self._sq = self._valid = None
         self.d = 0
+        self.inserted_since_train = 0
+        self._mut_init(0)
 
     @property
     def size(self) -> int:
-        return 0 if self.codes is None else int(self.codes.shape[0])
+        return 0 if self._valid is None else int(self._valid.data.sum())
+
+    @property
+    def shape_key(self) -> tuple:
+        return (0 if self._codes is None else self._codes.capacity,)
+
+    @property
+    def stale_fraction(self) -> float:
+        """Fraction of live rows encoded after codebook training."""
+        return self.inserted_since_train / max(self.size, 1)
+
+    @property
+    def needs_retrain(self) -> bool:
+        return self.stale_fraction > self.retrain_threshold
+
+    def _init_storage(self, codes, corpus, sq, live) -> None:
+        n = codes.shape[0]
+        self._codes = GrowableRows.from_array(np.asarray(codes))
+        self._valid = GrowableRows.from_array(np.asarray(live, bool))
+        self._corpus = (GrowableRows.from_array(np.asarray(corpus))
+                        if corpus is not None else None)
+        self._sq = (GrowableRows.from_array(np.asarray(sq))
+                    if sq is not None else None)
+        self.inserted_since_train = 0
+        self._mut_init(n)
+        self._sync()  # device mirrors valid immediately after load/restore
 
     def load(self, vectors):
         x = jnp.asarray(vectors, jnp.float32)
         self.d = x.shape[1]
         corpus, sq = D.preprocess_corpus(x, self.metric)
-        self.corpus_sq = sq
         self.codebooks = train_pq(jax.random.PRNGKey(self.seed), corpus,
                                   m=self.m, ksub=self.ksub,
                                   iters=self.kmeans_iters)
-        self.codes = pq_encode(self.codebooks, corpus)
-        self.corpus = corpus if self.refine else None
+        codes = pq_encode(self.codebooks, corpus)
+        self._init_storage(codes, corpus if self.refine else None, sq,
+                           np.ones(x.shape[0], bool))
         return self
 
+    # ---------------------------------------------------------- mutation
+    def _encode_batch(self, vectors):
+        x = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
+        rows, sq = D.preprocess_corpus(x, self.metric)
+        codes = np.asarray(pq_encode(self.codebooks, rows))
+        return codes, np.asarray(rows), \
+            None if sq is None else np.asarray(sq)
+
+    def _write_rows(self, ids, codes, rows, sq) -> None:
+        self._write_mirrors(ids, ((self._codes, codes), (self._corpus, rows),
+                                  (self._sq, sq),
+                                  (self._valid, np.ones(len(ids), bool))))
+
+    def insert(self, vectors, ids=None) -> np.ndarray:
+        codes, rows, sq = self._encode_batch(vectors)
+        ids = self._take_ids(codes.shape[0], ids)
+        self._write_rows(ids, codes, rows, sq)
+        self.inserted_since_train += len(ids)
+        self._record("inserts", len(ids))
+        return ids
+
+    def delete(self, ids) -> int:
+        ids = self._tombstone_valid(ids)
+        if ids.size:
+            self._record("deletes", ids.size)
+        return int(ids.size)
+
+    def upsert(self, vectors, ids) -> np.ndarray:
+        codes, rows, sq = self._encode_batch(vectors)
+        ids = self._check_upsert_ids(codes.shape[0], ids)
+        self._write_rows(ids, codes, rows, sq)
+        self.inserted_since_train += len(ids)
+        self._record("upserts", len(ids))
+        return ids
+
+    def compact(self) -> dict:
+        """Ids are addresses into the flat code array — the live mask is the
+        whole tombstone story, nothing repacks. Counted for parity."""
+        self._record("compactions", 1)
+        return {"dropped_tombstones": 0}
+
+    def reserve(self, extra_rows: int) -> tuple:
+        """Pre-size capacity buckets for a planned ingest volume (see
+        IVFPQIndex.reserve)."""
+        for g in (self._codes, self._corpus, self._sq, self._valid):
+            if g is not None:
+                g.reserve(self.next_id + extra_rows)
+        self._dirty = True
+        return self.shape_key
+
+    # ------------------------------------------------------------- query
+    def _sync(self) -> None:
+        if not self._dirty:
+            return
+        self.codes = jnp.asarray(self._codes.data)
+        mask = self._valid.data.copy()
+        mask[self._valid.n:] = False
+        self.valid = jnp.asarray(mask)
+        self.corpus = (jnp.asarray(self._corpus.data)
+                       if self._corpus is not None else None)
+        self.corpus_sq = (jnp.asarray(self._sq.data)
+                          if self._sq is not None else None)
+        self._dirty = False
+
     def query(self, q, k: int = 10):
+        self._sync()
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
         metric = self.metric
         if metric == "cosine":
             q = D.l2_normalize(q)
             metric = "dot"  # corpus rows were normalized at load time
         return pq_search(self.codebooks, self.codes, self.corpus, q,
-                         metric=metric, k=min(k, self.size),
+                         metric=metric, k=min(k, max(self.size, 1)),
                          refine=self.refine, corpus_sq=self.corpus_sq,
-                         use_kernel=self.use_kernel, lut_dtype=self.lut_dtype)
+                         valid=self.valid, use_kernel=self.use_kernel,
+                         lut_dtype=self.lut_dtype)
 
     # ------------------------------------------------------- persistence
     def state_dict(self):
+        n = self.next_id
+        live = self._valid.data[:n].copy()
         state = {"engine": np.asarray("pq"), "metric": np.asarray(self.metric),
-                 "codebooks": self.codebooks, "codes": self.codes,
+                 "codebooks": self.codebooks,
+                 "codes": jnp.asarray(self._codes.data[:n]),
+                 "live": live,
+                 "generation": np.asarray(self.generation, np.int64),
                  "d": jnp.asarray(self.d, jnp.int32)}
-        if self.corpus is not None:
-            state["corpus"] = self.corpus
-        if self.corpus_sq is not None:
-            state["corpus_sq"] = self.corpus_sq
+        if self._corpus is not None:
+            state["corpus"] = jnp.asarray(self._corpus.data[:n])
+        if self._sq is not None:
+            state["corpus_sq"] = jnp.asarray(self._sq.data[:n])
         return state
 
     def load_state(self, state):
         _check_snapshot(state, "pq", self.metric)
         self.codebooks = jnp.asarray(state["codebooks"], jnp.float32)
-        self.codes = jnp.asarray(state["codes"], jnp.uint8)
+        codes = np.asarray(state["codes"]).astype(np.uint8)
         self.d = int(state["d"])
-        self.corpus = (jnp.asarray(state["corpus"], jnp.float32)
-                       if "corpus" in state else None)
-        self.corpus_sq = (jnp.asarray(state["corpus_sq"], jnp.float32)
-                          if "corpus_sq" in state else None)
-        if self.corpus is None:
+        n = codes.shape[0]
+        corpus = (np.asarray(state["corpus"], np.float32)
+                  if "corpus" in state else None)
+        sq = (np.asarray(state["corpus_sq"], np.float32)
+              if "corpus_sq" in state else None)
+        if corpus is None:
             self.refine = 0
+        self._init_storage(codes, corpus, sq, _snapshot_live(state, n))
+        self.generation = int(state.get("generation", 0))
         self.m = int(self.codebooks.shape[0])
         self.ksub = int(self.codebooks.shape[1])
         return self
 
     def memory_bytes(self, include_raw: bool = False) -> int:
-        """Index-resident bytes: codes + codebooks (+ raw re-rank corpus)."""
-        total = self.codes.size + self.codebooks.size * 4
-        if self.corpus_sq is not None:
-            total += self.corpus_sq.size * 4
-        if include_raw and self.corpus is not None:
-            total += self.corpus.size * 4
+        """Index-resident bytes: codes + live mask + codebooks (+ raw
+        re-rank corpus), at ALLOCATED (capacity-bucket) sizes — mutable
+        storage reports what it holds, not what it wishes it held."""
+        total = (self._codes.data.size + self._valid.data.size
+                 + self.codebooks.size * 4)
+        if self._sq is not None:
+            total += self._sq.data.size * 4
+        if include_raw and self._corpus is not None:
+            total += self._corpus.data.size * 4
         return int(total)
 
 
-class IVFPQIndex:
+class IVFPQIndex(MutationMixin):
     """IVF coarse quantizer over PQ-coded residuals + exact re-ranking —
     the memory/recall rung the exact engines cannot reach (FAISS IVFADC).
 
-    Codes live in the BLOCK-ALIGNED bucket-major layout (``codes_bm``
-    (B+1, blk, m) + ``bucket_ids``/``bstart``/``bcnt``, built once at
-    load/restore via ``repro.core.ivf.build_block_lists``) so the fused
+    Codes live in the BLOCK-ALIGNED bucket-major layout
+    (``repro.core.ivf.BlockListLayout``: slot table + co-located codes +
+    per-cluster block tables, capacity-bucketed) so the fused
     bucket-resident kernel path DMAs one probed block per grid program at
-    <= blk-1 pad slack per cluster; the row-major (N, m) copy is
-    reconstructed on demand for snapshots (which stay at the PR-1 format)
-    and kept resident only under ``scan_all=True`` (the all-codes escape
-    hatch also needs ``assign``).
+    <= blk-1 tail pad slack per cluster. The layout is the WHOLE mutation
+    story: inserts assign -> residual-encode -> append into the cluster's
+    last ragged block (spilling to a fresh block when full), deletes
+    retarget the slot id to the -1 pad sentinel the kernel already knocks
+    out, and ``compact()`` (auto-triggered past ``compact_threshold``
+    tombstone fraction) repacks without changing device shapes. The
+    row-major (N, m) copy is reconstructed on demand for snapshots (which
+    stay at the PR-1 format, now with a ``live`` tombstone leaf and a
+    generation stamp) and kept resident only under ``scan_all=True`` (the
+    all-codes escape hatch also needs ``assign``).
     """
 
     def __init__(self, metric: str = "cosine", n_clusters: int = 0,
                  nprobe: int = 8, m: int = 8, ksub: int = 256,
                  kmeans_iters: int = 10, refine: int = 32, seed: int = 0,
                  use_kernel=None, lut_dtype: str = "float32",
-                 scan_all: bool = False, block_size: int = 32):
+                 scan_all: bool = False, block_size: int = 32,
+                 compact_threshold: float = 0.3):
         assert metric in D.METRICS
         assert lut_dtype in kops.ADC_LUT_DTYPES, lut_dtype
         self.metric = metric
@@ -475,40 +636,59 @@ class IVFPQIndex:
         self.lut_dtype = lut_dtype
         self.scan_all = scan_all  # True: PR-2 all-codes augmented-LUT scan
         self.block_size = block_size  # inverted-list block width (x8)
+        self.compact_threshold = compact_threshold
         self.codebooks = self.codes = self.centroids = None
-        self.codes_bm = self.bucket_ids = self.bstart = self.bcnt = None
+        self.codes_bm = self.bucket_ids = self.block_table = None
+        self.layout = None
         self.spp = 1  # blocks per probe (static visit-table width)
-        self.assign = None
+        self.assign = self.valid = None
+        self._codes_rm = self._assign = self._valid = None  # scan_all mirrors
+        self._corpus = self._sq = None
         self.corpus = self.corpus_sq = None
         self.d = 0
-        self.n = 0
+        self.n = 0  # id-space size (append-only; `size` is the live count)
+        self._mut_init(0)
 
     @property
     def size(self) -> int:
-        return self.n
+        return 0 if self.layout is None else int(self.layout.live)
 
-    def _finalize_layout(self, codes, assign):
-        """Build the block-aligned layout; keep row-major only for scan_all."""
+    @property
+    def shape_key(self) -> tuple:
+        if self.layout is None:
+            return (0,)
+        return self.layout.shape_key + (
+            0 if self._corpus is None else self._corpus.capacity,)
+
+    def _finalize_layout(self, codes, assign, live=None):
+        """Build the mutable block layout (load AND restore both land here —
+        one reconstruction path, so a PR-1 row-major snapshot re-derives
+        per-cluster tail counts identically to a fresh load); keep row-major
+        mirrors only for scan_all."""
+        codes = np.asarray(codes)
+        assign = np.asarray(assign)
+        n = codes.shape[0]
         C = self.centroids.shape[0]
-        slots, bstart, bcnt, spp = build_block_lists(assign, C,
-                                                     blk=self.block_size)
-        self.bucket_ids = jnp.asarray(slots)
-        self.bstart = jnp.asarray(bstart)
-        self.bcnt = jnp.asarray(bcnt)
-        self.spp = spp
-        self.codes_bm = jnp.take(codes, jnp.clip(self.bucket_ids, 0), axis=0)
-        self.codes = codes if self.scan_all else None
-        self.assign = (jnp.asarray(assign, jnp.int32)
-                       if self.scan_all else None)
+        self.layout = BlockListLayout.from_assign(
+            assign, C, blk=self.block_size, payload=codes, live=live)
+        if self.scan_all:
+            self._codes_rm = GrowableRows.from_array(codes)
+            self._assign = GrowableRows.from_array(assign.astype(np.int32))
+            self._valid = GrowableRows.from_array(
+                np.ones(n, bool) if live is None else np.asarray(live, bool))
+        else:
+            self._codes_rm = self._assign = self._valid = None
+            self.codes = self.assign = self.valid = None
+        self.n = n
+        self._mut_init(n)
+        self._sync()  # device mirrors valid immediately after load/restore
 
     def load(self, vectors):
         x = jnp.asarray(vectors, jnp.float32)
         N, self.d = x.shape
-        self.n = int(N)
         C = self.n_clusters or max(1, int(np.sqrt(N)))
         C = min(C, N)
         corpus, sq = D.preprocess_corpus(x, self.metric)
-        self.corpus_sq = sq
         key = jax.random.PRNGKey(self.seed)
         cent = kmeans(key, corpus, n_clusters=C, iters=self.kmeans_iters)
         if self.metric == "cosine":
@@ -519,11 +699,111 @@ class IVFPQIndex:
                                   m=self.m, ksub=self.ksub,
                                   iters=self.kmeans_iters)
         self.centroids = cent
+        self._corpus = (GrowableRows.from_array(np.asarray(corpus))
+                        if self.refine else None)
+        self._sq = (GrowableRows.from_array(np.asarray(sq))
+                    if sq is not None else None)
         self._finalize_layout(pq_encode(self.codebooks, residuals), assign)
-        self.corpus = corpus if self.refine else None
         return self
 
+    # ---------------------------------------------------------- mutation
+    def _encode_batch(self, vectors):
+        x = jnp.atleast_2d(jnp.asarray(vectors, jnp.float32))
+        rows, sq = D.preprocess_corpus(x, self.metric)
+        assign = np.asarray(assign_clusters(rows, self.centroids))
+        residuals = rows - jnp.take(self.centroids, jnp.asarray(assign),
+                                    axis=0)
+        codes = np.asarray(pq_encode(self.codebooks, residuals))
+        return codes, assign, np.asarray(rows), \
+            None if sq is None else np.asarray(sq)
+
+    def _write_side(self, ids, assign, codes, rows, sq) -> None:
+        self._write_mirrors(ids, ((self._corpus, rows), (self._sq, sq),
+                                  (self._codes_rm, codes),
+                                  (self._assign, assign.astype(np.int32)),
+                                  (self._valid, np.ones(len(ids), bool))))
+
+    def insert(self, vectors, ids=None) -> np.ndarray:
+        """assign -> residual-encode -> block append (amortized O(1)/row)."""
+        codes, assign, rows, sq = self._encode_batch(vectors)
+        ids = self._take_ids(codes.shape[0], ids)
+        self.layout.insert_rows(ids, assign, codes)
+        self._write_side(ids, assign, codes, rows, sq)
+        self.n = self.next_id
+        self._record("inserts", len(ids))
+        return ids
+
+    def delete(self, ids) -> int:
+        n = self.layout.delete_rows(ids)
+        if self._valid is not None:
+            dead = np.asarray(ids, np.int64).reshape(-1)
+            dead = dead[(dead >= 0) & (dead < self._valid.n)]
+            self._valid.data[dead] = False
+        if n:
+            self._record("deletes", n)
+            self._maybe_compact()
+        return n
+
+    def upsert(self, vectors, ids) -> np.ndarray:
+        """Re-encode existing ids in place: the old slot tombstones, the row
+        re-appends under ITS OWN id in its (possibly different) new cluster."""
+        codes, assign, rows, sq = self._encode_batch(vectors)
+        ids = self._check_upsert_ids(codes.shape[0], ids)
+        self.layout.delete_rows(ids)
+        self.layout.insert_rows(ids, assign, codes)
+        self._write_side(ids, assign, codes, rows, sq)
+        self._record("upserts", len(ids))
+        self._maybe_compact()
+        return ids
+
+    def _maybe_compact(self) -> None:
+        if (self.compact_threshold is not None
+                and self.layout.tombstone_fraction > self.compact_threshold):
+            self.compact()
+
+    def reserve(self, extra_rows: int,
+                extra_blocks_per_cluster: int = 0) -> tuple:
+        """Pre-size every capacity bucket for a planned ingest volume, so
+        the steady-state insert stream stays inside ONE shape bucket and
+        its queries never recompile. Returns the resulting shape_key."""
+        self.layout.reserve(extra_rows, extra_blocks_per_cluster)
+        for g in (self._corpus, self._sq, self._codes_rm, self._assign,
+                  self._valid):
+            if g is not None:
+                g.reserve(self.next_id + extra_rows)
+        self._dirty = True
+        return self.shape_key
+
+    def compact(self) -> dict:
+        """Repack the block lists, dropping tombstones (capacity buckets are
+        kept, so compaction cannot recompile a query plan)."""
+        stats = self.layout.compact()
+        self._record("compactions", 1)
+        return stats
+
+    # ------------------------------------------------------------- query
+    def _sync(self) -> None:
+        if not self._dirty:
+            return
+        lay = self.layout
+        self.codes_bm = jnp.asarray(lay.codes)
+        self.bucket_ids = jnp.asarray(lay.slots)
+        self.block_table = jnp.asarray(lay.block_table)
+        self.spp = lay.steps_per_probe
+        if self.scan_all:
+            self.codes = jnp.asarray(self._codes_rm.data)
+            self.assign = jnp.asarray(self._assign.data, jnp.int32)
+            mask = self._valid.data.copy()
+            mask[self._valid.n:] = False
+            self.valid = jnp.asarray(mask)
+        self.corpus = (jnp.asarray(self._corpus.data)
+                       if self._corpus is not None else None)
+        self.corpus_sq = (jnp.asarray(self._sq.data)
+                          if self._sq is not None else None)
+        self._dirty = False
+
     def query(self, q, k: int = 10):
+        self._sync()
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
         metric = self.metric
         if metric == "cosine":
@@ -532,90 +812,85 @@ class IVFPQIndex:
         nprobe = min(self.nprobe, self.centroids.shape[0])
         return ivf_pq_search(
             self.codebooks, self.codes, self.centroids, None, self.corpus, q,
-            metric=metric, k=min(k, self.size), nprobe=nprobe,
+            metric=metric, k=min(k, max(self.size, 1)), nprobe=nprobe,
             refine=self.refine, corpus_sq=self.corpus_sq, assign=self.assign,
-            block_lists=(self.codes_bm, self.bucket_ids, self.bstart,
-                         self.bcnt),
+            valid=self.valid,
+            block_lists=(self.codes_bm, self.bucket_ids, self.block_table),
             steps_per_probe=self.spp, use_kernel=self.use_kernel,
             lut_dtype=self.lut_dtype, scan_all=self.scan_all)
 
     # ------------------------------------------------------- persistence
     def _host_assign(self):
-        """(N,) cluster assignment recovered from the block lists."""
-        if self.assign is not None:
-            return np.asarray(self.assign)
-        slots = np.asarray(self.bucket_ids)
-        bstart, bcnt = np.asarray(self.bstart), np.asarray(self.bcnt)
-        assign = np.zeros(self.n, np.int32)
-        for c in range(bstart.shape[0]):
-            rows = slots[bstart[c]:bstart[c] + bcnt[c]].reshape(-1)
-            assign[rows[rows >= 0]] = c
-        return assign
+        """(N,) cluster assignment over the id space (dead ids read 0)."""
+        if self._assign is not None:
+            return np.asarray(self._assign.data[: self.n])
+        return self.layout.assign_of(self.n)
 
     def _row_major_codes(self):
         """(N, m) uint8 codes reconstructed from the block layout —
         snapshots stay at the PR-1 format regardless of ``scan_all``."""
-        if self.codes is not None:
-            return self.codes
-        slots = np.asarray(self.bucket_ids)
-        bm = np.asarray(self.codes_bm)
-        codes = np.zeros((self.n, bm.shape[-1]), np.uint8)
-        codes[slots[slots >= 0]] = bm[slots >= 0]
-        return jnp.asarray(codes)
+        if self._codes_rm is not None:
+            return jnp.asarray(self._codes_rm.data[: self.n])
+        return jnp.asarray(self.layout.gather_payload(self.n))
 
     def state_dict(self):
-        buckets, _cap = build_buckets(self._host_assign(),
-                                      self.centroids.shape[0])
+        live = self.layout.live_mask(self.n)
+        live_ids = np.flatnonzero(live)
+        buckets, _cap = build_buckets(self._host_assign()[live_ids],
+                                      self.centroids.shape[0], ids=live_ids)
         state = {"engine": np.asarray("ivf_pq"),
                  "metric": np.asarray(self.metric),
                  "codebooks": self.codebooks, "codes": self._row_major_codes(),
                  "centroids": self.centroids,
                  "buckets": jnp.asarray(buckets),
+                 "live": live,
+                 "generation": np.asarray(self.generation, np.int64),
                  "d": jnp.asarray(self.d, jnp.int32)}
-        if self.corpus is not None:
-            state["corpus"] = self.corpus
-        if self.corpus_sq is not None:
-            state["corpus_sq"] = self.corpus_sq
+        if self._corpus is not None:
+            state["corpus"] = jnp.asarray(self._corpus.data[: self.n])
+        if self._sq is not None:
+            state["corpus_sq"] = jnp.asarray(self._sq.data[: self.n])
         return state
 
     def load_state(self, state):
         _check_snapshot(state, "ivf_pq", self.metric)
         self.codebooks = jnp.asarray(state["codebooks"], jnp.float32)
-        codes = jnp.asarray(state["codes"], jnp.uint8)
-        self.n = int(codes.shape[0])
+        codes = np.asarray(state["codes"]).astype(np.uint8)
+        n = int(codes.shape[0])
         self.centroids = jnp.asarray(state["centroids"], jnp.float32)
         self.d = int(state["d"])
-        # assign is derivable from the bucket table (buckets[c] lists the rows
-        # of cluster c), so snapshots stay at the PR-1 format
-        b = np.asarray(state["buckets"])
-        assign = np.zeros(self.n, np.int32)
-        rows = np.broadcast_to(np.arange(b.shape[0], dtype=np.int32)[:, None],
-                               b.shape)
-        assign[b[b >= 0]] = rows[b >= 0]
-        self._finalize_layout(codes, assign)
-        self.corpus = (jnp.asarray(state["corpus"], jnp.float32)
-                       if "corpus" in state else None)
-        self.corpus_sq = (jnp.asarray(state["corpus_sq"], jnp.float32)
-                          if "corpus_sq" in state else None)
-        if self.corpus is None:
+        # assign is derivable from the bucket table (buckets[c] lists the
+        # live rows of cluster c), so snapshots stay at the PR-1 format —
+        # assign_from_buckets + _finalize_layout is the ONE reconstruction
+        # path, shared with load(), so tail counts always rebuild the same
+        live = _snapshot_live(state, n)
+        self._corpus = (GrowableRows.from_array(
+            np.asarray(state["corpus"], np.float32))
+            if "corpus" in state else None)
+        self._sq = (GrowableRows.from_array(
+            np.asarray(state["corpus_sq"], np.float32))
+            if "corpus_sq" in state else None)
+        if self._corpus is None:
             self.refine = 0
+        self._finalize_layout(codes, assign_from_buckets(state["buckets"], n),
+                              live=live)
+        self.generation = int(state.get("generation", 0))
         self.m = int(self.codebooks.shape[0])
         self.ksub = int(self.codebooks.shape[1])
         return self
 
     def memory_bytes(self, include_raw: bool = False) -> int:
-        """Index-resident bytes: block-aligned codes + slot ids + codebooks
-        + coarse structures (+ row-major codes and assignments under
-        scan_all)."""
-        total = (self.codes_bm.size + self.bucket_ids.size * 4
-                 + self.bstart.size * 4 + self.bcnt.size * 4
+        """Index-resident bytes: block-aligned codes + slot ids + block
+        tables + codebooks + coarse structures (+ row-major codes and
+        assignments under scan_all), at ALLOCATED capacity-bucket sizes."""
+        total = (self.layout.memory_bytes()
                  + self.codebooks.size * 4 + self.centroids.size * 4)
-        if self.codes is not None:
-            total += self.codes.size
-        if self.assign is not None:
-            total += self.assign.size * 4
-        if self.corpus_sq is not None:
-            total += self.corpus_sq.size * 4
-        if include_raw and self.corpus is not None:
-            total += self.corpus.size * 4
+        if self._codes_rm is not None:
+            total += self._codes_rm.data.size
+        if self._assign is not None:
+            total += self._assign.data.size * 4
+        if self._sq is not None:
+            total += self._sq.data.size * 4
+        if include_raw and self._corpus is not None:
+            total += self._corpus.data.size * 4
         return int(total)

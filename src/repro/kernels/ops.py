@@ -253,8 +253,15 @@ def adc_topk(codes, luts, *, k: int, valid=None, use_kernel=None,
     """
     assert lut_dtype in ADC_LUT_DTYPES, lut_dtype
     if resolve_adc_backend(use_kernel) == "kernel":
-        return pq_adc(codes, luts, k=k, valid=valid, blk_n=blk_n,
+        s, i = pq_adc(codes, luts, k=k, valid=valid, blk_n=blk_n,
                       interpret=interpret, lut_dtype=lut_dtype)
+        # the kernel knocks rows out with a finite -1e30 score bias; map
+        # anything at or below half of it to (-inf, -1) so both backends
+        # expose the same sentinel (isneginf-keyed callers — e.g. the
+        # tombstone normalization in the mutable engines — see the knockout
+        # on every backend). Mirrors ivf_adc_topk's normalization.
+        bad = s <= 0.5 * NEG_INF
+        return jnp.where(bad, -jnp.inf, s), jnp.where(bad, -1, i)
     if lut_dtype == "bfloat16" and not isinstance(luts, jax.core.Tracer):
         luts = _round_lut_bf16(luts)  # materialize at the jit boundary
         lut_dtype = "float32"

@@ -1,4 +1,4 @@
-from repro.serve.engine import QueryEngine, Request
+from repro.serve.engine import QueryEngine, Request, WriteRequest
 from repro.serve.decode import DecodeLoop
 
-__all__ = ["QueryEngine", "Request", "DecodeLoop"]
+__all__ = ["QueryEngine", "Request", "WriteRequest", "DecodeLoop"]

@@ -21,11 +21,25 @@ A pumped micro-batch takes one trip through the compiled query plan:
   3. *one host sync* — scores and ids come back in a single device_get at
      scatter time; nothing else blocks on the device.
 
+Write execution
+---------------
+``submit_write`` enqueues insert/delete/upsert/compact batches into the
+SAME queue as reads. ``pump`` preserves arrival order: writes at the queue
+head apply immediately (they are not latency-batched), and a read
+micro-batch never reaches past the next queued write — so every read
+observes exactly the writes submitted before it (READ-YOUR-WRITES within
+the pump loop), while reads between two writes still batch together. A
+write that overflows a capacity bucket surfaces as a plan miss on the next
+query via the shared ledger's ``plan_generation``.
+
 ``latency_stats`` reports enqueue->result p50/p99 per request plus the
-DB's plan-cache counters, so a serving run can prove it stopped retracing
-(misses stay flat while hits grow). The counters come from the shared
-``repro.core.db._PlanLedger``, which every front implements — the engine
-serves ``VectorDB`` and the mesh fronts (``DistributedVectorDB``,
+DB's plan-cache counters AND its mutation counters
+(inserts/deletes/upserts/compactions, from the engine's
+``mutation_stats``), so a serving run can prove it stopped retracing
+(misses stay flat while hits grow) and show the write mix it absorbed. The
+counters come from the shared ``repro.core.db._PlanLedger`` /
+``repro.core.mutable.MutationMixin``, which every front implements — the
+engine serves ``VectorDB`` and the mesh fronts (``DistributedVectorDB``,
 ``DistributedPQ``, ``DistributedIVFPQ``) interchangeably.
 """
 from __future__ import annotations
@@ -39,6 +53,8 @@ import numpy as np
 
 from repro.core.db import PLAN_BUCKETS
 
+WRITE_KINDS = ("insert", "delete", "upsert", "compact")
+
 
 @dataclasses.dataclass
 class Request:
@@ -47,6 +63,17 @@ class Request:
     k: int = 10
     t_enqueue: float = 0.0
     result: Optional[tuple] = None
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass
+class WriteRequest:
+    rid: int
+    kind: str  # one of WRITE_KINDS
+    vectors: Optional[np.ndarray] = None
+    ids: Optional[np.ndarray] = None
+    t_enqueue: float = 0.0
+    result: Optional[tuple] = None  # (kind, returned ids / count / stats)
     t_done: float = 0.0
 
 
@@ -59,15 +86,29 @@ class QueryEngine:
         self.encoder = encoder  # tokens -> embeddings; None = raw vectors
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
-        self.queue: List[Request] = []
-        self.done: Dict[int, Request] = {}
+        self.queue: List = []  # Requests and WriteRequests, arrival order
+        self.done: Dict[int, object] = {}
         self._next_id = 0
         self.latencies_ms: List[float] = []
+        self.writes_applied = 0
 
     def submit(self, query: np.ndarray, k: int = 10) -> int:
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, np.asarray(query), k, time.perf_counter()))
+        return rid
+
+    def submit_write(self, kind: str, vectors=None, ids=None) -> int:
+        """Enqueue a write batch (insert/delete/upsert/compact). Writes keep
+        arrival order relative to reads: a read submitted after this write
+        is guaranteed to observe it (read-your-writes)."""
+        assert kind in WRITE_KINDS, kind
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(WriteRequest(
+            rid, kind,
+            None if vectors is None else np.asarray(vectors),
+            None if ids is None else np.asarray(ids), time.perf_counter()))
         return rid
 
     def _bucket(self, n: int) -> int:
@@ -76,15 +117,43 @@ class QueryEngine:
                 return b
         return self.BUCKETS[-1]
 
+    def _apply_write(self, w: WriteRequest) -> None:
+        if w.kind == "insert":
+            out = self.db.insert(w.vectors, w.ids)
+        elif w.kind == "delete":
+            out = self.db.delete(w.ids)
+        elif w.kind == "upsert":
+            out = self.db.upsert(w.vectors, w.ids)
+        else:
+            out = self.db.compact()
+        w.result = (w.kind, out)
+        w.t_done = time.perf_counter()
+        self.done[w.rid] = w
+        self.writes_applied += 1
+
     def pump(self, *, force: bool = False) -> int:
-        """Run one micro-batch if due. Returns number of requests served."""
+        """Apply due writes, then run one read micro-batch if due. Returns
+        the number of READ requests served; writes at the queue head always
+        apply (they are not latency-batched), and the read batch stops at
+        the next queued write so it cannot observe the future."""
+        while self.queue and isinstance(self.queue[0], WriteRequest):
+            self._apply_write(self.queue.pop(0))
         if not self.queue:
             return 0
         oldest_wait = (time.perf_counter() - self.queue[0].t_enqueue) * 1e3
-        if not force and len(self.queue) < self.max_batch and oldest_wait < self.max_wait_ms:
+        n_reads = 0  # contiguous run of reads at the head
+        while (n_reads < len(self.queue) and n_reads < self.max_batch
+               and isinstance(self.queue[n_reads], Request)):
+            n_reads += 1
+        # a write right behind the run CLOSES the batch: the run can never
+        # grow past it, so waiting out max_wait_ms would only stall these
+        # reads and the write behind them
+        closed = n_reads < len(self.queue) and n_reads < self.max_batch
+        if (not force and not closed and n_reads < self.max_batch
+                and oldest_wait < self.max_wait_ms):
             return 0
-        take = self.queue[: self.max_batch]
-        self.queue = self.queue[self.max_batch:]
+        take = self.queue[:n_reads]
+        self.queue = self.queue[n_reads:]
         n = len(take)
         bucket = self._bucket(n)
         k = max(r.k for r in take)
@@ -113,15 +182,19 @@ class QueryEngine:
         return None if r is None else r.result
 
     def latency_stats(self) -> Dict[str, float]:
-        if not self.latencies_ms:
+        if not self.latencies_ms and not self.writes_applied:
             return {}
-        a = np.asarray(self.latencies_ms)
-        stats = {"engine": getattr(self.db, "engine_name", "?"),
-                 "p50_ms": float(np.percentile(a, 50)),
-                 "p99_ms": float(np.percentile(a, 99)),
-                 "mean_ms": float(a.mean()), "n": int(a.size)}
+        stats = {"engine": getattr(self.db, "engine_name", "?")}
+        if self.latencies_ms:
+            a = np.asarray(self.latencies_ms)
+            stats.update({"p50_ms": float(np.percentile(a, 50)),
+                          "p99_ms": float(np.percentile(a, 99)),
+                          "mean_ms": float(a.mean()), "n": int(a.size)})
         plans = getattr(self.db, "plan_stats", None)
         if plans is not None:  # compiled-plan reuse (misses = first compiles)
             stats["plan_hits"] = int(plans["hits"])
             stats["plan_misses"] = int(plans["misses"])
+        muts = getattr(self.db, "mutation_stats", None)
+        if muts is not None:  # write/compaction counters (rows applied)
+            stats.update({f"write_{k}": int(v) for k, v in muts.items()})
         return stats
