@@ -1,11 +1,32 @@
-"""Serving latency: QueryEngine micro-batching p50/p99 (production concern
-the paper's one-query-at-a-time benchmark leaves open)."""
+"""Serving benchmarks: micro-batch latency AND sustained closed-loop load.
+
+Two suites:
+
+  * ``run`` — the original micro-batching sweep: QueryEngine p50/p99 vs
+    ``max_batch`` per engine (offered throughput: the driver thread
+    submits and pumps as fast as it can).
+  * ``serve_async`` — the continuous-batching measurement the async front
+    exists for: a closed-loop load generator drives ``AsyncQueryEngine``
+    with N client threads at a target aggregate QPS (paced arrivals,
+    blocking backpressure), sweeping the target to trace the sustained
+    load -> p50/p99 latency curve — against the synchronous pump driven by
+    the SAME arrival schedule (``sync_paced_*`` rows: one thread must stop
+    accepting while it serves, so past its small-batch capacity its
+    from-arrival p99 explodes); plus a max-throughput head-to-head at
+    matched batch size and recall (identical results, asserted — the
+    ``parity`` field). The committed full-size run is
+    ``BENCH_serve_async.json``; CI runs the --quick shape and gates on
+    p99 finite + parity == 1.0 (see docs/BENCHMARKS.md).
+"""
 from __future__ import annotations
+
+import threading
+import time
 
 import numpy as np
 
 from repro.core import VectorDB
-from repro.serve import QueryEngine
+from repro.serve import AsyncQueryEngine, QueryEngine
 
 
 def run(n_corpus: int = 5000, n_requests: int = 400, d: int = 128,
@@ -29,6 +50,191 @@ def run(n_corpus: int = 5000, n_requests: int = 400, d: int = 128,
     return rows
 
 
+# ----------------------------------------------------- closed-loop generator
+
+def _sync_pump_max(db, queries, k: int, max_batch: int):
+    """Strongest synchronous baseline: submit everything, drain in full
+    batches. The timer covers submission AND drain — the same end-to-end
+    work the async front's clock covers (its submitters are inside its
+    measurement), so the comparison is symmetric."""
+    eng = QueryEngine(db, max_batch=max_batch, max_wait_ms=0.0)
+    t0 = time.perf_counter()
+    rids = [eng.submit(q, k=k) for q in queries]
+    eng.drain()
+    dt = time.perf_counter() - t0
+    st = eng.latency_stats()
+    ids = np.stack([np.asarray(eng.result(r)[1]) for r in rids])
+    return len(queries) / dt, st, ids
+
+
+def _sync_paced(db, queries, k: int, target_qps: float, max_batch: int,
+                max_wait_ms: float = 2.0):
+    """The synchronous pump under the SAME paced arrival schedule as the
+    async closed-loop rows. One thread must both accept and serve: while
+    ``pump`` blocks in the batch's host sync, arrivals pile up unaccepted
+    — the accept/serve serialization the continuous batcher removes.
+    Latency is measured from SCHEDULED arrival (open-loop convention), so
+    accept delay counts; the async front's latencies are from ``submit``,
+    which its paced clients issue at the scheduled instant."""
+    eng = QueryEngine(db, max_batch=max_batch, max_wait_ms=max_wait_ms)
+    n = len(queries)
+    interval = 1.0 / target_qps
+    arrive = [i * interval for i in range(n)]
+    rids = [0] * n
+    i = 0
+    t0 = time.perf_counter()
+    while i < n:
+        now = time.perf_counter() - t0
+        while i < n and arrive[i] <= now:
+            rids[i] = eng.submit(queries[i], k=k)
+            i += 1
+        if not eng.pump() and i < n:
+            lag = arrive[i] - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(min(lag, 5e-4))
+    eng.drain()
+    dt = time.perf_counter() - t0
+    lats = np.asarray([(eng.done[rids[j]].t_done - t0 - arrive[j]) * 1e3
+                       for j in range(n)])
+    st = {"p50_ms": float(np.percentile(lats, 50)),
+          "p99_ms": float(np.percentile(lats, 99))}
+    ids = np.stack([np.asarray(eng.result(r)[1]) for r in rids])
+    return n / dt, st, ids
+
+
+def _drive_async(db, queries, k: int, *, target_qps=None, n_clients: int = 4,
+                 max_batch: int = 64, max_wait_ms: float = 2.0,
+                 max_queue: int = 1024, max_inflight: int = 1):
+    """Drive the async front with ``n_clients`` submitter threads. With a
+    ``target_qps`` each client paces its arrivals to an aggregate of the
+    target (blocking on backpressure, so overload shows up as achieved <
+    target + latency growth, not a crash); without one, the whole request
+    block goes through ``submit_many`` — the amortized block-submission
+    path a max-rate client should use (max throughput)."""
+    # pipeline depth 1: on a single shared device, dispatching batch i+1
+    # before batch i's host sync only adds queueing latency — depth 1 is
+    # the adaptive-batch cadence; raise it where dispatch truly overlaps
+    eng = AsyncQueryEngine(db, max_batch=max_batch, max_wait_ms=max_wait_ms,
+                           max_queue=max_queue, overflow="block",
+                           max_inflight=max_inflight)
+    n = len(queries)
+    t0 = time.perf_counter()
+    if target_qps is None:
+        futs = eng.submit_many(queries, k=k)  # blocks as the bound admits
+    else:
+        futs = [None] * n
+        interval = n_clients / target_qps
+
+        def client(c):
+            for j, i in enumerate(range(c, n, n_clients)):
+                lag = t0 + j * interval - time.perf_counter()
+                if lag > 0:
+                    time.sleep(lag)
+                futs[i] = eng.submit(queries[i], k=k)
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(n_clients)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    eng.drain(timeout=600)
+    dt = time.perf_counter() - t0
+    st = eng.latency_stats()
+    eng.close()
+    ids = np.stack([np.asarray(f.result()[1]) for f in futs])
+    return n / dt, st, ids
+
+
+def serve_async(n_corpus: int = 20_000, n_requests: int = 2000, d: int = 128,
+                k: int = 10, engines=("flat", "ivf_pq"),
+                targets=(100, 400, 800, 1600), n_clients: int = 4,
+                max_batch: int = 64):
+    """The tentpole measurement: sustained-load latency curve + async vs
+    sync max throughput at matched recall (parity-checked results)."""
+    rng = np.random.default_rng(0)
+    corpus = rng.normal(size=(n_corpus, d)).astype(np.float32)
+    queries = (corpus[np.arange(n_requests) % n_corpus]
+               + 0.01 * rng.normal(size=(n_requests, d))).astype(np.float32)
+    rows = []
+    for engine in engines:
+        db = VectorDB(engine).load(corpus)
+        oracle = np.asarray(db.query(queries, k=k, bucketize=False)[1])
+        # warm the plan-bucket ladder once so first-compile cost lands on
+        # neither front: the curve measures steady-state serving, where the
+        # _PlanLedger cache means no batch ever retraces
+        for b in db.plan_buckets:
+            if b <= max_batch:
+                db.query(queries[:b], k=k)
+
+        # max-throughput head-to-head: interleaved best-of-reps (the repo's
+        # timing methodology — see BENCH_pq_adc), both timers covering
+        # submission + drain. The async max-rate row submits via
+        # ``submit_many`` (the amortized block path a max-rate client
+        # should use) at pipeline depth 2, so the device always has a
+        # batch queued while the host assembles the next.
+        sync_best = async_best = None
+        for _ in range(5):
+            s_qps, s_st, s_ids = _sync_pump_max(db, queries, k, max_batch)
+            if sync_best is None or s_qps > sync_best[0]:
+                sync_best = (s_qps, s_st, s_ids)
+            a_qps, a_st, a_ids = _drive_async(db, queries, k,
+                                              max_batch=max_batch,
+                                              max_inflight=2)
+            if async_best is None or a_qps > async_best[0]:
+                async_best = (a_qps, a_st, a_ids)
+        sync_qps, sync_st, sync_ids = sync_best
+        rows.append({"path": f"sync_pump_max_{engine}", "engine": engine,
+                     "qps": sync_qps, "p50_ms": sync_st["p50_ms"],
+                     "p99_ms": sync_st["p99_ms"],
+                     "parity": float(np.array_equal(sync_ids, oracle))})
+
+        async_qps, st, ids = async_best
+        rows.append({"path": f"async_max_{engine}", "engine": engine,
+                     "qps": async_qps, "p50_ms": st["p50_ms"],
+                     "p99_ms": st["p99_ms"],
+                     "queue_depth_max": st["queue_depth_max"],
+                     "speedup_vs_sync": async_qps / sync_qps,
+                     "parity": float(np.array_equal(ids, oracle))})
+
+        # paced closed loop, BOTH fronts on the same arrival schedule —
+        # this is the serving comparison the async front exists for: the
+        # pump must stop accepting while it serves, the continuous batcher
+        # never does, so past the pump's small-batch capacity the sync
+        # curve falls behind on achieved QPS and its from-arrival p99
+        # explodes while the async curve stays on target.
+        def paced_key(run):  # rank: hit the target first, then lowest p99
+            qps, st, _ = run
+            return (min(qps, 0.99 * tq), -st["p99_ms"])
+
+        for tq in targets:
+            s_best = a_best = None  # best-of-2, interleaved (noise guard)
+            for _ in range(2):
+                s = _sync_paced(db, queries, k, tq, max_batch)
+                if s_best is None or paced_key(s) > paced_key(s_best):
+                    s_best = s
+                a = _drive_async(db, queries, k, target_qps=tq,
+                                 n_clients=n_clients, max_batch=max_batch)
+                if a_best is None or paced_key(a) > paced_key(a_best):
+                    a_best = a
+            s_qps, st, ids = s_best
+            rows.append({"path": f"sync_paced_{engine}_q{tq}",
+                         "engine": engine, "target_qps": tq,
+                         "achieved_qps": s_qps, "p50_ms": st["p50_ms"],
+                         "p99_ms": st["p99_ms"],
+                         "parity": float(np.array_equal(ids, oracle))})
+            a_qps, st, ids = a_best
+            rows.append({"path": f"closed_loop_{engine}_q{tq}",
+                         "engine": engine, "target_qps": tq,
+                         "achieved_qps": a_qps, "p50_ms": st["p50_ms"],
+                         "p99_ms": st["p99_ms"],
+                         "queue_depth_max": st["queue_depth_max"],
+                         "rejected": st.get("rejected", 0),
+                         "speedup_vs_sync": a_qps / s_qps,
+                         "parity": float(np.array_equal(ids, oracle))})
+    return rows
+
+
 def main(quick: bool = False):
     rows = run(n_corpus=1000 if quick else 5000,
                n_requests=100 if quick else 400)
@@ -37,7 +243,17 @@ def main(quick: bool = False):
         print(f"serve,{r['engine']},{r['max_batch']},{r['p50_ms']:.3f},"
               f"{r['p99_ms']:.3f},{r['mean_ms']:.3f},"
               f"{r.get('plan_misses', -1)},{r['top1_acc']:.3f}")
-    return rows
+    arows = serve_async(
+        n_corpus=2000 if quick else 20_000,
+        n_requests=300 if quick else 2000,
+        targets=(100, 200) if quick else (100, 400, 800, 1600))
+    print("name,path,qps_or_target,achieved,p50_ms,p99_ms,parity")
+    for r in arows:
+        qps = r.get("qps", r.get("achieved_qps", 0.0))
+        print(f"serve_async,{r['path']},{r.get('target_qps', '-')},"
+              f"{qps:.1f},{r['p50_ms']:.3f},{r['p99_ms']:.3f},"
+              f"{r['parity']:.0f}")
+    return {"micro_batch": rows, "serve_async": arows}
 
 
 if __name__ == "__main__":

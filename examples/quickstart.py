@@ -2,6 +2,10 @@
 engines — the paper's core loop in ~40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Where to go next: docs/ARCHITECTURE.md for the layer map,
+docs/BENCHMARKS.md for every committed BENCH_*.json baseline and how to
+reproduce it, examples/serve_vectordb.py for the serving fronts.
 """
 import numpy as np
 
@@ -131,6 +135,9 @@ def main():
     print(f"\nquery: {q[:60]}...")
     for s, h in zip(np.asarray(scores)[0], hits[0]):
         print(f"  {s:.3f}  {h[:60]}...")
+    print("\nfull-size engine baselines: see docs/BENCHMARKS.md "
+          "(BENCH_pq_adc / BENCH_ivf_adc / BENCH_mutation / "
+          "BENCH_serve_async)")
 
 
 if __name__ == "__main__":

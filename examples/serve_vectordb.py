@@ -1,19 +1,26 @@
 """Serve a vector DB with batched requests — the production query path.
 
-Loads a corpus, then drives the QueryEngine with a synthetic request stream
-(bursty Poisson-ish arrivals), printing p50/p99 and accuracy per engine.
+Loads a corpus, then drives BOTH serving fronts with a synthetic request
+stream, printing p50/p99 and accuracy per engine:
+
+  * ``QueryEngine`` — the synchronous pump (caller's thread drives it);
+  * ``AsyncQueryEngine`` — the continuous-batching front: concurrent
+    submitter threads, futures, a write folded mid-stream (read-your-
+    writes), bounded queue + backpressure gauges.
+
 Also demos the sharded multi-device path when more than one jax device is
 visible (XLA_FLAGS=--xla_force_host_platform_device_count=8).
 
     PYTHONPATH=src python examples/serve_vectordb.py
 """
+import threading
 import time
 
 import jax
 import numpy as np
 
 from repro.core import DistributedVectorDB, VectorDB
-from repro.serve import QueryEngine
+from repro.serve import AsyncQueryEngine, QueryEngine
 
 
 def drive(engine_name: str, db, corpus, n_requests: int = 300):
@@ -33,6 +40,39 @@ def drive(engine_name: str, db, corpus, n_requests: int = 300):
           f"p50={st['p50_ms']:.2f}ms p99={st['p99_ms']:.2f}ms")
 
 
+def drive_async(engine_name: str, db, corpus, n_requests: int = 300,
+                n_clients: int = 4):
+    """The continuous-batching front: n_clients threads submit futures
+    concurrently; one insert rides along mid-stream and every later read
+    observes it (queue arrival order is execution order)."""
+    rng = np.random.default_rng(1)
+    queries = (corpus[np.arange(n_requests) % len(corpus)]
+               + 0.02 * rng.normal(size=(n_requests, corpus.shape[1]))
+               ).astype(np.float32)
+    futs = [None] * n_requests
+    with AsyncQueryEngine(db, max_batch=32, max_wait_ms=1.0,
+                          max_queue=256, overflow="block") as eng:
+        def client(c):
+            for i in range(c, n_requests, n_clients):
+                futs[i] = eng.submit(queries[i], k=5)
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(n_clients)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        wfut = eng.submit_write("insert", queries[:1])  # folds into the queue
+        eng.drain(timeout=120)
+        st = eng.latency_stats()
+        correct = sum(int(np.asarray(futs[i].result()[1])[0] == i % len(corpus))
+                      for i in range(n_requests))
+        print(f"  {engine_name:18s} acc={correct/n_requests:.3f} "
+              f"p50={st['p50_ms']:.2f}ms p99={st['p99_ms']:.2f}ms "
+              f"qdepth_max={st['queue_depth_max']} "
+              f"writes={st['write_inserts']} (id {wfut.result()[1][0]})")
+
+
 def main():
     rng = np.random.default_rng(0)
     corpus = rng.normal(size=(20_000, 128)).astype(np.float32)
@@ -40,6 +80,10 @@ def main():
     for engine in ("flat", "int8", "ivf"):
         db = VectorDB(engine, metric="cosine").load(corpus)
         drive(engine, db, corpus)
+    print("async continuous batching (4 concurrent clients + 1 write):")
+    for engine in ("flat", "ivf_pq"):
+        db = VectorDB(engine, metric="cosine").load(corpus)
+        drive_async(f"async {engine}", db, corpus)
     if len(jax.devices()) > 1:
         mesh = jax.make_mesh((len(jax.devices()),), ("data",))
         db = DistributedVectorDB(mesh, metric="cosine")

@@ -77,6 +77,32 @@ def register_engine(name: str, cls: Type) -> None:
 PLAN_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 
 
+class _WriteFront:
+    """The serving layer's single write entry point: one call dispatches any
+    of the four mutation kinds, so the synchronous pump and the async
+    batcher (repro.serve) share one write body instead of each hand-rolling
+    the kind->method mapping. Like the mutation methods themselves this is
+    NOT thread-safe — the serving fronts serialize all writes (and writes
+    against queries) on one thread."""
+
+    WRITE_KINDS = ("insert", "delete", "upsert", "compact")
+
+    def apply_write(self, kind: str, vectors=None, ids=None):
+        """Apply one write batch by kind. Returns the mutation's native
+        result: assigned ids (insert/upsert), live-row count (delete), or
+        the stats dict (compact)."""
+        if kind == "insert":
+            return self.insert(vectors, ids)
+        if kind == "delete":
+            return self.delete(ids)
+        if kind == "upsert":
+            return self.upsert(vectors, ids)
+        if kind == "compact":
+            return self.compact()
+        raise ValueError(
+            f"unknown write kind {kind!r}; have {self.WRITE_KINDS}")
+
+
 class _PlanLedger:
     """Jit-plan bookkeeping shared by every query front (single-host AND
     mesh): canonicalize the batch to the PLAN_BUCKETS ladder, count
@@ -127,8 +153,15 @@ def _empty_result(Q: int, k: int):
     return (jnp.zeros((Q, 0), jnp.float32), jnp.full((Q, 0), -1, jnp.int32))
 
 
-class VectorDB(_PlanLedger):
-    """Single-host front end over the engine registry."""
+class VectorDB(_PlanLedger, _WriteFront):
+    """Single-host front end over the engine registry.
+
+    Thread-safety: a VectorDB is single-writer/single-reader — queries and
+    mutations share host mirrors and the lazy device-sync flag, so callers
+    must serialize access. The serving fronts do exactly that: the
+    synchronous ``QueryEngine`` runs on the caller's thread, and the async
+    front's batcher thread is the ONLY thread that ever touches the DB
+    (see ``repro.serve.async_engine``)."""
 
     def __init__(self, engine: str = "flat", metric: str = "cosine", **engine_kwargs):
         if engine not in ENGINES:
@@ -177,19 +210,30 @@ class VectorDB(_PlanLedger):
         return out
 
     def insert(self, vectors, ids=None) -> np.ndarray:
-        """Append rows online; returns the assigned (stable) ids."""
+        """Append rows online; returns the assigned (stable) ids — ids are
+        never reused or renumbered, so results stay meaningful across
+        mutations. Applies to host mirrors immediately; the next query
+        uploads the dirty arrays once (lazy device sync). Not thread-safe:
+        serialize against queries (the serve fronts do)."""
         return self._mutate("insert", vectors, ids)
 
     def delete(self, ids) -> int:
-        """Tombstone rows by id; returns how many were live."""
+        """Tombstone rows by id; returns how many were live. Deleted slots
+        ride through the fused kernels as the -1 pad sentinel (query work
+        does not shrink until ``compact``), and the ids stay retired
+        forever. Same thread-safety rule as ``insert``."""
         return self._mutate("delete", ids)
 
     def upsert(self, vectors, ids) -> np.ndarray:
-        """Re-encode existing ids in place (update-or-resurrect)."""
+        """Re-encode existing ids in place (update-or-resurrect). Same
+        thread-safety rule as ``insert``."""
         return self._mutate("upsert", vectors, ids)
 
     def compact(self) -> dict:
-        """Reclaim tombstoned query work (engine-specific; see engines)."""
+        """Reclaim tombstoned query work (engine-specific; see engines).
+        Repacks layout structures without changing capacity buckets, so
+        compiled query plans survive. Same thread-safety rule as
+        ``insert``."""
         return self._mutate("compact")
 
     def reserve(self, *args):
@@ -404,7 +448,7 @@ class DistributedPQ(_PlanLedger):
         return int(self.codes.size + self.codebooks.size * 4 * self.n_shards)
 
 
-class DistributedIVFPQ(_PlanLedger, MutationMixin):
+class DistributedIVFPQ(_PlanLedger, _WriteFront, MutationMixin):
     """IVF-PQ serving under the mesh: inverted-list BLOCKS range-sharded,
     coarse structures replicated — the bucket-resident fused path at pod
     scale.

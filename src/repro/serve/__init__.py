@@ -1,4 +1,6 @@
 from repro.serve.engine import QueryEngine, Request, WriteRequest
+from repro.serve.async_engine import AsyncQueryEngine, BackpressureError
 from repro.serve.decode import DecodeLoop
 
-__all__ = ["QueryEngine", "Request", "WriteRequest", "DecodeLoop"]
+__all__ = ["QueryEngine", "AsyncQueryEngine", "BackpressureError",
+           "Request", "WriteRequest", "DecodeLoop"]

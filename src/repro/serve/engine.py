@@ -1,10 +1,20 @@
-"""Batched query serving for the vector DB.
+"""Batched query serving for the vector DB — the synchronous pump front.
 
 The paper benchmarks one query at a time; production serving amortizes the
-encoder forward + MXU scoring over micro-batches. ``QueryEngine`` collects
-requests until ``max_batch`` or ``max_wait_ms`` (whichever first), pads to a
-fixed set of bucket sizes so jit caches stay warm (one compile per bucket,
-not per batch size), runs encode -> db.query, and scatters results back.
+encoder forward + MXU scoring over micro-batches. Two fronts share this
+module's batching machinery:
+
+  * ``QueryEngine`` (here) — the SYNCHRONOUS pump: the caller's thread
+    drives ``pump()``; submit returns a request id, results are polled via
+    ``result(rid)``. Deterministic and single-threaded, it is the oracle
+    the async front is tested against.
+  * ``AsyncQueryEngine`` (``repro.serve.async_engine``) — the CONTINUOUS-
+    BATCHING front: thread-safe ``submit``/``submit_write`` returning
+    futures, a background batcher thread draining a bounded queue, and a
+    completer thread overlapping host work with device scoring. Same
+    batch assembly, same write ordering, same bucket ladder — via the
+    shared helpers below (``bucket_of`` / ``assemble_queries`` /
+    ``apply_db_write``), so the two fronts cannot drift.
 
 Query execution
 ---------------
@@ -27,10 +37,12 @@ Write execution
 SAME queue as reads. ``pump`` preserves arrival order: writes at the queue
 head apply immediately (they are not latency-batched), and a read
 micro-batch never reaches past the next queued write — so every read
-observes exactly the writes submitted before it (READ-YOUR-WRITES within
-the pump loop), while reads between two writes still batch together. A
-write that overflows a capacity bucket surfaces as a plan miss on the next
-query via the shared ledger's ``plan_generation``.
+observes exactly the writes submitted before it and never a later one
+(READ-YOUR-WRITES within the pump loop), while reads between two writes
+still batch together. A write that overflows a capacity bucket surfaces as
+a plan miss on the next query via the shared ledger's ``plan_generation``.
+Both fronts route writes through ``VectorDB.apply_write`` — the single
+write entry point in ``repro.core.db`` — so write dispatch has one body.
 
 ``latency_stats`` reports enqueue->result p50/p99 per request plus the
 DB's plan-cache counters AND its mutation counters
@@ -64,6 +76,7 @@ class Request:
     t_enqueue: float = 0.0
     result: Optional[tuple] = None
     t_done: float = 0.0
+    future: Optional[object] = None  # set by the async front only
 
 
 @dataclasses.dataclass
@@ -75,9 +88,85 @@ class WriteRequest:
     t_enqueue: float = 0.0
     result: Optional[tuple] = None  # (kind, returned ids / count / stats)
     t_done: float = 0.0
+    future: Optional[object] = None  # set by the async front only
+
+
+# --------------------------------------------------------------- shared
+# batch machinery used by BOTH serving fronts (sync pump + async batcher)
+
+def bucket_of(n: int, buckets=PLAN_BUCKETS) -> int:
+    """Smallest ladder bucket holding n requests (caps at the top rung —
+    the fronts never assemble batches past max_batch anyway)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def assemble_queries(take: List[Request], bucket: int) -> np.ndarray:
+    """Stack a read micro-batch and pad it up to its bucket by repeating
+    the last query — padded rows are independent of the real rows in every
+    engine, so they cannot change the first len(take) results."""
+    q = np.stack([r.query for r in take])
+    if bucket > len(take):
+        q = np.concatenate([q, np.repeat(q[-1:], bucket - len(take), axis=0)])
+    return q
+
+
+def apply_db_write(db, kind: str, vectors=None, ids=None):
+    """Route one write batch to the DB front. Prefers the front's
+    ``apply_write`` entry point (``repro.core.db``); falls back to
+    attribute dispatch for duck-typed fronts that only expose the four
+    mutation methods."""
+    fn = getattr(db, "apply_write", None)
+    if fn is not None:
+        return fn(kind, vectors=vectors, ids=ids)
+    if kind == "insert":
+        return db.insert(vectors, ids)
+    if kind == "delete":
+        return db.delete(ids)
+    if kind == "upsert":
+        return db.upsert(vectors, ids)
+    if kind == "compact":
+        return db.compact()
+    raise ValueError(f"unknown write kind {kind!r}; have {WRITE_KINDS}")
+
+
+def summarize_latencies(latencies_ms, writes_applied: int, db,
+                        extra: Optional[dict] = None) -> Dict[str, float]:
+    """The one ``latency_stats`` body: enqueue->result percentiles +
+    the DB's plan-cache and mutation counters (when the front keeps them).
+    ``extra`` lets the async front append its queue-depth/backpressure
+    gauges without duplicating this."""
+    if not latencies_ms and not writes_applied and not extra:
+        return {}
+    stats = {"engine": getattr(db, "engine_name", "?")}
+    if latencies_ms:
+        a = np.asarray(latencies_ms)
+        stats.update({"p50_ms": float(np.percentile(a, 50)),
+                      "p99_ms": float(np.percentile(a, 99)),
+                      "mean_ms": float(a.mean()), "n": int(a.size)})
+    plans = getattr(db, "plan_stats", None)
+    if plans is not None:  # compiled-plan reuse (misses = first compiles)
+        stats["plan_hits"] = int(plans["hits"])
+        stats["plan_misses"] = int(plans["misses"])
+    muts = getattr(db, "mutation_stats", None)
+    if muts is not None:  # write/compaction counters (rows applied)
+        stats.update({f"write_{k}": int(v) for k, v in muts.items()})
+    if extra:
+        stats.update(extra)
+    return stats
 
 
 class QueryEngine:
+    """The synchronous pump front (see module docstring).
+
+    NOT thread-safe: one thread owns the engine and drives ``pump()`` —
+    which is exactly what makes it the deterministic oracle for
+    ``AsyncQueryEngine`` parity tests. For concurrent submitters, bounded
+    queues, and backpressure, use the async front.
+    """
+
     BUCKETS = PLAN_BUCKETS  # one ladder for encoder pads and DB query plans
 
     def __init__(self, db, *, encoder: Optional[Callable] = None,
@@ -93,6 +182,10 @@ class QueryEngine:
         self.writes_applied = 0
 
     def submit(self, query: np.ndarray, k: int = 10) -> int:
+        """Enqueue one read; returns the request id to poll via
+        ``result``. The query is captured as-is ((d,) embedding, or token
+        ids when the engine has an encoder); nothing runs until the next
+        ``pump``."""
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, np.asarray(query), k, time.perf_counter()))
@@ -101,7 +194,8 @@ class QueryEngine:
     def submit_write(self, kind: str, vectors=None, ids=None) -> int:
         """Enqueue a write batch (insert/delete/upsert/compact). Writes keep
         arrival order relative to reads: a read submitted after this write
-        is guaranteed to observe it (read-your-writes)."""
+        is guaranteed to observe it, and a read submitted before it is
+        guaranteed NOT to (read-your-writes, both directions)."""
         assert kind in WRITE_KINDS, kind
         rid = self._next_id
         self._next_id += 1
@@ -111,21 +205,8 @@ class QueryEngine:
             None if ids is None else np.asarray(ids), time.perf_counter()))
         return rid
 
-    def _bucket(self, n: int) -> int:
-        for b in self.BUCKETS:
-            if n <= b:
-                return b
-        return self.BUCKETS[-1]
-
     def _apply_write(self, w: WriteRequest) -> None:
-        if w.kind == "insert":
-            out = self.db.insert(w.vectors, w.ids)
-        elif w.kind == "delete":
-            out = self.db.delete(w.ids)
-        elif w.kind == "upsert":
-            out = self.db.upsert(w.vectors, w.ids)
-        else:
-            out = self.db.compact()
+        out = apply_db_write(self.db, w.kind, w.vectors, w.ids)
         w.result = (w.kind, out)
         w.t_done = time.perf_counter()
         self.done[w.rid] = w
@@ -155,11 +236,8 @@ class QueryEngine:
         take = self.queue[:n_reads]
         self.queue = self.queue[n_reads:]
         n = len(take)
-        bucket = self._bucket(n)
         k = max(r.k for r in take)
-        q = np.stack([r.query for r in take])
-        if bucket > n:  # pad with repeats; jit sees only bucket shapes
-            q = np.concatenate([q, np.repeat(q[-1:], bucket - n, axis=0)])
+        q = assemble_queries(take, bucket_of(n, self.BUCKETS))
         qv = self.encoder(q) if self.encoder is not None else q
         scores, ids = self.db.query(qv, k=k)
         scores, ids = jax.device_get((scores, ids))  # the batch's one host sync
@@ -178,23 +256,16 @@ class QueryEngine:
         return served
 
     def result(self, rid: int):
+        """Completed result for a request id, or None while pending. Reads
+        resolve to (scores (k,), ids (k,)); writes to (kind, engine
+        return — assigned ids for insert/upsert, live-row count for
+        delete, stats dict for compact)."""
         r = self.done.get(rid)
         return None if r is None else r.result
 
     def latency_stats(self) -> Dict[str, float]:
-        if not self.latencies_ms and not self.writes_applied:
-            return {}
-        stats = {"engine": getattr(self.db, "engine_name", "?")}
-        if self.latencies_ms:
-            a = np.asarray(self.latencies_ms)
-            stats.update({"p50_ms": float(np.percentile(a, 50)),
-                          "p99_ms": float(np.percentile(a, 99)),
-                          "mean_ms": float(a.mean()), "n": int(a.size)})
-        plans = getattr(self.db, "plan_stats", None)
-        if plans is not None:  # compiled-plan reuse (misses = first compiles)
-            stats["plan_hits"] = int(plans["hits"])
-            stats["plan_misses"] = int(plans["misses"])
-        muts = getattr(self.db, "mutation_stats", None)
-        if muts is not None:  # write/compaction counters (rows applied)
-            stats.update({f"write_{k}": int(v) for k, v in muts.items()})
-        return stats
+        """Enqueue->result p50/p99/mean per served read + the DB front's
+        plan-cache (``plan_hits``/``plan_misses``) and mutation
+        (``write_*``) counters. Empty dict before any request resolves."""
+        return summarize_latencies(self.latencies_ms, self.writes_applied,
+                                   self.db)

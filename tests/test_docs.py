@@ -1,0 +1,80 @@
+"""Docs stay true: every file path and ``repro.*`` dotted reference in
+README.md / docs/*.md must resolve against the tree it documents.
+
+Docs rot by reference first — a renamed module or moved benchmark leaves
+the prose pointing at nothing. This is the CI docs gate: extraction is
+deliberately dumb (inline backtick spans only, fenced code stripped), so
+anything it flags is a reference a reader would try to follow.
+"""
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/BENCHMARKS.md"]
+
+# names documented as *generated* artifacts (CI smoke output, repro
+# command outputs) — they must not exist in the tree
+GENERATED = {"bench_smoke.json", "bench_full.json"}
+
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_SPAN = re.compile(r"`([^`\n]+)`")
+_PATHY = re.compile(r"^[\w./-]+$")
+_ROOT_FILE = re.compile(r"^[\w.-]+\.(py|md|json|yml|toml|txt)$")
+_DOTTED = re.compile(r"^repro(\.\w+)+$")
+
+
+def _spans(doc):
+    text = (REPO / doc).read_text()
+    return [m.group(1) for m in _SPAN.finditer(_FENCE.sub("", text))]
+
+
+@pytest.mark.parametrize("doc", DOCS)
+def test_file_references_resolve(doc):
+    missing = []
+    for span in _spans(doc):
+        token = span.split("::")[0]  # path.py::symbol -> the file part
+        looks_like_path = "/" in token and _PATHY.match(token)
+        looks_like_root_file = _ROOT_FILE.match(token)
+        if not (looks_like_path or looks_like_root_file):
+            continue
+        if token in GENERATED or token.startswith("bench_full"):
+            continue
+        if not (REPO / token).exists():
+            missing.append(span)
+    assert not missing, f"{doc} references missing files: {missing}"
+
+
+@pytest.mark.parametrize("doc", DOCS)
+def test_dotted_references_import(doc):
+    broken = []
+    for span in _spans(doc):
+        if not _DOTTED.match(span):
+            continue
+        parts = span.split(".")
+        obj = None
+        for cut in range(len(parts), 0, -1):
+            try:
+                obj = importlib.import_module(".".join(parts[:cut]))
+            except ImportError:
+                continue
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr, None)
+                if obj is None:
+                    break
+            break
+        if obj is None:
+            broken.append(span)
+    assert not broken, f"{doc} has dangling repro.* references: {broken}"
+
+
+def test_docs_exist_and_name_the_invariants():
+    """README + ARCHITECTURE are the PR-6 deliverables; ARCHITECTURE must
+    keep documenting the three cross-PR invariants by their anchors."""
+    arch = (REPO / "docs/ARCHITECTURE.md").read_text()
+    for anchor in ("expand_visit", "-1", "PLAN_BUCKETS"):
+        assert anchor in arch, f"ARCHITECTURE.md lost invariant: {anchor}"
+    readme = (REPO / "README.md").read_text()
+    assert "pytest" in readme  # the tier-1 command stays documented
