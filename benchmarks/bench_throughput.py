@@ -18,6 +18,11 @@ Measures (CPU walltime; the TPU numbers live in the dry-run roofline):
     compact() cost, 1:8 write/read interleaved serving, and recall@10
     after 20% churn vs a rebuilt-from-scratch index (the third CI gate);
     the committed full-size run is ``BENCH_mutation.json``,
+  * the durability lifecycle (``wal_paths``): write QPS with no WAL vs
+    fsync-per-record vs group commit through the async front, recovery
+    walltime vs WAL tail length, and a crash-mid-ingest recovery whose
+    top-k must match an uncrashed twin bit-for-bit (the recovery CI
+    gate); the committed full-size run is ``BENCH_wal.json``,
   * ``DistributedPQ`` per-device resident bytes vs a replicated f32 corpus
     on a forced multi-device host mesh (subprocess).
 
@@ -414,6 +419,148 @@ def mutation_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
     return rows
 
 
+def wal_paths(n_writes: int = 400, wal_lengths=(200, 1000), N: int = 4096,
+              d: int = 64, seed: int = 0):
+    """The durability lifecycle: what the WAL costs and how fast it recovers.
+
+      * raw log append throughput, fsync-per-record vs group commit — the
+        durability layer alone, no engine apply, so the ratio isolates the
+        fsync policy (the committed full-size criterion: group commit
+        >= 5x fsync-per-record),
+      * end-to-end write QPS through the async front for the three
+        durability arms — no WAL / fsync-per-record / group commit — same
+        engine, same 1-row insert stream, acks held until the covering
+        fsync: what durability costs a serving stack whose walltime also
+        contains the engine apply,
+      * recovery walltime vs WAL length: restore = snapshot load + L-record
+        tail replay through the mutation API,
+      * recovery_smoke — crash mid-ingest at ``wal.append.post``, recover,
+        and compare top-10 ids against an uncrashed twin that applied
+        exactly the surviving prefix: parity must be 1.0 (the CI recovery
+        gate; recovery is bit-for-bit, not best-effort).
+    """
+    import shutil
+    import tempfile
+
+    from repro.core.wal import WriteAheadLog
+    from repro.ft.faults import SimulatedCrash, inject_crashes
+    from repro.serve import AsyncQueryEngine
+
+    rng = np.random.default_rng(seed)
+    n_clusters = max(8, N // 128)
+    corpus = _clustered(rng, N, d, n_clusters)
+    stream = _clustered(rng, max(n_writes + 1, max(wal_lengths), 64), d,
+                        n_clusters)
+    kw = dict(metric="cosine", m=8, nprobe=8, refine=0,
+              compact_threshold=None)
+    root = tempfile.mkdtemp(prefix="bench_wal")
+    rows = []
+    try:
+        base = os.path.join(root, "base")
+        VectorDB("ivf_pq", **kw).load(corpus).save_index(base, step=0)
+
+        # ---- raw log appends: the fsync policy in isolation (the
+        # committed >= 5x group-commit criterion reads these two rows)
+        raw_n = max(200, n_writes)
+        row1 = stream[:1]
+        raw_qps = {}
+        for arm, interval in (("wal_append_fsync_each", 0.0),
+                              ("wal_append_group_commit", 5.0)):
+            wal, _ = WriteAheadLog.open(os.path.join(root, f"{arm}.log"),
+                                        fsync_interval_ms=interval)
+            t0 = time.perf_counter()
+            for i in range(raw_n):
+                wal.append("insert", row1, np.array([i]))
+            wal.sync()
+            raw_qps[arm] = raw_n / (time.perf_counter() - t0)
+            rows.append({"path": arm, "n_writes": raw_n,
+                         "writes_per_s": raw_qps[arm],
+                         "wal_records": wal.appends,
+                         "wal_fsyncs": wal.fsyncs})
+            wal.close()
+        rows.append({"path": "speedup_group_commit_vs_fsync_each",
+                     "n_writes": raw_n,
+                     "writes_per_s": raw_qps["wal_append_group_commit"]
+                     / raw_qps["wal_append_fsync_each"]})
+
+        def fresh(arm, durable, interval):
+            work = os.path.join(root, arm)
+            shutil.copytree(base, work)
+            db = VectorDB("ivf_pq", **kw).restore_index(
+                work, durable=durable, fsync_interval_ms=interval)
+            db.reserve(n_writes + 64, 8)  # keep the append path amortized
+            return db
+
+        # ---- write QPS per durability arm
+        qps = {}
+        for arm, durable, interval in (("wal_off", False, 0.0),
+                                       ("wal_fsync_each", True, 0.0),
+                                       ("wal_group_commit", True, 5.0)):
+            db = fresh(arm, durable, interval)
+            eng_kw = {"fsync_interval_ms": interval} if durable else {}
+            with AsyncQueryEngine(db, max_batch=64, max_wait_ms=0.5,
+                                  **eng_kw) as eng:
+                eng.submit_write("insert", stream[:1]).result(timeout=60)
+                t0 = time.perf_counter()
+                futs = [eng.submit_write("insert", stream[i:i + 1])
+                        for i in range(1, n_writes + 1)]
+                for f in futs:
+                    f.result(timeout=300)
+                qps[arm] = n_writes / (time.perf_counter() - t0)
+            st = db.wal_stats or {}
+            rows.append({"path": arm, "n_writes": n_writes,
+                         "writes_per_s": qps[arm],
+                         "wal_records": int(st.get("records", 0)),
+                         "wal_fsyncs": int(st.get("fsyncs", 0))})
+            if db.wal is not None:
+                db.wal.close()
+
+        # ---- recovery walltime vs WAL tail length
+        for L in wal_lengths:
+            work = os.path.join(root, f"recover_{L}")
+            shutil.copytree(base, work)
+            db = VectorDB("ivf_pq", **kw).restore_index(
+                work, durable=True, fsync_interval_ms=50.0)
+            db.reserve(L + 64, 8)
+            for i in range(L):
+                db.insert(stream[i:i + 1])
+            db.wal.close()
+            t0 = time.perf_counter()
+            db2 = VectorDB("ivf_pq", **kw).restore_index(work, durable=True)
+            dt = time.perf_counter() - t0
+            assert db2.wal.recovered_records == L, db2.wal.stats
+            rows.append({"path": f"recovery_wal{L}", "wal_records": L,
+                         "recovery_s": dt, "replays_per_s": L / dt})
+            db2.wal.close()
+
+        # ---- crash mid-ingest, recover, bit-for-bit parity (the CI gate)
+        work = os.path.join(root, "smoke")
+        shutil.copytree(base, work)
+        db = VectorDB("ivf_pq", **kw).restore_index(work, durable=True)
+        n_batches, crash_at = 16, 9
+        with inject_crashes("wal.append.post", hits=crash_at):
+            try:
+                for i in range(n_batches):
+                    db.insert(stream[i * 4:(i + 1) * 4])
+            except SimulatedCrash:
+                pass
+        recovered = VectorDB("ivf_pq", **kw).restore_index(work, durable=True)
+        twin = VectorDB("ivf_pq", **kw).restore_index(base)
+        for i in range(crash_at):  # append.post: the crashing record is on disk
+            twin.insert(stream[i * 4:(i + 1) * 4])
+        q = _clustered(rng, 64, d, n_clusters)
+        parity = float(np.mean(np.asarray(recovered.query(q, k=10)[1])
+                               == np.asarray(twin.query(q, k=10)[1])))
+        rows.append({"path": "recovery_smoke",
+                     "crashpoint": "wal.append.post",
+                     "wal_records": int(recovered.wal.stats["replayed"]),
+                     "parity": parity})
+        recovered.wal.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
 _DIST_PQ_SNIPPET = """
 import json
 import jax, numpy as np
@@ -505,6 +652,16 @@ def main(quick: bool = False, json_path: str | None = None):
                           else f"{kk}={vv}" for kk, vv in r.items()
                           if kk not in ("path", "N"))
         print(f"mutation,{r['path']},{r['N']},{extras}")
+    results["wal"] = wal_paths(
+        n_writes=60 if quick else 400,
+        wal_lengths=(30,) if quick else (200, 1000),
+        N=1024 if quick else 4096)
+    print("name,path,fields")
+    for r in results["wal"]:
+        extras = ",".join(f"{kk}={vv:.4f}" if isinstance(vv, float)
+                          else f"{kk}={vv}" for kk, vv in r.items()
+                          if kk != "path")
+        print(f"wal,{r['path']},{extras}")
     results["distributed_pq"] = distributed_pq_memory(
         shards=4, N=2048 if quick else 4096)
     dp = results["distributed_pq"]

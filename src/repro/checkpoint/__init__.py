@@ -1,6 +1,9 @@
-from repro.checkpoint.store import (CheckpointStore, latest_step, load_arrays,
+from repro.checkpoint.store import (AsyncSaveHandle, CheckpointStore,
+                                    is_valid_step, latest_step,
+                                    latest_valid_step, load_arrays,
                                     load_meta, restore, restore_resharded,
-                                    save)
+                                    save, valid_steps)
 
-__all__ = ["CheckpointStore", "save", "restore", "restore_resharded",
-           "latest_step", "load_arrays", "load_meta"]
+__all__ = ["AsyncSaveHandle", "CheckpointStore", "save", "restore",
+           "restore_resharded", "latest_step", "latest_valid_step",
+           "is_valid_step", "valid_steps", "load_arrays", "load_meta"]

@@ -10,7 +10,15 @@ Design points for pod scale:
   * ``CheckpointStore.save_async`` runs serialization on a background thread
     — the train loop donates nothing and keeps stepping (async checkpointing).
   * atomic commit: writes go to step_<n>.tmp/, renamed on completion, so a
-    failure mid-save never corrupts the latest checkpoint.
+    failure mid-save never corrupts the latest checkpoint. Every file is
+    fsync'd before the rename and the parent DIRECTORY is fsync'd after it
+    — without the directory fsync the rename itself can be lost on power
+    failure, which would silently roll the "committed" snapshot back.
+  * crash-point hooks (``repro.ft.faults.crashpoint``) mark each commit
+    boundary so the durability tests can kill the process-state at every
+    one and assert recovery; ``valid_steps`` is the recovery-side twin —
+    it reports only steps whose manifest parses and whose leaf files all
+    exist, so restore skips half-written directories instead of crashing.
 """
 from __future__ import annotations
 
@@ -18,12 +26,15 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import time
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import ml_dtypes  # registers bfloat16/float8 with np.dtype  # noqa: F401
 import numpy as np
+
+from repro.ft.faults import crashpoint
 
 _NATIVE_KINDS = "?bifucOSU"
 
@@ -55,15 +66,49 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    """Directory-entry durability: after a rename inside ``path``, the
+    rename itself is only committed once the directory is fsync'd.
+    Best-effort on filesystems that reject directory fsync."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(tree, directory: str, step: int, *, pspecs=None, chunk_mb: int = 512,
          meta=None):
     """Serialize a pytree. pspecs: optional matching pytree of PartitionSpecs
     recorded in the manifest for restore-time resharding. ``meta``: optional
     JSON-able dict stamped into the manifest (index snapshots record the
-    engine, metric, mutation generation, and live-row count here, so a
-    snapshot's provenance is readable without loading a single leaf)."""
+    engine, metric, mutation generation, live-row count — and under
+    durable mode the WAL high-water ``wal_lsn`` — so a snapshot's
+    provenance is readable without loading a single leaf).
+
+    Commit protocol: leaves + manifest into ``step_<n>.tmp/`` (each file
+    fsync'd), rename to the final name, fsync the parent directory. A
+    crash at any point leaves either the previous committed snapshot
+    intact or the new one fully committed — never a half state that
+    ``valid_steps`` would report."""
+    crashpoint("snapshot.write.pre")
     tmp = os.path.join(directory, f"step_{step:08d}.tmp")
     final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(tmp):  # stale debris from a crashed earlier save
+        shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "leaves": {}}
     if meta is not None:
@@ -82,6 +127,7 @@ def save(tree, directory: str, step: int, *, pspecs=None, chunk_mb: int = 512,
         for ci, start in enumerate(range(0, rows.shape[0], per)):
             f = f"{fname}.{ci}.npy"
             np.save(os.path.join(tmp, f), rows[start:start + per])
+            _fsync_file(os.path.join(tmp, f))
             files.append(f)
         manifest["leaves"][key] = {
             "shape": list(arr.shape), "dtype": logical_dtype, "files": files,
@@ -89,9 +135,16 @@ def save(tree, directory: str, step: int, *, pspecs=None, chunk_mb: int = 512,
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as fh:
         json.dump(manifest, fh, indent=1)
+        fh.flush()
+        os.fsync(fh.fileno())
+    crashpoint("snapshot.manifest.post")
+    crashpoint("snapshot.rename.pre")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    crashpoint("snapshot.rename.post")
+    _fsync_dir(directory)
+    crashpoint("snapshot.fsync.post")
     return final
 
 
@@ -109,6 +162,39 @@ def latest_step(directory: str) -> Optional[int]:
     steps = [int(d.split("_")[1]) for d in os.listdir(directory)
              if d.startswith("step_") and not d.endswith(".tmp")]
     return max(steps) if steps else None
+
+
+def is_valid_step(directory: str, step: int) -> bool:
+    """A step is valid when its manifest parses and every leaf file it
+    names exists — the recovery-side definition of "committed". Leftover
+    ``step_<n>.tmp/`` debris never qualifies (wrong name), and a renamed
+    dir missing files (corruption, partial copy) is rejected here instead
+    of exploding mid-``load_arrays``."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as fh:
+            manifest = json.load(fh)
+        for meta in manifest["leaves"].values():
+            for f in meta["files"]:
+                if not os.path.exists(os.path.join(path, f)):
+                    return False
+    except (OSError, ValueError, KeyError):
+        return False
+    return True
+
+
+def valid_steps(directory: str) -> List[int]:
+    """Ascending committed-and-complete steps (see ``is_valid_step``)."""
+    if not os.path.isdir(directory):
+        return []
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return [s for s in steps if is_valid_step(directory, s)]
+
+
+def latest_valid_step(directory: str) -> Optional[int]:
+    steps = valid_steps(directory)
+    return steps[-1] if steps else None
 
 
 def _load_manifest(directory: str, step: int):
@@ -177,37 +263,104 @@ def restore_resharded(tree_like, directory: str, step: int, mesh, make_sharding)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-class CheckpointStore:
-    """Directory-rooted store with retention + async background saves."""
+class AsyncSaveHandle:
+    """Completion handle for ``CheckpointStore.save_async``. A background
+    save that fails after its retries must not vanish with its daemon
+    thread: the terminal exception is stored here, ``result()`` / the
+    store's next ``wait()`` re-raise it on the caller's thread."""
 
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, step: int):
+        self.step = step
+        self.path: Optional[str] = None
+        self.attempts = 0
+        self._exc: Optional[BaseException] = None
+        self._done = threading.Event()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def exception(self, timeout: Optional[float] = None):
+        self._done.wait(timeout)
+        return self._exc
+
+    def result(self, timeout: Optional[float] = None) -> str:
+        """The committed snapshot path; re-raises the terminal failure."""
+        self._done.wait(timeout)
+        if self._exc is not None:
+            raise self._exc
+        return self.path
+
+
+class CheckpointStore:
+    """Directory-rooted store with retention + async background saves.
+    ``retries``/``backoff_s``: transient I/O errors (OSError) during an
+    async save are retried with exponential backoff before the failure
+    is declared terminal on the returned handle."""
+
+    def __init__(self, directory: str, keep: int = 3, retries: int = 3,
+                 backoff_s: float = 0.05):
         self.directory = directory
         self.keep = keep
+        self.retries = retries
+        self.backoff_s = backoff_s
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._handle: Optional[AsyncSaveHandle] = None
 
     def save(self, tree, step: int, *, pspecs=None):
         out = save(tree, self.directory, step, pspecs=pspecs)
         self._gc()
         return out
 
-    def save_async(self, tree, step: int, *, pspecs=None):
-        """Snapshot to host memory now, write on a background thread."""
+    def save_async(self, tree, step: int, *, pspecs=None) -> AsyncSaveHandle:
+        """Snapshot to host memory now, write on a background thread.
+        Returns a handle; transient OSErrors retry with backoff, and a
+        terminal failure surfaces on the handle (and on the next
+        ``wait()``) instead of dying silently with the thread."""
         host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
         self.wait()
-        self._thread = threading.Thread(
-            target=lambda: (save(host_tree, self.directory, step, pspecs=pspecs),
-                            self._gc()),
-            daemon=True)
+        handle = AsyncSaveHandle(step)
+
+        def _run():
+            try:
+                for attempt in range(self.retries + 1):
+                    handle.attempts = attempt + 1
+                    try:
+                        handle.path = save(host_tree, self.directory, step,
+                                           pspecs=pspecs)
+                        self._gc()
+                        return
+                    except OSError as e:
+                        if attempt == self.retries:
+                            raise
+                        del e
+                        time.sleep(self.backoff_s * (2 ** attempt))
+            except BaseException as e:  # terminal: surface, don't swallow
+                handle._exc = e
+            finally:
+                handle._done.set()
+
+        self._handle = handle
+        self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()
+        return handle
 
     def wait(self):
+        """Join the in-flight async save; re-raises its terminal failure
+        (the train loop finds out at the next checkpoint boundary, not
+        never)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+            handle, self._handle = self._handle, None
+            if handle is not None and handle._exc is not None:
+                raise handle._exc
 
     def latest_step(self):
         return latest_step(self.directory)
+
+    def valid_steps(self):
+        return valid_steps(self.directory)
 
     def restore(self, tree_like, step: Optional[int] = None):
         step = self.latest_step() if step is None else step

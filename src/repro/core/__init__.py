@@ -23,13 +23,14 @@ from repro.core.mutable import GrowableRows, MutableIndex
 from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, ivf_pq_search,
                            pq_decode, pq_encode, pq_search, train_pq)
 from repro.core.quant import Int8FlatIndex, int8_search, quantize_rows
+from repro.core.wal import WalRecord, WriteAheadLog
 
 __all__ = [
     "ENGINES", "METRICS", "PLAN_BUCKETS", "VectorDB", "DistributedIVFPQ",
     "DistributedPQ", "DistributedVectorDB", "register_engine",
     "FlatIndex", "IVFIndex", "GraphIndex", "LSHIndex", "Int8FlatIndex",
     "PQIndex", "IVFPQIndex", "MutableIndex", "GrowableRows",
-    "BlockListLayout",
+    "BlockListLayout", "WriteAheadLog", "WalRecord",
     "flat_search", "ivf_search", "beam_search", "lsh_search", "int8_search",
     "pq_search", "ivf_pq_search", "train_pq", "pq_encode", "pq_decode",
     "adc_tables", "kmeans", "assign_from_buckets", "build_block_lists",

@@ -36,6 +36,8 @@ QueryEngine.latency_stats.
 from __future__ import annotations
 
 import functools
+import os
+import warnings
 from typing import Callable, Dict, Optional, Type
 
 import jax
@@ -55,6 +57,8 @@ from repro.core.mutable import MutationMixin
 from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, expand_visit,
                            pq_encode, probe_luts, train_pq)
 from repro.core.quant import Int8FlatIndex
+from repro.core.wal import WriteAheadLog
+from repro.ft.faults import crashpoint
 from repro.kernels import ops as kops
 
 ENGINES: Dict[str, Type] = {
@@ -169,10 +173,13 @@ class VectorDB(_PlanLedger, _WriteFront):
         assert metric in D.METRICS, metric
         self.engine_name = engine
         self.metric = metric
+        self._engine_kwargs = dict(engine_kwargs)  # fresh-engine rebuilds
         self.index = ENGINES[engine](metric=metric, **engine_kwargs)
         self.n = 0
         self._loaded = False
         self._texts = None
+        self.wal = None  # attached by save_index/restore_index(durable=True)
+        self._wal_replaying = False
         self._plan_init()
 
     # ----------------------------------------------------------- load
@@ -207,7 +214,27 @@ class VectorDB(_PlanLedger, _WriteFront):
             # compiles fresh executables — make the ledger say so
             self.plan_generation += 1
         self.n = getattr(self.index, "size", self.n)
+        if (self.wal is not None and not self._wal_replaying
+                and op in WriteAheadLog.KINDS):
+            self._wal_log(op, args, out)
         return out
+
+    def _wal_log(self, op: str, args, out) -> None:
+        """Append the applied mutation to the WAL. Insert logs the ids the
+        engine ASSIGNED (not the caller's None), so replay re-applies with
+        explicit ids and the recovered id space is bit-identical. reserve
+        is not logged: capacity pre-sizing changes no query result, and
+        replayed mutations re-grow capacity deterministically."""
+        if op == "insert":
+            self.wal.append("insert", vectors=np.asarray(args[0]),
+                            ids=np.asarray(out))
+        elif op == "delete":
+            self.wal.append("delete", ids=np.asarray(args[0]))
+        elif op == "upsert":
+            self.wal.append("upsert", vectors=np.asarray(args[0]),
+                            ids=np.asarray(args[1]))
+        elif op == "compact":
+            self.wal.append("compact")
 
     def insert(self, vectors, ids=None) -> np.ndarray:
         """Append rows online; returns the assigned (stable) ids — ids are
@@ -286,35 +313,127 @@ class VectorDB(_PlanLedger, _WriteFront):
         return scores, ids, None
 
     # ----------------------------------------------------------- persistence
-    def save_index(self, directory: str, step: int = 0) -> str:
+    def attach_wal(self, directory: str, fsync_interval_ms: float = 0.0,
+                   *, after_lsn: int = 0, replay: bool = False) -> int:
+        """Open (or create) ``<directory>/wal.log`` and start logging every
+        mutation through it. With ``replay=True`` the intact records with
+        lsn > after_lsn are re-applied through ``apply_write`` first (the
+        recovery path); re-logging is suppressed during replay — the
+        records are already in the log. Returns the replayed count."""
+        path = os.path.join(directory, "wal.log")
+        self.wal, records = WriteAheadLog.open(
+            path, fsync_interval_ms=fsync_interval_ms, after_lsn=after_lsn)
+        n = 0
+        if replay:
+            self._wal_replaying = True
+            try:
+                for rec in records:
+                    self.apply_write(rec.kind, vectors=rec.vectors,
+                                     ids=rec.ids)
+                    n += 1
+            finally:
+                self._wal_replaying = False
+        return n
+
+    def save_index(self, directory: str, step: int = 0, *,
+                   durable: bool = False,
+                   fsync_interval_ms: float = 0.0) -> str:
         """Snapshot the engine's trained state (codebooks/codes/centroids —
         plus tombstone state and the generation stamp on mutable engines)
         through the sharding-aware checkpoint store. Engines opt in by
-        implementing ``state_dict()``."""
+        implementing ``state_dict()``.
+
+        ``durable=True`` attaches (or keeps) the directory's write-ahead
+        log: the manifest stamps the WAL high-water mark ``wal_lsn``, and
+        after the snapshot commits the log is truncated to the records
+        past it. A crash between snapshot rename and truncation is safe —
+        restore skips records at or below the stamped lsn."""
         state_dict = getattr(self.index, "state_dict", None)
         if state_dict is None:
             raise NotImplementedError(
                 f"engine {self.engine_name!r} does not support persistence")
+        if durable and self.wal is None:
+            os.makedirs(directory, exist_ok=True)
+            self.attach_wal(directory, fsync_interval_ms)
         meta = {"engine": self.engine_name, "metric": self.metric,
                 "generation": int(self.generation),
                 "live_rows": int(getattr(self.index, "size", self.n))}
-        return ckpt.save(state_dict(), directory, step, meta=meta)
+        if self.wal is not None:
+            self.wal.sync()  # the snapshot must not outrun the log
+            meta["wal_lsn"] = int(self.wal.last_lsn)
+        out = ckpt.save(state_dict(), directory, step, meta=meta)
+        if self.wal is not None:
+            crashpoint("wal.truncate.pre")
+            self.wal.truncate_through(meta["wal_lsn"])
+        return out
 
-    def restore_index(self, directory: str, step: Optional[int] = None) -> "VectorDB":
+    def restore_index(self, directory: str, step: Optional[int] = None, *,
+                      durable: bool = False,
+                      fsync_interval_ms: float = 0.0) -> "VectorDB":
         """Load a saved index snapshot into this (fresh) VectorDB — no
         retraining; shapes come from the checkpoint manifest. A snapshot of
         a mutated index round-trips exactly: tombstoned ids stay retired
-        and the restored layout serves bit-identical results."""
-        load_state = getattr(self.index, "load_state", None)
-        if load_state is None:
+        and the restored layout serves bit-identical results.
+
+        Robust to partial/corrupt snapshots: leftover ``step_<n>.tmp/``
+        dirs never qualify, and a step whose manifest or leaf files are
+        missing (or that fails mid-load) is skipped with a warning,
+        falling back to the next-latest valid step. When no step loads, a
+        RuntimeError lists what was tried.
+
+        ``durable=True`` then attaches the directory's WAL and replays the
+        record tail past the snapshot's ``wal_lsn`` stamp through the
+        mutation API — recovery = latest valid snapshot + WAL replay."""
+        if getattr(self.index, "load_state", None) is None:
             raise NotImplementedError(
                 f"engine {self.engine_name!r} does not support persistence")
-        step = ckpt.latest_step(directory) if step is None else step
-        assert step is not None, "no index checkpoint to restore"
-        load_state(ckpt.load_arrays(directory, step))
+        steps = [step] if step is not None else ckpt.valid_steps(directory)[::-1]
+        if not steps:
+            raise RuntimeError(
+                f"no valid index snapshot to restore in {directory!r}")
+        errors, chosen = [], None
+        for s in steps:
+            def _skip(e):
+                errors.append(f"step {s}: {type(e).__name__}: {e}")
+                warnings.warn(f"restore_index: skipping snapshot step {s} "
+                              f"({type(e).__name__}: {e})")
+            try:
+                # any failure reading leaves (torn/truncated npy, missing
+                # file, mangled manifest) falls back to an older step
+                arrays = ckpt.load_arrays(directory, s)
+            except (OSError, EOFError, KeyError, ValueError) as e:
+                _skip(e)
+                continue
+            try:
+                self.index.load_state(arrays)
+                chosen = s
+                break
+            # ENGINE validation errors (metric/engine mismatch ValueError)
+            # propagate — every step would refuse identically, and masking
+            # them hides a real bug; structural gaps (missing keys) skip
+            except KeyError as e:
+                _skip(e)
+                # a partial load may have half-populated the engine:
+                # rebuild it fresh before trying the next step
+                self.index = ENGINES[self.engine_name](
+                    metric=self.metric, **self._engine_kwargs)
+        if chosen is None:
+            raise RuntimeError(
+                f"no loadable index snapshot in {directory!r} "
+                f"(tried {list(steps)}): {'; '.join(errors)}")
         self.n = getattr(self.index, "size", 0)
         self._loaded = True
+        if durable:
+            snap_lsn = int(ckpt.load_meta(directory, chosen).get("wal_lsn", 0))
+            self.attach_wal(directory, fsync_interval_ms,
+                            after_lsn=snap_lsn, replay=True)
         return self
+
+    @property
+    def wal_stats(self) -> Optional[dict]:
+        """Durability counters (records/fsyncs/lsn marks) when a WAL is
+        attached; None otherwise. Surfaces in serve ``latency_stats``."""
+        return None if self.wal is None else self.wal.stats
 
 
 class DistributedVectorDB(_PlanLedger):

@@ -1,0 +1,277 @@
+"""Write-ahead log: crash durability for the mutation lifecycle.
+
+Snapshots (``repro.checkpoint``) make a trained index restorable, but
+every mutation since the last snapshot lives only in host mirrors — a
+crash loses it, and the serving fronts would have acknowledged writes
+that were never durable. The WAL closes that window: one framed record
+per ``insert/delete/upsert/compact`` is appended (and fsync'd, per the
+group-commit policy) BEFORE the write is acknowledged, and recovery
+replays the log tail through the existing mutation API on top of the
+latest valid snapshot.
+
+Record format (little-endian)::
+
+    frame   := u32 payload_len | u32 crc32(payload) | payload
+    payload := u32 header_len | header (JSON, utf-8) | vec_bytes | id_bytes
+
+The JSON header carries ``lsn`` (1-based, strictly increasing), ``kind``,
+and the shape/dtype of the two optional array segments, so a record is
+self-describing and replays byte-exactly. CRC framing is what makes a
+torn tail (power loss mid-append) detectable: recovery scans frames from
+the start, stops at the first short/corrupt frame, physically truncates
+the file back to the last intact frame, and replays only what verified —
+graceful degradation, never a crash on restore.
+
+Commit protocol (with ``VectorDB.save_index(durable=True)``):
+
+    1. mutation applies to the engine's host mirrors;
+    2. the record is appended + flushed (``wal.append.post`` boundary);
+    3. fsync — immediately when ``fsync_interval_ms == 0``, else deferred
+       up to that interval so concurrent writes share one fsync (group
+       commit; the async front holds write futures until this point);
+    4. at snapshot commit the manifest stamps ``wal_lsn`` and the log is
+       truncated to the records after it (``wal.truncate.pre`` boundary:
+       a crash between snapshot rename and truncation only means replay
+       skips already-snapshotted records by lsn).
+
+Every boundary calls ``repro.ft.faults.crashpoint`` so the recovery test
+matrix can kill the process-state at each one.
+
+Determinism: replay re-applies each mutation with its LOGGED ids (insert
+records store the ids the engine assigned), and the engines encode
+against codebooks/centroids frozen in the snapshot — so a recovered
+index serves bit-for-bit the results of an uncrashed twin.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import time
+import zlib
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.ft.faults import crashpoint
+
+_FRAME = struct.Struct("<II")  # payload length, crc32(payload)
+_HLEN = struct.Struct("<I")
+# defensive bound for the frame scanner: a corrupt length field must not
+# make recovery attempt a multi-GB allocation (records are mutation
+# batches — far below this)
+MAX_RECORD_BYTES = 1 << 30
+
+WAL_KINDS = ("insert", "delete", "upsert", "compact")
+
+
+@dataclass
+class WalRecord:
+    lsn: int
+    kind: str
+    vectors: Optional[np.ndarray] = None
+    ids: Optional[np.ndarray] = None
+
+
+def _arr_meta(arr) -> Tuple[Optional[dict], bytes]:
+    if arr is None:
+        return None, b""
+    arr = np.ascontiguousarray(arr)
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}, arr.tobytes()
+
+
+def _arr_read(meta, buf: bytes, off: int):
+    if meta is None:
+        return None, off
+    dt = np.dtype(meta["dtype"])
+    n = int(np.prod(meta["shape"], dtype=np.int64)) * dt.itemsize
+    arr = np.frombuffer(buf[off:off + n], dtype=dt).reshape(meta["shape"])
+    return arr.copy(), off + n
+
+
+def encode_record(lsn: int, kind: str, vectors=None, ids=None) -> bytes:
+    """One CRC32-framed record. ``vectors``/``ids`` are optional arrays
+    (insert/upsert log both, delete logs ids, compact logs neither)."""
+    assert kind in WAL_KINDS, kind
+    vmeta, vbytes = _arr_meta(vectors)
+    imeta, ibytes = _arr_meta(ids)
+    header = json.dumps({"lsn": int(lsn), "kind": kind,
+                         "vectors": vmeta, "ids": imeta}).encode()
+    payload = _HLEN.pack(len(header)) + header + vbytes + ibytes
+    return _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def decode_payload(payload: bytes) -> WalRecord:
+    (hlen,) = _HLEN.unpack_from(payload)
+    header = json.loads(payload[_HLEN.size:_HLEN.size + hlen])
+    off = _HLEN.size + hlen
+    vectors, off = _arr_read(header["vectors"], payload, off)
+    ids, _off = _arr_read(header["ids"], payload, off)
+    return WalRecord(int(header["lsn"]), header["kind"], vectors, ids)
+
+
+def _scan(raw: bytes):
+    """Walk frames from the start; stop at the first short, oversized, or
+    CRC-failing frame. Returns (records, valid_bytes, reason) — reason is
+    None for a clean log, else why the tail was cut."""
+    records: List[WalRecord] = []
+    off = 0
+    while off < len(raw):
+        if off + _FRAME.size > len(raw):
+            return records, off, "short frame header"
+        length, crc = _FRAME.unpack_from(raw, off)
+        if length > MAX_RECORD_BYTES:
+            return records, off, f"implausible frame length {length}"
+        payload = raw[off + _FRAME.size: off + _FRAME.size + length]
+        if len(payload) < length:
+            return records, off, "torn frame payload"
+        if zlib.crc32(payload) != crc:
+            return records, off, "crc mismatch"
+        try:
+            records.append(decode_payload(payload))
+        except Exception as e:  # framed but undecodable: same treatment
+            return records, off, f"undecodable payload ({e})"
+        off += _FRAME.size + length
+    return records, off, None
+
+
+def _fsync_dir(path: str) -> None:
+    """Directory-entry durability (file create/rename). Best-effort on
+    filesystems that reject directory fsync."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+class WriteAheadLog:
+    """Append-only log over one file. Not thread-safe — the owning front
+    serializes mutations (the async engine's batcher thread is the only
+    writer), exactly like the engines themselves.
+
+    ``fsync_interval_ms`` is the group-commit knob: 0 fsyncs every append
+    (maximum durability, one disk flush per record); > 0 defers the fsync
+    until that much time has passed since the last one, so a burst of
+    appends shares one flush. ``synced_lsn`` tells callers (the async
+    front) which records are actually durable; they must call ``sync()``
+    before acknowledging anything past it.
+    """
+
+    KINDS = WAL_KINDS
+
+    def __init__(self, path: str, fsync_interval_ms: float = 0.0):
+        self.path = path
+        self.fsync_interval_ms = float(fsync_interval_ms)
+        self.last_lsn = 0     # highest lsn appended (this process)
+        self.synced_lsn = 0   # highest lsn known fsync'd
+        self.appends = 0
+        self.fsyncs = 0
+        self.bytes_written = 0
+        self.recovered_records = 0
+        self.truncated_bytes = 0
+        self._f = None
+        self._last_sync_t = time.perf_counter()
+
+    # ------------------------------------------------------------- open
+    @classmethod
+    def open(cls, path: str, fsync_interval_ms: float = 0.0,
+             after_lsn: int = 0):
+        """Open (or create) the log at ``path``, validating every frame.
+        A torn/corrupt tail is physically truncated to the last intact
+        frame. Returns ``(wal, records)`` where records are the intact
+        records with lsn > after_lsn, ready to replay."""
+        wal = cls(path, fsync_interval_ms)
+        raw = b""
+        if os.path.exists(path):
+            with open(path, "rb") as fh:
+                raw = fh.read()
+        records, valid, reason = _scan(raw)
+        if reason is not None and valid < len(raw):
+            with open(path, "r+b") as fh:
+                fh.truncate(valid)
+                fh.flush()
+                os.fsync(fh.fileno())
+            wal.truncated_bytes = len(raw) - valid
+        created = not os.path.exists(path)
+        wal._f = open(path, "ab")
+        if created:
+            _fsync_dir(os.path.dirname(path) or ".")
+        replay = [r for r in records if r.lsn > after_lsn]
+        wal.recovered_records = len(replay)
+        wal.last_lsn = wal.synced_lsn = records[-1].lsn if records else 0
+        return wal, replay
+
+    # ----------------------------------------------------------- append
+    def append(self, kind: str, vectors=None, ids=None) -> int:
+        """Frame + write + flush one record; fsync per the group-commit
+        policy. Returns the record's lsn."""
+        lsn = self.last_lsn + 1
+        rec = encode_record(lsn, kind, vectors, ids)
+        crashpoint("wal.append.pre")
+        self._f.write(rec)
+        self._f.flush()  # in the OS now: survives process death, not power
+        self.last_lsn = lsn
+        self.appends += 1
+        self.bytes_written += len(rec)
+        crashpoint("wal.append.post")
+        if (self.fsync_interval_ms == 0.0
+                or (time.perf_counter() - self._last_sync_t) * 1e3
+                >= self.fsync_interval_ms):
+            self.sync()
+        return lsn
+
+    def sync(self) -> None:
+        """Make every appended record durable (no-op when already)."""
+        if self.synced_lsn == self.last_lsn:
+            return
+        os.fsync(self._f.fileno())
+        self.synced_lsn = self.last_lsn
+        self.fsyncs += 1
+        self._last_sync_t = time.perf_counter()
+        crashpoint("wal.sync.post")
+
+    # --------------------------------------------------------- truncate
+    def truncate_through(self, lsn: int) -> None:
+        """Drop records with lsn <= given (they are covered by a committed
+        snapshot). Atomic: the survivors are rewritten to a tmp file that
+        replaces the log, so a crash mid-truncate leaves either the old
+        or the new log — both replay correctly (replay skips by lsn)."""
+        self.sync()
+        self._f.close()
+        with open(self.path, "rb") as fh:
+            records, valid, _reason = _scan(fh.read())
+        keep = [r for r in records if r.lsn > lsn]
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as fh:
+            for r in keep:
+                fh.write(encode_record(r.lsn, r.kind, r.vectors, r.ids))
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, self.path)
+        _fsync_dir(os.path.dirname(self.path) or ".")
+        self._f = open(self.path, "ab")
+
+    def close(self) -> None:
+        if self._f is not None:
+            self.sync()
+            self._f.close()
+            self._f = None
+
+    # ------------------------------------------------------------ stats
+    @property
+    def stats(self) -> dict:
+        """Durability counters for ``latency_stats`` (records vs fsyncs is
+        the group-commit amortization; synced_lsn lags last_lsn by the
+        writes whose acks are still being held)."""
+        return {"records": self.appends, "fsyncs": self.fsyncs,
+                "last_lsn": self.last_lsn, "synced_lsn": self.synced_lsn,
+                "bytes": self.bytes_written,
+                "replayed": self.recovered_records,
+                "truncated_bytes": self.truncated_bytes}

@@ -1,4 +1,25 @@
-from repro.ft.supervisor import (FailureInjector, Supervisor, StragglerMonitor,
-                                 TrainJob)
+"""Fault tolerance: crash-point fault injection (``repro.ft.faults``) and
+the training supervisor (``repro.ft.supervisor``).
 
-__all__ = ["Supervisor", "FailureInjector", "StragglerMonitor", "TrainJob"]
+The supervisor is imported lazily (PEP 562): it depends on
+``repro.checkpoint``, whose store calls ``repro.ft.faults.crashpoint`` at
+its commit boundaries — eager import both ways would be a cycle. The
+faults module is dependency-free, so it loads eagerly and the checkpoint
+store can always reach its hooks.
+"""
+from repro.ft.faults import (CRASH_POINTS, CrashPointInjector,
+                             FailureInjector, NodeFailure, SimulatedCrash,
+                             crashpoint, inject_crashes)
+
+__all__ = ["Supervisor", "FailureInjector", "StragglerMonitor", "TrainJob",
+           "NodeFailure", "SimulatedCrash", "CrashPointInjector",
+           "CRASH_POINTS", "crashpoint", "inject_crashes"]
+
+_LAZY = ("Supervisor", "StragglerMonitor", "TrainJob")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.ft import supervisor
+        return getattr(supervisor, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,133 @@
+"""Fault injection: crash-point hooks + the step-based failure injector.
+
+Durability claims are only as strong as the crash scenarios they survive,
+so this module owns the repo's ONE fault-injection surface:
+
+  * ``crashpoint(name)`` — called by durability-critical code at every
+    commit-protocol boundary (WAL append/fsync/truncate, snapshot
+    write/manifest/rename/directory-fsync). In production it is a no-op
+    costing one list check; under an armed injector (``inject_crashes``)
+    the named point raises ``SimulatedCrash``, which models the process
+    dying AT that boundary: everything already written to disk stays,
+    everything held in memory is discarded by the test, and recovery must
+    reconstruct a consistent state from the disk image alone. The full
+    set of registered points is the static ``CRASH_POINTS`` tuple, so the
+    recovery test matrix can parametrize over every boundary and cannot
+    silently miss one added later (adding a point without extending the
+    tuple is an assertion error the first time it fires under injection).
+  * ``FailureInjector`` — the step-based injector the training supervisor
+    uses (raise ``NodeFailure`` at configured steps), generalized here
+    from ``ft/supervisor.py`` so both fault models live in one module;
+    the supervisor re-exports it for back-compat.
+
+``SimulatedCrash`` subclasses ``BaseException``, not ``Exception``: the
+recovery paths under test legitimately contain ``except Exception``
+blocks (e.g. skipping a corrupt snapshot step), and an injected crash
+must never be swallowed by the very code it exists to test.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+# every registered commit-protocol boundary, in rough commit order:
+# WAL points fire inside repro.core.wal, snapshot points inside
+# repro.checkpoint.store, and wal.truncate.pre inside VectorDB.save_index
+# (between the snapshot commit and the log truncation it authorizes)
+CRASH_POINTS = (
+    "wal.append.pre",        # before the record's bytes reach the file
+    "wal.append.post",       # record written (+flushed), not yet fsync'd
+    "wal.sync.post",         # record fsync'd — the durability point
+    "wal.truncate.pre",      # snapshot committed, WAL not yet truncated
+    "snapshot.write.pre",    # before any snapshot bytes are written
+    "snapshot.manifest.post",  # leaves + manifest in step_<n>.tmp/
+    "snapshot.rename.pre",   # complete tmp dir, final name not yet taken
+    "snapshot.rename.post",  # renamed, parent directory not yet fsync'd
+    "snapshot.fsync.post",   # fully committed snapshot
+)
+
+
+class SimulatedCrash(BaseException):
+    """An injected process death at a named crash point. BaseException so
+    no ``except Exception`` recovery path can accidentally survive it."""
+
+
+class NodeFailure(RuntimeError):
+    """Simulated node loss / preemption."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises NodeFailure at the given steps (once each)."""
+
+    fail_at: Sequence[int] = ()
+    permanent_from: Optional[int] = None  # step after which a device is gone
+
+    def __post_init__(self):
+        self._pending = set(self.fail_at)
+
+    def check(self, step: int):
+        if step in self._pending:
+            self._pending.discard(step)
+            raise NodeFailure(f"injected failure at step {step}")
+        if self.permanent_from is not None and step >= self.permanent_from:
+            raise NodeFailure(f"injected permanent device loss at step {step}")
+
+
+class CrashPointInjector:
+    """Arms a set of crash points; each fires on its n-th hit (default the
+    first). ``fired`` records which points actually killed something, so a
+    test can assert its scenario really exercised the boundary."""
+
+    def __init__(self, points: Union[Dict[str, int], Iterable[str]]):
+        if not isinstance(points, dict):
+            points = {p: 1 for p in points}
+        unknown = set(points) - set(CRASH_POINTS)
+        if unknown:
+            raise ValueError(f"unknown crash points {sorted(unknown)}; "
+                             f"registered: {CRASH_POINTS}")
+        self.arm = dict(points)
+        self.hits = {p: 0 for p in points}
+        self.fired: List[str] = []
+
+    def check(self, name: str) -> None:
+        if name not in self.arm:
+            return
+        self.hits[name] += 1
+        if self.hits[name] == self.arm[name]:
+            self.fired.append(name)
+            raise SimulatedCrash(name)
+
+
+_ACTIVE: List[CrashPointInjector] = []  # stack: nested with-blocks compose
+
+
+def crashpoint(name: str) -> None:
+    """Hook call at a commit-protocol boundary. No-op unless a test armed
+    an injector for this point (then: SimulatedCrash)."""
+    if not _ACTIVE:
+        return
+    assert name in CRASH_POINTS, f"unregistered crash point {name!r}"
+    for inj in _ACTIVE:
+        inj.check(name)
+
+
+@contextlib.contextmanager
+def inject_crashes(points, hits: int = 1):
+    """Arm crash points for the with-block.
+
+    ``points``: one name, an iterable of names, or {name: nth_hit}.
+    ``hits``: which hit fires, for the non-dict forms (1 = first).
+    Yields the injector so callers can assert on ``.fired``.
+    """
+    if isinstance(points, str):
+        points = {points: hits}
+    elif not isinstance(points, dict):
+        points = {p: hits for p in points}
+    inj = CrashPointInjector(points)
+    _ACTIVE.append(inj)
+    try:
+        yield inj
+    finally:
+        _ACTIVE.remove(inj)

@@ -30,28 +30,9 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.checkpoint import CheckpointStore
-
-
-class NodeFailure(RuntimeError):
-    """Simulated node loss / preemption."""
-
-
-@dataclasses.dataclass
-class FailureInjector:
-    """Raises NodeFailure at the given steps (once each)."""
-
-    fail_at: Sequence[int] = ()
-    permanent_from: Optional[int] = None  # step after which a device is gone
-
-    def __post_init__(self):
-        self._pending = set(self.fail_at)
-
-    def check(self, step: int):
-        if step in self._pending:
-            self._pending.discard(step)
-            raise NodeFailure(f"injected failure at step {step}")
-        if self.permanent_from is not None and step >= self.permanent_from:
-            raise NodeFailure(f"injected permanent device loss at step {step}")
+# both injectors live in repro.ft.faults now; re-exported here for
+# back-compat with callers that import them from the supervisor module
+from repro.ft.faults import FailureInjector, NodeFailure  # noqa: F401
 
 
 @dataclasses.dataclass

@@ -191,7 +191,8 @@ class AsyncQueryEngine:
     def __init__(self, db, *, encoder: Optional[Callable] = None,
                  max_batch: int = 64, max_wait_ms: float = 2.0,
                  max_queue: int = 1024, overflow: str = "block",
-                 max_inflight: int = 2, start: bool = True):
+                 max_inflight: int = 2, start: bool = True,
+                 fsync_interval_ms: Optional[float] = None):
         assert overflow in ("block", "reject"), overflow
         self.db = db
         self.encoder = encoder  # tokens -> embeddings; None = raw vectors
@@ -199,6 +200,18 @@ class AsyncQueryEngine:
         self.max_wait_ms = max_wait_ms
         self.max_queue = max_queue
         self.overflow = overflow
+        # group-commit knob: when the DB has a WAL attached, a write's
+        # future resolves only after the fsync covering its record. 0 =
+        # fsync per record; > 0 batches appends into one fsync per window
+        # (the batcher flushes at the deadline, so the ack latency bound
+        # is ~fsync_interval_ms); None = leave the WAL's own policy
+        if fsync_interval_ms is not None:
+            wal = getattr(db, "wal", None)
+            assert wal is not None, "fsync_interval_ms needs a durable DB " \
+                "(save_index/restore_index with durable=True first)"
+            wal.fsync_interval_ms = float(fsync_interval_ms)
+        self._wal_pending: List = []  # applied writes awaiting their fsync
+        self._wal_deadline = 0.0     # batcher-local, armed on first pending
         self._requests = _BoundedFIFO(max_queue)
         self._pending: "collections.deque" = collections.deque()  # batcher-local
         self._inflight: "queue.Queue" = queue.Queue()
@@ -393,8 +406,51 @@ class AsyncQueryEngine:
         w.t_done = time.perf_counter()
         with self._lock:
             self.writes_applied += 1
+        wal = getattr(self.db, "wal", None)
+        if wal is not None and wal.synced_lsn < wal.last_lsn:
+            # group commit: the record is written but not yet fsync'd —
+            # hold the ack until the flush that makes it durable
+            if not self._wal_pending:
+                self._wal_deadline = (time.perf_counter()
+                                      + max(wal.fsync_interval_ms, 0.0) * 1e-3)
+            self._wal_pending.append(w)
+            return
         w.future.set_result(w.result)
         self._resolve_one()
+
+    def _flush_wal(self) -> None:
+        """fsync the WAL and release every ack held for it (batcher thread
+        only, like all DB access)."""
+        if not self._wal_pending:
+            return
+        self.db.wal.sync()
+        held, self._wal_pending = self._wal_pending, []
+        for w in held:
+            w.future.set_result(w.result)
+        self._resolve_one(len(held))
+
+    def _get_job(self, timeout: Optional[float]):
+        """Pop the next queued job, flushing the group-commit window if
+        its deadline expires while we wait (held write acks must not
+        stall behind an idle queue). Raises queue.Empty only once the
+        CALLER's timeout is spent."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        while True:
+            t = (None if deadline is None
+                 else max(deadline - time.perf_counter(), 0.0))
+            if self._wal_pending:
+                rem = max(self._wal_deadline - time.perf_counter(), 0.0)
+                t = rem if t is None else min(t, rem)
+            try:
+                return self._requests.get(t)
+            except queue.Empty:
+                if (self._wal_pending
+                        and time.perf_counter() >= self._wal_deadline):
+                    self._flush_wal()
+                if (deadline is not None
+                        and time.perf_counter() >= deadline):
+                    raise
 
     def _dispatch(self, batch: List[Request]) -> None:
         """Assemble + encode + dispatch one read micro-batch. The caller
@@ -424,7 +480,7 @@ class AsyncQueryEngine:
             if pending:
                 job = pending.popleft()
             else:
-                job = self._requests.get(None)  # block for the first job
+                job = self._get_job(None)  # block for the first job
             if job is _SENTINEL:
                 break
             if self._discard.is_set():
@@ -455,7 +511,7 @@ class AsyncQueryEngine:
                     if remaining <= 0:
                         break
                     try:
-                        nxt = self._requests.get(timeout=remaining)
+                        nxt = self._get_job(remaining)
                     except queue.Empty:
                         break
                 if nxt is _SENTINEL:
@@ -473,6 +529,7 @@ class AsyncQueryEngine:
                 else:
                     self._apply_write(closer)
         self._sweep_after_sentinel()
+        self._flush_wal()  # no ack survives shutdown un-fsync'd
         self._inflight.put(_SENTINEL)
 
     def _sweep_after_sentinel(self) -> None:
@@ -549,7 +606,8 @@ class AsyncQueryEngine:
                      + len(self._pending),
                      "queue_depth_max": self.queue_depth_max,
                      "rejected": self.rejected,
-                     "inflight": self._inflight.qsize()}
+                     "inflight": self._inflight.qsize(),
+                     "durable_pending": len(self._wal_pending)}
             writes = self.writes_applied
         if not lats and not writes and not self.rejected:
             return {}

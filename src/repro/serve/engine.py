@@ -153,6 +153,10 @@ def summarize_latencies(latencies_ms, writes_applied: int, db,
     muts = getattr(db, "mutation_stats", None)
     if muts is not None:  # write/compaction counters (rows applied)
         stats.update({f"write_{k}": int(v) for k, v in muts.items()})
+    wal = getattr(db, "wal_stats", None)
+    if wal is not None:  # durability counters (records vs fsyncs = the
+        # group-commit amortization; synced_lsn lags last_lsn by held acks)
+        stats.update({f"wal_{k}": int(v) for k, v in wal.items()})
     if extra:
         stats.update(extra)
     return stats

@@ -77,6 +77,68 @@ def test_restore_missing_raises(tmp_path, tree):
         store.restore(tree)
 
 
+def test_async_save_retries_transient_io(tmp_path, tree, monkeypatch):
+    """The first two write attempts hit a transient OSError (flaky NFS,
+    blob-store hiccup); the save must retry with backoff and commit."""
+    from repro.checkpoint import store as store_mod
+    real_save = store_mod.save
+    fails = {"n": 2}
+
+    def flaky(*a, **kw):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient write failure")
+        return real_save(*a, **kw)
+
+    monkeypatch.setattr(store_mod, "save", flaky)
+    store = CheckpointStore(str(tmp_path), retries=3, backoff_s=0.001)
+    handle = store.save_async(tree, 7)
+    assert handle.result(timeout=30).endswith("step_00000007")
+    assert handle.attempts == 3 and handle.exception() is None
+    store.wait()  # must NOT re-raise: the save eventually succeeded
+    assert store.latest_step() == 7
+
+
+def test_async_save_terminal_failure_surfaces(tmp_path, tree, monkeypatch):
+    """When retries are exhausted the failure must surface on the handle
+    AND on the store's next wait() — not die silently with the daemon
+    thread, leaving the train loop believing the step was checkpointed."""
+    from repro.checkpoint import store as store_mod
+
+    def doomed(*a, **kw):
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(store_mod, "save", doomed)
+    store = CheckpointStore(str(tmp_path), retries=2, backoff_s=0.001)
+    handle = store.save_async(tree, 9)
+    assert isinstance(handle.exception(timeout=30), OSError)
+    assert handle.attempts == 3  # 1 initial + 2 retries
+    with pytest.raises(OSError, match="disk on fire"):
+        handle.result()
+    with pytest.raises(OSError, match="disk on fire"):
+        store.wait()
+    store.wait()  # failure is delivered once; store is usable again
+    assert store.latest_step() is None
+
+
+def test_valid_steps_filters_partial_dirs(tmp_path, tree):
+    from repro.checkpoint import is_valid_step, latest_valid_step, valid_steps
+    for s in (1, 2, 3):
+        save(tree, str(tmp_path), s)
+    # step 3 loses a leaf file; tmp debris from a crashed save appears
+    step3 = tmp_path / "step_00000003"
+    next(f for f in step3.iterdir() if f.suffix == ".npy").unlink()
+    (tmp_path / "step_00000004.tmp").mkdir()
+    (tmp_path / "step_00000004.tmp" / "manifest.json").write_text("{}")
+    assert valid_steps(str(tmp_path)) == [1, 2]
+    assert latest_valid_step(str(tmp_path)) == 2
+    assert not is_valid_step(str(tmp_path), 3)
+    assert not is_valid_step(str(tmp_path), 4)  # tmp never qualifies
+    # a manifest that parses but is garbage is invalid, not an exception
+    (step3 / "manifest.json").write_text("not json")
+    assert not is_valid_step(str(tmp_path), 3)
+
+
 def test_manifest_records_pspecs(tmp_path, tree):
     from jax.sharding import PartitionSpec as P
     pspecs = {"params": {"w": P("data", None), "b": P()},

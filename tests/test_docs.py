@@ -72,9 +72,9 @@ def test_dotted_references_import(doc):
 
 def test_docs_exist_and_name_the_invariants():
     """README + ARCHITECTURE are the PR-6 deliverables; ARCHITECTURE must
-    keep documenting the three cross-PR invariants by their anchors."""
+    keep documenting the four cross-PR invariants by their anchors."""
     arch = (REPO / "docs/ARCHITECTURE.md").read_text()
-    for anchor in ("expand_visit", "-1", "PLAN_BUCKETS"):
+    for anchor in ("expand_visit", "-1", "PLAN_BUCKETS", "wal_lsn"):
         assert anchor in arch, f"ARCHITECTURE.md lost invariant: {anchor}"
     readme = (REPO / "README.md").read_text()
     assert "pytest" in readme  # the tier-1 command stays documented

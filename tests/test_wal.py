@@ -1,0 +1,420 @@
+"""Durability: write-ahead log + crash-point recovery.
+
+The load-bearing test is the CRASH MATRIX: for every registered crash
+point (``repro.ft.faults.CRASH_POINTS``) a scripted mutation run is
+killed at that boundary, the in-memory state is discarded, and recovery
+(latest valid snapshot + WAL tail replay) must serve BIT-FOR-BIT the
+top-k of an uncrashed oracle that applied exactly the surviving prefix.
+Which prefix survives is determined by the protocol, not the test:
+a record is durable from ``wal.append.post`` on (the bytes are in the
+file), and everything before that boundary loses the in-flight mutation.
+
+Around it: torn/corrupt WAL tails must be CRC-detected and truncated
+(graceful degradation, never a crash on restore), partial snapshot
+directories must be skipped for the latest valid step, group-commit acks
+must amortize fsyncs without acknowledging anything un-fsync'd, and a
+hypothesis fuzz interleaves mutations/crashes/recoveries against the
+dict oracle from test_mutation.
+"""
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core import VectorDB
+from repro.core.wal import WriteAheadLog, decode_payload, encode_record
+from repro.ft.faults import (CRASH_POINTS, SimulatedCrash, crashpoint,
+                             inject_crashes)
+from repro.serve import AsyncQueryEngine
+from test_mutation import _check_exact
+
+D = 8
+# exhaustive config (nprobe = C, refine-everything): the engine answers
+# exact brute force over live rows, so recovered-vs-oracle agreement is
+# bit-for-bit, not recall-flavored
+KW = dict(n_clusters=4, nprobe=4, m=4, ksub=16, refine=4096, block_size=8,
+          compact_threshold=0.5)
+
+
+def _mk_db():
+    return VectorDB("ivf_pq", metric="l2", **KW)
+
+
+@pytest.fixture(scope="module")
+def base_snapshot(tmp_path_factory):
+    """One trained ivf_pq snapshot shared by the whole matrix — kmeans/PQ
+    training is the expensive part and every case restores from it."""
+    rng = np.random.default_rng(7)
+    corpus = rng.normal(size=(48, D)).astype(np.float32)
+    base = tmp_path_factory.mktemp("wal_base")
+    _mk_db().load(corpus).save_index(str(base), step=0)
+    return str(base)
+
+
+def _script(seed: int):
+    """A deterministic mutation script covering all four logged kinds."""
+    rng = np.random.default_rng(seed)
+    return [
+        ("insert", rng.normal(size=(3, D)).astype(np.float32), None),
+        ("delete", None, np.array([1, 5])),
+        ("insert", rng.normal(size=(2, D)).astype(np.float32), None),
+        ("upsert", rng.normal(size=(2, D)).astype(np.float32),
+         np.array([2, 9])),
+        ("compact", None, None),
+        ("insert", rng.normal(size=(1, D)).astype(np.float32), None),
+    ]
+
+
+_SNAP_AT = 3  # save_index(durable) runs before script step 3
+
+
+# ------------------------------------------------------------ WAL basics
+
+def test_wal_record_roundtrip():
+    rec = decode_payload(encode_record(
+        7, "upsert", np.arange(6, dtype=np.float32).reshape(2, 3),
+        np.array([4, 9], np.int64))[8:])
+    assert rec.lsn == 7 and rec.kind == "upsert"
+    assert rec.vectors.dtype == np.float32 and rec.ids.dtype == np.int64
+    np.testing.assert_array_equal(rec.vectors.reshape(-1), np.arange(6))
+    none = decode_payload(encode_record(1, "compact")[8:])
+    assert none.vectors is None and none.ids is None
+
+
+def test_wal_append_reopen_replay(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal, records = WriteAheadLog.open(path)
+    assert records == []
+    wal.append("insert", np.ones((2, 3), np.float32), np.arange(2))
+    wal.append("delete", ids=np.array([0]))
+    wal.close()
+    wal2, records = WriteAheadLog.open(path)
+    assert [r.lsn for r in records] == [1, 2]
+    assert wal2.last_lsn == 2
+    # after_lsn filters already-snapshotted records
+    _wal3, tail = WriteAheadLog.open(path, after_lsn=1)
+    assert [r.lsn for r in tail] == [2]
+
+
+def test_wal_torn_tail_truncated_not_raised(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal, _ = WriteAheadLog.open(path)
+    for i in range(3):
+        wal.append("insert", np.full((1, 2), i, np.float32), np.array([i]))
+    wal.close()
+    good_size = os.path.getsize(path)
+    with open(path, "ab") as fh:  # a torn append: half a frame of junk
+        fh.write(b"\x13\x00\x00\x00TORNTORN")
+    wal2, records = WriteAheadLog.open(path)
+    assert [r.lsn for r in records] == [1, 2, 3]
+    assert wal2.truncated_bytes == 12
+    assert os.path.getsize(path) == good_size  # physically truncated
+    # and appending after recovery keeps the log scannable
+    wal2.append("delete", ids=np.array([1]))
+    wal2.close()
+    _, records = WriteAheadLog.open(path)
+    assert [r.lsn for r in records] == [1, 2, 3, 4]
+
+
+def test_wal_crc_corruption_cuts_tail(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal, _ = WriteAheadLog.open(path)
+    offsets = [0]
+    for i in range(3):
+        wal.append("insert", np.full((1, 2), i, np.float32), np.array([i]))
+        offsets.append(wal.bytes_written)
+    wal.close()
+    raw = bytearray(open(path, "rb").read())
+    raw[offsets[1] + 12] ^= 0xFF  # flip a payload byte of record 2
+    open(path, "wb").write(bytes(raw))
+    wal2, records = WriteAheadLog.open(path)
+    # record 2's frame fails CRC: it AND everything after it is cut —
+    # a log is only trustworthy up to its first broken frame
+    assert [r.lsn for r in records] == [1]
+    assert wal2.truncated_bytes == len(raw) - offsets[1]
+
+
+def test_wal_group_commit_defers_fsync(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal, _ = WriteAheadLog.open(path, fsync_interval_ms=10_000.0)
+    for i in range(5):
+        wal.append("insert", np.ones((1, 2), np.float32), np.array([i]))
+    assert wal.last_lsn == 5 and wal.synced_lsn < 5  # deferred
+    assert wal.fsyncs == 0
+    wal.sync()
+    assert wal.synced_lsn == 5 and wal.fsyncs == 1
+    wal.sync()
+    assert wal.fsyncs == 1  # no-op when already durable
+    wal.close()
+
+
+# ----------------------------------------------------- crash-point matrix
+
+@pytest.mark.parametrize("point", CRASH_POINTS)
+def test_crashpoint_recovery_matrix(base_snapshot, tmp_path, point):
+    """Kill the process-state at every registered boundary; recovery must
+    agree bit-for-bit with an uncrashed oracle over the surviving prefix."""
+    work = str(tmp_path / "db")
+    shutil.copytree(base_snapshot, work)
+    script = _script(11)
+    db = _mk_db().restore_index(work, durable=True)
+    applied = 0
+    with inject_crashes(point) as inj:
+        try:
+            for i, (kind, vec, ids) in enumerate(script):
+                if i == _SNAP_AT:
+                    db.save_index(work, step=1, durable=True)
+                db.apply_write(kind, vectors=vec, ids=ids)
+                applied += 1
+        except SimulatedCrash:
+            pass
+    assert inj.fired == [point], f"{point} never fired"
+    del db  # the crash discards all in-memory state
+
+    # what the protocol promises survived: wal.append.pre dies before the
+    # record hits the file (in-flight mutation lost); append.post/sync.post
+    # die after (record durable); the snapshot-path points fire inside the
+    # step-_SNAP_AT save, losing nothing already logged
+    surviving = applied + (1 if point in ("wal.append.post",
+                                          "wal.sync.post") else 0)
+
+    recovered = _mk_db().restore_index(work, durable=True)
+    oracle = _mk_db().restore_index(base_snapshot)
+    for kind, vec, ids in script[:surviving]:
+        oracle.apply_write(kind, vectors=vec, ids=ids)
+    assert recovered.n == oracle.n
+    q = np.random.default_rng(5).normal(size=(6, D)).astype(np.float32)
+    s0, i0 = oracle.query(q, k=5)
+    s1, i1 = recovered.query(q, k=5)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    # and the recovered instance keeps accepting durable writes
+    recovered.apply_write("insert", vectors=q[:1], ids=None)
+    assert recovered.wal.synced_lsn == recovered.wal.last_lsn
+
+
+def test_crash_between_snapshot_rename_and_truncate_replays_by_lsn(
+        base_snapshot, tmp_path):
+    """The wal.truncate.pre window: snapshot committed, log untruncated —
+    replay must skip records the snapshot already covers (by lsn), or
+    every covered mutation would double-apply."""
+    work = str(tmp_path / "db")
+    shutil.copytree(base_snapshot, work)
+    db = _mk_db().restore_index(work, durable=True)
+    rng = np.random.default_rng(3)
+    db.insert(rng.normal(size=(2, D)).astype(np.float32))
+    with inject_crashes("wal.truncate.pre"):
+        with pytest.raises(SimulatedCrash):
+            db.save_index(work, step=1, durable=True)
+    del db
+    # the untruncated log still holds lsn 1; step 1's manifest covers it
+    assert ckpt.load_meta(work, 1)["wal_lsn"] == 1
+    recovered = _mk_db().restore_index(work, durable=True)
+    assert recovered.wal.recovered_records == 0  # skipped, not re-applied
+    assert recovered.n == 50
+
+
+def test_torn_wal_tail_recovers_prefix(base_snapshot, tmp_path):
+    """End-to-end graceful degradation: a torn tail loses ONLY the torn
+    record; the intact prefix replays and serving continues."""
+    work = str(tmp_path / "db")
+    shutil.copytree(base_snapshot, work)
+    db = _mk_db().restore_index(work, durable=True)
+    rng = np.random.default_rng(9)
+    rows = rng.normal(size=(3, D)).astype(np.float32)
+    db.insert(rows[:1])
+    db.insert(rows[1:2])
+    del db
+    wal_path = os.path.join(work, "wal.log")
+    raw = open(wal_path, "rb").read()
+    open(wal_path, "wb").write(raw[:-7])  # tear the last record mid-frame
+    recovered = _mk_db().restore_index(work, durable=True)
+    assert recovered.wal.recovered_records == 1
+    assert recovered.wal.truncated_bytes > 0
+    oracle = _mk_db().restore_index(base_snapshot)
+    oracle.insert(rows[:1])
+    q = rng.normal(size=(4, D)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(recovered.query(q, k=5)[1]),
+        np.asarray(oracle.query(q, k=5)[1]))
+
+
+# ------------------------------------------------- snapshot-dir fallback
+
+def test_restore_skips_partial_and_corrupt_steps(tmp_path, rng):
+    corpus = rng.normal(size=(40, D)).astype(np.float32)
+    db = VectorDB("pq", m=4, ksub=16, refine=4096).load(corpus)
+    db.save_index(str(tmp_path), step=0)
+    db.insert(rng.normal(size=(5, D)).astype(np.float32))
+    db.save_index(str(tmp_path), step=1)
+    db.insert(rng.normal(size=(5, D)).astype(np.float32))
+    db.save_index(str(tmp_path), step=2)
+    # step 2: a leaf file vanishes (partial copy / corruption)
+    step2 = tmp_path / "step_00000002"
+    next(f for f in step2.iterdir() if f.suffix == ".npy").unlink()
+    # step 1: a leaf file is truncated mid-write
+    step1 = tmp_path / "step_00000001"
+    leaf = next(f for f in step1.iterdir() if f.suffix == ".npy")
+    with open(leaf, "r+b") as fh:
+        fh.truncate(fh.seek(0, os.SEEK_END) // 2)
+    # plus leftover tmp debris from a crashed save
+    (tmp_path / "step_00000003.tmp").mkdir()
+    assert ckpt.valid_steps(str(tmp_path)) == [0, 1]  # 2 fails leaf check
+    with pytest.warns(UserWarning, match="skipping snapshot step 1"):
+        db2 = VectorDB("pq", m=4, ksub=16,
+                       refine=4096).restore_index(str(tmp_path))
+    assert db2.n == 40  # fell back to step 0
+    # no valid step at all -> one clear error, not a mid-load explosion
+    shutil.rmtree(tmp_path / "step_00000000")
+    with pytest.raises(RuntimeError, match="no"):
+        VectorDB("pq", m=4, ksub=16, refine=4096).restore_index(
+            str(tmp_path))
+
+
+# -------------------------------------------------- async group commit
+
+def test_async_engine_acks_only_after_fsync(base_snapshot, tmp_path):
+    work = str(tmp_path / "db")
+    shutil.copytree(base_snapshot, work)
+    rng = np.random.default_rng(2)
+    db = _mk_db().restore_index(work, durable=True)
+    with AsyncQueryEngine(db, max_batch=8, max_wait_ms=1.0,
+                          fsync_interval_ms=20.0) as eng:
+        futs = [eng.submit_write(
+            "insert", rng.normal(size=(1, D)).astype(np.float32))
+            for _ in range(16)]
+        for f in futs:
+            kind, ids = f.result(timeout=30)
+            # the ack is the durability promise: by the time the future
+            # resolves, the record covering this write must be fsync'd.
+            # writes apply in order, 1 row each, base next_id=48 — so the
+            # write that got id i is WAL lsn (i - 47)
+            assert db.wal.synced_lsn >= int(ids[0]) - 47
+        eng.drain(timeout=30)
+        st = eng.latency_stats()
+    assert st["wal_records"] == 16
+    assert st["wal_fsyncs"] < st["wal_records"]  # group commit amortized
+    assert st["wal_synced_lsn"] == st["wal_last_lsn"] == 16
+    assert st["durable_pending"] == 0
+    # fsync-per-record mode: one flush per write
+    db2 = _mk_db().restore_index(work, durable=True)
+    assert db2.wal.recovered_records == 16
+    with AsyncQueryEngine(db2, fsync_interval_ms=0.0) as eng:
+        for _ in range(4):
+            eng.submit_write(
+                "insert",
+                rng.normal(size=(1, D)).astype(np.float32)).result(timeout=30)
+        st = eng.latency_stats()
+    assert st["wal_fsyncs"] == st["wal_records"] == 4
+
+
+# ------------------------------------------------------------- the fuzz
+
+_WAL_CRASH_POINTS = ("wal.append.pre", "wal.append.post", "wal.sync.post")
+
+
+def _run_crash_fuzz(seed: int, n_steps: int = 14):
+    """Random interleaving of mutations, snapshots, crashes, and
+    recoveries on a durable ivf_pq vs the dict oracle: after every
+    recovery (and at the end) top-k must exactly match brute force over
+    the rows the durability protocol says survived."""
+    rng = np.random.default_rng(seed)
+    work = tempfile.mkdtemp(prefix="walfuzz")
+    try:
+        n0 = 40
+        corpus = rng.normal(size=(n0, D)).astype(np.float32)
+        db = _mk_db().load(corpus)
+        db.save_index(work, step=0, durable=True)
+        vecs = {i: corpus[i] for i in range(n0)}
+        q = rng.normal(size=(3, D)).astype(np.float32)
+        snap_step = 1
+        for step in range(n_steps):
+            op = rng.choice(["insert", "delete", "upsert", "compact",
+                             "snapshot", "crash"],
+                            p=[0.3, 0.15, 0.15, 0.05, 0.1, 0.25])
+            if op == "snapshot":
+                db.save_index(work, step=snap_step, durable=True)
+                snap_step += 1
+                continue
+            if op == "crash":
+                point = str(rng.choice(_WAL_CRASH_POINTS))
+                kind = str(rng.choice(["insert", "delete"]))
+                rows = rng.normal(size=(1, D)).astype(np.float32)
+                del_ids = np.array([sorted(vecs)[0]]) if vecs else np.array([0])
+                next_id = db.index.next_id
+                with inject_crashes(point) as inj:
+                    try:
+                        if kind == "insert":
+                            db.apply_write("insert", vectors=rows)
+                        else:
+                            db.apply_write("delete", ids=del_ids)
+                    except SimulatedCrash:
+                        pass
+                db.wal._f.close()  # the dead process holds no handles
+                db = _mk_db().restore_index(work, durable=True)
+                if inj.fired and point != "wal.append.pre":
+                    # the record made it to disk: the mutation survived
+                    if kind == "insert":
+                        vecs[int(next_id)] = rows[0]
+                    else:
+                        vecs.pop(int(del_ids[0]), None)
+                _check_exact(db, vecs, q, 6, "l2",
+                             f"step {step} recover {point}/{kind}")
+                continue
+            if op == "insert":
+                rows = rng.normal(
+                    size=(int(rng.integers(1, 4)), D)).astype(np.float32)
+                ids = db.insert(rows)
+                vecs.update({int(i): r for i, r in zip(ids, rows)})
+            elif op == "delete" and vecs:
+                take = rng.choice(sorted(vecs),
+                                  size=min(len(vecs),
+                                           int(rng.integers(1, 4))),
+                                  replace=False)
+                db.delete(take)
+                for i in take:
+                    vecs.pop(int(i))
+            elif op == "upsert":
+                ids = np.unique(rng.integers(0, db.index.next_id, size=2))
+                rows = rng.normal(size=(ids.size, D)).astype(np.float32)
+                db.upsert(rows, ids)
+                vecs.update({int(i): r for i, r in zip(ids, rows)})
+            else:
+                db.compact()
+        # final recovery must agree even without a crash in between
+        db.wal._f.close()
+        db = _mk_db().restore_index(work, durable=True)
+        _check_exact(db, vecs, q, 6, "l2", "final recover")
+        assert db.n == len(vecs)
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+def test_crash_recovery_fuzz_seeded():
+    """Always runs (no hypothesis dependency): two fixed seeds."""
+    _run_crash_fuzz(seed=0)
+    _run_crash_fuzz(seed=1)
+
+
+def test_crash_recovery_fuzz_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=5, deadline=None)
+    def run(seed):
+        _run_crash_fuzz(seed=seed, n_steps=10)
+
+    run()
+
+
+def test_crashpoint_is_noop_when_unarmed():
+    crashpoint("wal.append.post")  # nothing armed: must not raise
+    with pytest.raises(AssertionError):
+        with inject_crashes("wal.append.post"):
+            crashpoint("not.a.point")
+    with pytest.raises(ValueError, match="unknown crash points"):
+        inject_crashes("also.not.a.point").__enter__()
