@@ -355,6 +355,17 @@ class VectorDB(_PlanLedger, _WriteFront):
         if durable and self.wal is None:
             os.makedirs(directory, exist_ok=True)
             self.attach_wal(directory, fsync_interval_ms)
+        if self.wal is not None:
+            # the manifest's wal_lsn stamp only means something for the log
+            # sitting NEXT TO the snapshot — stamping (and truncating) a log
+            # in another directory would strand the post-snapshot records
+            # where no restore of this directory can find them
+            expected = os.path.join(directory, "wal.log")
+            if os.path.abspath(self.wal.path) != os.path.abspath(expected):
+                raise ValueError(
+                    f"save_index: WAL is attached at {self.wal.path!r} but "
+                    f"the snapshot targets {directory!r}; write durable "
+                    "snapshots to the WAL's own directory")
         meta = {"engine": self.engine_name, "metric": self.metric,
                 "generation": int(self.generation),
                 "live_rows": int(getattr(self.index, "size", self.n))}

@@ -205,7 +205,14 @@ class WriteAheadLog:
             _fsync_dir(os.path.dirname(path) or ".")
         replay = [r for r in records if r.lsn > after_lsn]
         wal.recovered_records = len(replay)
-        wal.last_lsn = wal.synced_lsn = records[-1].lsn if records else 0
+        # floor the counters at the snapshot stamp: after a commit-time
+        # truncation the log may be empty (or reach only below after_lsn),
+        # but new appends must still receive lsns ABOVE it — otherwise the
+        # next recovery's replay filter (lsn > after_lsn) would silently
+        # drop acknowledged, fsync'd writes. Harmless on the crash-before-
+        # truncate path, where the surviving records already reach it.
+        wal.last_lsn = wal.synced_lsn = max(
+            records[-1].lsn if records else 0, after_lsn)
         return wal, replay
 
     # ----------------------------------------------------------- append

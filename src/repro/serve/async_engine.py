@@ -212,6 +212,7 @@ class AsyncQueryEngine:
             wal.fsync_interval_ms = float(fsync_interval_ms)
         self._wal_pending: List = []  # applied writes awaiting their fsync
         self._wal_deadline = 0.0     # batcher-local, armed on first pending
+        self._durable_pending = 0    # len(_wal_pending) mirror, under _lock
         self._requests = _BoundedFIFO(max_queue)
         self._pending: "collections.deque" = collections.deque()  # batcher-local
         self._inflight: "queue.Queue" = queue.Queue()
@@ -414,6 +415,8 @@ class AsyncQueryEngine:
                 self._wal_deadline = (time.perf_counter()
                                       + max(wal.fsync_interval_ms, 0.0) * 1e-3)
             self._wal_pending.append(w)
+            with self._lock:  # lock-protected mirror for latency_stats
+                self._durable_pending += 1
             return
         w.future.set_result(w.result)
         self._resolve_one()
@@ -425,6 +428,8 @@ class AsyncQueryEngine:
             return
         self.db.wal.sync()
         held, self._wal_pending = self._wal_pending, []
+        with self._lock:
+            self._durable_pending -= len(held)
         for w in held:
             w.future.set_result(w.result)
         self._resolve_one(len(held))
@@ -607,7 +612,7 @@ class AsyncQueryEngine:
                      "queue_depth_max": self.queue_depth_max,
                      "rejected": self.rejected,
                      "inflight": self._inflight.qsize(),
-                     "durable_pending": len(self._wal_pending)}
+                     "durable_pending": self._durable_pending}
             writes = self.writes_applied
         if not lats and not writes and not self.rejected:
             return {}

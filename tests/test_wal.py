@@ -97,6 +97,12 @@ def test_wal_append_reopen_replay(tmp_path):
     # after_lsn filters already-snapshotted records
     _wal3, tail = WriteAheadLog.open(path, after_lsn=1)
     assert [r.lsn for r in tail] == [2]
+    # counters floor at after_lsn even when the log holds nothing (the
+    # post-truncation restart): new lsns must stay above the stamp
+    wal4, none = WriteAheadLog.open(str(tmp_path / "empty.log"), after_lsn=7)
+    assert none == []
+    assert wal4.last_lsn == 7 and wal4.synced_lsn == 7
+    wal4.close()
 
 
 def test_wal_torn_tail_truncated_not_raised(tmp_path):
@@ -215,6 +221,52 @@ def test_crash_between_snapshot_rename_and_truncate_replays_by_lsn(
     recovered = _mk_db().restore_index(work, durable=True)
     assert recovered.wal.recovered_records == 0  # skipped, not re-applied
     assert recovered.n == 50
+
+
+def test_durable_write_after_snapshot_restart_survives_crash(
+        base_snapshot, tmp_path):
+    """Regression: a durable snapshot truncates the WAL (possibly to
+    empty); a restart must reopen it with the lsn counter floored at the
+    manifest's wal_lsn stamp. Otherwise fresh acknowledged+fsync'd writes
+    reuse lsns <= the stamp and the NEXT recovery's replay filter
+    silently drops them."""
+    work = str(tmp_path / "db")
+    shutil.copytree(base_snapshot, work)
+    rng = np.random.default_rng(21)
+    db = _mk_db().restore_index(work, durable=True)
+    db.insert(rng.normal(size=(2, D)).astype(np.float32))  # lsn 1
+    db.save_index(work, step=1, durable=True)  # stamps wal_lsn=1, truncates
+    db.wal.close()  # clean restart
+    db = _mk_db().restore_index(work, durable=True)
+    assert db.wal.recovered_records == 0
+    assert db.wal.last_lsn == 1  # floored at the stamp, not reset to 0
+    rows = rng.normal(size=(4, D)).astype(np.float32)
+    db.insert(rows)  # fsync'd: must land at lsn 2
+    assert db.wal.last_lsn == db.wal.synced_lsn == 2
+    n_before = db.n
+    db.wal._f.close()  # crash
+    recovered = _mk_db().restore_index(work, durable=True)
+    assert recovered.wal.recovered_records == 1  # the insert replayed
+    assert recovered.n == n_before
+    q = rng.normal(size=(4, D)).astype(np.float32)
+    got = np.asarray(recovered.query(q, k=5)[1])
+    oracle = _mk_db().restore_index(work, step=1)
+    oracle.insert(rows)
+    np.testing.assert_array_equal(got, np.asarray(oracle.query(q, k=5)[1]))
+
+
+def test_save_index_rejects_snapshot_away_from_attached_wal(
+        base_snapshot, tmp_path):
+    """The wal_lsn stamp is only meaningful next to its own log: saving a
+    snapshot into a different directory while a WAL is attached would
+    strand the post-snapshot records where no restore can find them."""
+    work = str(tmp_path / "db")
+    shutil.copytree(base_snapshot, work)
+    db = _mk_db().restore_index(work, durable=True)
+    with pytest.raises(ValueError, match="WAL is attached"):
+        db.save_index(str(tmp_path / "elsewhere"), step=1, durable=True)
+    # and the same-directory save keeps working
+    db.save_index(work, step=1, durable=True)
 
 
 def test_torn_wal_tail_recovers_prefix(base_snapshot, tmp_path):
