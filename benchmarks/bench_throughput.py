@@ -224,6 +224,15 @@ def ivf_adc_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
     jnp-gather-only), the f32/bf16/int8 LUT-dtype ladder, and the served
     ``ivf_pq`` engines (refine=128) whose recall@10 is the CI gate.
 
+    PR-8 rows: ``bucket_blocked_np*`` runs the block-sharing segmented-
+    schedule grid (adc_mode='blocked') against the per-query
+    ``bucket_fused_np*`` rows on identical visit tables;
+    ``speedup_blocked_vs_perquery_np*`` holds the ratio and
+    ``parity_blocked_vs_perquery_np*`` the exact-match fractions (qps =
+    ids, recall_at_10 = scores; CI gates both == 1.0).
+    ``bucket_adaptive_np*`` adds query-adaptive nprobe (coarse-gap
+    threshold 0.3) at the largest swept nprobe.
+
     All ivf_pq instances share seed/geometry, so every path probes the
     same buckets at equal nprobe and recall deltas isolate the scoring
     backend.
@@ -234,25 +243,58 @@ def ivf_adc_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
     q = _clustered(rng, n_queries, d, n_clusters)
     exact = VectorDB("flat", metric="cosine").load(corpus)
     eids = np.asarray(exact.query(q, k=k, bucketize=False)[1])
+    # the high-sharing gate rows always use a 512-query batch — larger
+    # than the main batch in both --quick and full runs
+    q_hs = q if n_queries >= 512 else _clustered(rng, 512, d, n_clusters)
+    eids_hs = (eids if q_hs is q
+               else np.asarray(exact.query(q_hs, k=k, bucketize=False)[1]))
 
     def recall(ids):
         ids = np.asarray(ids)
-        return float(np.mean([len(set(ids[i]) & set(eids[i])) / k
-                              for i in range(n_queries)]))
+        ref = eids if ids.shape[0] == n_queries else eids_hs
+        return float(np.mean([len(set(ids[i]) & set(ref[i])) / k
+                              for i in range(ids.shape[0])]))
 
     kw = dict(metric="cosine", m=m, refine=0)
     paths = {}
     for p in nprobes:
-        db = VectorDB("ivf_pq", nprobe=p, **kw).load(corpus)
+        db = VectorDB("ivf_pq", nprobe=p, adc_mode="per_query",
+                      **kw).load(corpus)
+        db_bl = VectorDB("ivf_pq", nprobe=p, adc_mode="blocked",
+                         **kw).load(corpus)
         db_l2 = VectorDB("ivf_pq", metric="l2", m=m, refine=0,
                          nprobe=p).load(corpus)
+        # bucket_fused_* keeps its historical meaning — the per-query grid
+        # every prior BENCH row measured; bucket_blocked_* is the
+        # block-sharing segmented-schedule grid over the SAME visit table
         paths[f"bucket_fused_np{p}"] = (
             lambda db=db: db.query(q, k=k, bucketize=False), "dot", p)
+        paths[f"bucket_blocked_np{p}"] = (
+            lambda db=db_bl: db.query(q, k=k, bucketize=False), "dot", p)
         paths[f"bucket_fused_l2_np{p}"] = (
             lambda db=db_l2: db.query(q, k=k, bucketize=False), "l2", p)
         paths[f"jnp_gather_np{p}"] = (
             _gather_baseline(db, q, k, min(p, db.index.centroids.shape[0])),
             "dot", p)
+    p_ad = nprobes[-1]
+    db_ad = VectorDB("ivf_pq", nprobe=p_ad, adaptive_nprobe=0.3,
+                     **kw).load(corpus)
+    paths[f"bucket_adaptive_np{p_ad}"] = (
+        lambda: db_ad.query(q, k=k, bucketize=False), "dot", p_ad)
+    # the high-sharing configuration the CI blocked gate reads: a large
+    # batch (q_hs, 512 queries even in --quick) at a deep nprobe, where
+    # each probed block serves many query groups and the shared DMA +
+    # MXU contraction amortizes the segmented-schedule overhead. Fixed at
+    # Q=512/nprobe=16 so quick and full runs gate the same shape.
+    p_hs = 16
+    db_hs_pq = VectorDB("ivf_pq", nprobe=p_hs, adc_mode="per_query",
+                        **kw).load(corpus)
+    db_hs_bl = VectorDB("ivf_pq", nprobe=p_hs, adc_mode="blocked",
+                        **kw).load(corpus)
+    paths["bucket_perquery_hs"] = (
+        lambda: db_hs_pq.query(q_hs, k=k, bucketize=False), "dot", p_hs)
+    paths["bucket_blocked_hs"] = (
+        lambda: db_hs_bl.query(q_hs, k=k, bucketize=False), "dot", p_hs)
     scan_db = VectorDB("ivf_pq", nprobe=nprobes[0], scan_all=True,
                        **kw).load(corpus)
     paths["all_codes_scan"] = (
@@ -276,13 +318,15 @@ def ivf_adc_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
             jax.block_until_ready(fn())
             walls[name] = min(walls[name], time.perf_counter() - t0)
     rows = [{"path": name, "metric": metric, "nprobe": p, "N": N,
-             "qps": n_queries / walls[name],
+             "qps": (512 if name.endswith("_hs") else n_queries)
+             / walls[name],
              "recall_at_10": recall(fn()[1])}
             for name, (fn, metric, p) in paths.items()]
 
     scan = next(r for r in rows if r["path"] == "all_codes_scan")
     for p in nprobes:
         b = next(r for r in rows if r["path"] == f"bucket_fused_np{p}")
+        bl = next(r for r in rows if r["path"] == f"bucket_blocked_np{p}")
         g = next(r for r in rows if r["path"] == f"jnp_gather_np{p}")
         rows.append({"path": f"speedup_bucket_vs_scan_np{p}", "metric": "dot",
                      "nprobe": p, "N": N, "qps": b["qps"] / scan["qps"],
@@ -291,6 +335,34 @@ def ivf_adc_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
                      "metric": "dot", "nprobe": p, "N": N,
                      "qps": b["qps"] / g["qps"],
                      "recall_at_10": b["recall_at_10"] - g["recall_at_10"]})
+        # the PR-8 tentpole gate: blocked grid vs the per-query grid on
+        # identical visit tables — qps holds the ratio, recall the delta
+        rows.append({"path": f"speedup_blocked_vs_perquery_np{p}",
+                     "metric": "dot", "nprobe": p, "N": N,
+                     "qps": bl["qps"] / b["qps"],
+                     "recall_at_10": bl["recall_at_10"] - b["recall_at_10"]})
+        # exact-match parity between the two grids: qps = fraction of
+        # identical ids, recall_at_10 = fraction of bit-identical scores
+        # (both must be 1.0 — CI gates on it)
+        sp, ip = paths[f"bucket_fused_np{p}"][0]()
+        sb, ib = paths[f"bucket_blocked_np{p}"][0]()
+        rows.append({"path": f"parity_blocked_vs_perquery_np{p}",
+                     "metric": "dot", "nprobe": p, "N": N,
+                     "qps": float(np.mean(np.asarray(ip) == np.asarray(ib))),
+                     "recall_at_10": float(np.mean(
+                         np.asarray(sp) == np.asarray(sb)))})
+    hp = next(r for r in rows if r["path"] == "bucket_perquery_hs")
+    hb = next(r for r in rows if r["path"] == "bucket_blocked_hs")
+    rows.append({"path": "speedup_blocked_vs_perquery_hs", "metric": "dot",
+                 "nprobe": 8, "N": N, "qps": hb["qps"] / hp["qps"],
+                 "recall_at_10": hb["recall_at_10"] - hp["recall_at_10"]})
+    sp, ip = paths["bucket_perquery_hs"][0]()
+    sb, ib = paths["bucket_blocked_hs"][0]()
+    rows.append({"path": "parity_blocked_vs_perquery_hs", "metric": "dot",
+                 "nprobe": 8, "N": N,
+                 "qps": float(np.mean(np.asarray(ip) == np.asarray(ib))),
+                 "recall_at_10": float(np.mean(
+                     np.asarray(sp) == np.asarray(sb)))})
     return rows
 
 

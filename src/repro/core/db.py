@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import functools
 import os
+import time
 import warnings
 from typing import Callable, Dict, Optional, Type
 
@@ -131,6 +132,13 @@ class _PlanLedger:
         top = self.plan_buckets[-1]  # bulk path: next multiple of the cap
         return -(-n // top) * top
 
+    def _plan_salt(self) -> tuple:
+        """Engine-config components of the plan key beyond shape/dtype —
+        anything that changes WHICH executable a query compiles (e.g. the
+        ADC grid mode or adaptive-nprobe masking) without changing array
+        shapes. Fronts override; default is no extra salt."""
+        return ()
+
     def _plan_batch(self, q, kk: int):
         """Record the plan key and pad q up to its bucket. Returns
         (padded q, original Q): padded rows repeat the last query, so the
@@ -138,7 +146,7 @@ class _PlanLedger:
         Q = q.shape[0]
         bucket = self._bucket(Q)
         key = (self.engine_name, bucket, kk, str(q.dtype),
-               self.plan_generation)
+               self.plan_generation) + self._plan_salt()
         if key in self._plans:
             self.plan_stats["hits"] += 1
         else:
@@ -180,7 +188,22 @@ class VectorDB(_PlanLedger, _WriteFront):
         self._texts = None
         self.wal = None  # attached by save_index/restore_index(durable=True)
         self._wal_replaying = False
+        # snapshot-cadence policy (attach_wal): auto-truncate the log by
+        # size/age instead of only at explicit save_index calls
+        self._snap_every_bytes = None
+        self._snap_every_s = None
+        self._snap_dir = None
+        self._snap_bytes_mark = 0
+        self._snap_t_mark = time.monotonic()
+        self._snap_step = 0
+        self._auto_snapshots = 0
         self._plan_init()
+
+    def _plan_salt(self) -> tuple:
+        # the ADC grid mode and adaptive-nprobe masking each change the
+        # compiled search program on the same shapes — distinct plan keys
+        return (getattr(self.index, "adc_mode", None),
+                getattr(self.index, "adaptive_nprobe", None))
 
     # ----------------------------------------------------------- load
     def load(self, vectors) -> "VectorDB":
@@ -217,7 +240,27 @@ class VectorDB(_PlanLedger, _WriteFront):
         if (self.wal is not None and not self._wal_replaying
                 and op in WriteAheadLog.KINDS):
             self._wal_log(op, args, out)
+            self._maybe_auto_snapshot()
         return out
+
+    def _maybe_auto_snapshot(self) -> None:
+        """Enforce the snapshot-cadence policy after a logged mutation:
+        when the log has grown past ``snapshot_every_bytes`` (or aged past
+        ``snapshot_every_s``) since the last snapshot, take a durable
+        snapshot — which truncates the log — without waiting for an
+        explicit ``save_index``. Bounds both recovery replay time and log
+        disk footprint under a pure write workload."""
+        if self._snap_every_bytes is None and self._snap_every_s is None:
+            return
+        grown = self.wal.bytes_written - self._snap_bytes_mark
+        aged = time.monotonic() - self._snap_t_mark
+        if ((self._snap_every_bytes is not None
+             and grown >= self._snap_every_bytes)
+                or (self._snap_every_s is not None
+                    and aged >= self._snap_every_s)):
+            self.save_index(self._snap_dir, self._snap_step + 1,
+                            durable=True)
+            self._auto_snapshots += 1
 
     def _wal_log(self, op: str, args, out) -> None:
         """Append the applied mutation to the WAL. Insert logs the ids the
@@ -314,15 +357,37 @@ class VectorDB(_PlanLedger, _WriteFront):
 
     # ----------------------------------------------------------- persistence
     def attach_wal(self, directory: str, fsync_interval_ms: float = 0.0,
-                   *, after_lsn: int = 0, replay: bool = False) -> int:
+                   *, after_lsn: int = 0, replay: bool = False,
+                   snapshot_every_bytes: Optional[int] = None,
+                   snapshot_every_s: Optional[float] = None) -> int:
         """Open (or create) ``<directory>/wal.log`` and start logging every
         mutation through it. With ``replay=True`` the intact records with
         lsn > after_lsn are re-applied through ``apply_write`` first (the
         recovery path); re-logging is suppressed during replay — the
-        records are already in the log. Returns the replayed count."""
+        records are already in the log. Returns the replayed count.
+
+        ``snapshot_every_bytes`` / ``snapshot_every_s`` set the snapshot
+        cadence: after any logged mutation that pushes the log past the
+        size (or age) bound since the last snapshot, the front takes a
+        durable snapshot into ``directory`` on its own — truncating the
+        log — so replay length stays bounded without explicit
+        ``save_index`` calls (``wal_stats['auto_snapshots']`` counts
+        them). Requires a persistence-capable engine."""
+        if ((snapshot_every_bytes is not None or snapshot_every_s is not None)
+                and getattr(self.index, "state_dict", None) is None):
+            raise NotImplementedError(
+                f"snapshot cadence needs persistence, which engine "
+                f"{self.engine_name!r} does not support")
         path = os.path.join(directory, "wal.log")
         self.wal, records = WriteAheadLog.open(
             path, fsync_interval_ms=fsync_interval_ms, after_lsn=after_lsn)
+        self._snap_every_bytes = snapshot_every_bytes
+        self._snap_every_s = snapshot_every_s
+        self._snap_dir = directory
+        self._snap_bytes_mark = self.wal.bytes_written
+        self._snap_t_mark = time.monotonic()
+        steps = ckpt.valid_steps(directory)
+        self._snap_step = max(steps) if steps else 0
         n = 0
         if replay:
             self._wal_replaying = True
@@ -376,6 +441,10 @@ class VectorDB(_PlanLedger, _WriteFront):
         if self.wal is not None:
             crashpoint("wal.truncate.pre")
             self.wal.truncate_through(meta["wal_lsn"])
+            # restart the snapshot cadence: explicit saves count too
+            self._snap_bytes_mark = self.wal.bytes_written
+            self._snap_t_mark = time.monotonic()
+            self._snap_step = max(self._snap_step, step)
         return out
 
     def restore_index(self, directory: str, step: Optional[int] = None, *,
@@ -442,9 +511,19 @@ class VectorDB(_PlanLedger, _WriteFront):
 
     @property
     def wal_stats(self) -> Optional[dict]:
-        """Durability counters (records/fsyncs/lsn marks) when a WAL is
-        attached; None otherwise. Surfaces in serve ``latency_stats``."""
-        return None if self.wal is None else self.wal.stats
+        """Durability counters (records/fsyncs/lsn marks, plus the cadence
+        policy's auto_snapshots) when a WAL is attached; None otherwise.
+        Surfaces in serve ``latency_stats``."""
+        if self.wal is None:
+            return None
+        return dict(self.wal.stats, auto_snapshots=self._auto_snapshots)
+
+    @property
+    def adc_stats(self) -> Optional[dict]:
+        """ADC grid-dispatch telemetry (blocked vs per_query batch counts,
+        running sharing-factor / effective-nprobe sums) when the engine
+        keeps it (IVF-PQ); None otherwise."""
+        return getattr(self.index, "adc_stats", None)
 
 
 class DistributedVectorDB(_PlanLedger):

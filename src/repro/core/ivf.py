@@ -138,6 +138,83 @@ def build_block_lists(assign, n_clusters: int, blk: int = 32):
             bcnt.astype(np.int32), spp)
 
 
+def build_block_schedule(visit, *, qblk: int = 8, pad_block=None):
+    """Host-side SEGMENTED schedule for the blocked multi-query ADC mode.
+
+    The per-query ``ivf_adc`` grid fetches block ``visit[q, t]`` once per
+    (q, t) program — a block probed by s queries is DMA'd s times and each
+    contraction is a (1, m*ksub) matvec. This builder inverts the visit
+    table: the (q, t) pairs are sorted by block id and each block's run is
+    cut into fixed-width groups of ``qblk`` pairs, so one program can fetch
+    the block ONCE and contract it against a (qblk, m*ksub) LUT panel — a
+    real MXU matmul. Partial groups pad with the query-knockout sentinel
+    ``-1`` (the same masking idiom as the -1 pad slot: a sentinel pair
+    scores NEG_INF and folds into a trash scoreboard row).
+
+    visit: (Q, T) int32 block ids (the ``expand_visit`` contract).
+    ``pad_block`` names the shared all-pad block; pairs visiting it are
+    DROPPED from the schedule (they can contribute nothing — every slot id
+    is -1), which is also where the blocked mode's pad-work saving comes
+    from. The group count G pads up to a quarter-octave bucket (multiples
+    of 2^(e-2) within each power-of-two octave, all-sentinel groups
+    pointing at ``pad_block``) so the blocked executable recompiles
+    O(log P) times per (Q, T) shape, not once per batch, while wasting at
+    most ~25% of the grid on padding.
+
+    Returns ``(sched_block (G,) int32, sched_q (G, qblk) int32,
+    sched_t (G, qblk) int32, stats)`` where every real (q, t) pair appears
+    in exactly one (group, slot), every group's pairs share one block, and
+    ``stats`` carries ``pairs`` (real pairs kept), ``blocks`` (distinct
+    blocks visited), ``sharing`` (pairs / blocks — the dispatch heuristic's
+    estimate of how many queries each block DMA amortizes over), and
+    ``groups`` (real groups, before the bucket pad).
+    """
+    assert qblk >= 1, qblk
+    visit = np.asarray(visit)
+    Q, T = visit.shape
+    b = visit.reshape(-1).astype(np.int64)
+    q_of = np.repeat(np.arange(Q, dtype=np.int32), T)
+    t_of = np.tile(np.arange(T, dtype=np.int32), Q)
+    fill = 0 if pad_block is None else int(pad_block)
+    if pad_block is not None:
+        keep = b != pad_block
+        b, q_of, t_of = b[keep], q_of[keep], t_of[keep]
+    order = np.argsort(b, kind="stable")  # stable: ties stay in visit order
+    b, q_of, t_of = b[order], q_of[order], t_of[order]
+    P = b.size
+    if P:
+        new_run = np.r_[True, b[1:] != b[:-1]]
+        starts = np.flatnonzero(new_run)
+        run_of = np.cumsum(new_run) - 1            # run index per pair
+        rank = np.arange(P) - starts[run_of]       # position within the run
+        run_len = np.diff(np.r_[starts, P])
+        groups_per_run = -(-run_len // qblk)       # ceil
+        gbase = np.r_[0, np.cumsum(groups_per_run)]
+        gid = gbase[run_of] + rank // qblk
+        slot = rank % qblk
+        n_groups = int(gbase[-1])
+        n_blocks = starts.size
+    else:
+        gid = slot = np.zeros(0, np.int64)
+        n_groups = n_blocks = 0
+    G = max(1, n_groups)
+    if G > 8:  # quarter-octave bucket: next multiple of 2^e with 2^e ~ G/8
+        e = (G - 1).bit_length() - 3
+        G = -(-G >> e) << e
+    else:
+        G = 8
+    sched_block = np.full(G, fill, np.int32)
+    sched_q = np.full((G, qblk), -1, np.int32)     # -1 = knockout sentinel
+    sched_t = np.zeros((G, qblk), np.int32)
+    if P:
+        sched_block[gid] = b
+        sched_q[gid, slot] = q_of
+        sched_t[gid, slot] = t_of
+    stats = {"pairs": int(P), "blocks": int(n_blocks),
+             "sharing": float(P) / max(1, n_blocks), "groups": n_groups}
+    return sched_block, sched_q, sched_t, stats
+
+
 class BlockListLayout:
     """Appendable, tombstone-aware block-aligned inverted lists (host side).
 

@@ -268,14 +268,84 @@ def probe_luts(codebooks, centroids, q, probe, c_scores, *, metric: str):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("metric", "k", "nprobe", "steps_per_probe",
-                                    "refine", "use_kernel", "lut_dtype",
-                                    "scan_all"))
+                   static_argnames=("metric", "k", "refine", "use_kernel",
+                                    "lut_dtype"))
+def _ivf_scan_all(codebooks, codes, centroids, corpus, corpus_sq, assign,
+                  valid, q, *, metric: str, k: int, refine: int,
+                  use_kernel, lut_dtype: str):
+    """The PR-2 augmented-LUT escape hatch of ivf_pq_search, as its own
+    jitted stage: the coarse term folds into the flat adc_topk scan as an
+    (m+1)-th subspace and ALL N codes stream through (dot only)."""
+    N = codes.shape[0]
+    ksub = codebooks.shape[1]
+    C = centroids.shape[0]
+    qc = jnp.einsum("qd,cd->qc", q, centroids.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)  # (Q, C)
+    width = max(ksub, C)
+    luts = adc_tables(codebooks, q, metric="dot")  # (Q, m, ksub)
+    luts = jnp.pad(luts, ((0, 0), (0, 0), (0, width - ksub)))
+    coarse = jnp.pad(qc, ((0, 0), (0, width - C)))[:, None, :]
+    luts_aug = jnp.concatenate([luts, coarse], axis=1)  # (Q, m+1, width)
+    codes_aug = jnp.concatenate(
+        [codes.astype(jnp.int32), assign.astype(jnp.int32)[:, None]],
+        axis=1)  # (N, m+1)
+    R = min(max(refine, k), N)
+    s, ids = kops.adc_topk(codes_aug, luts_aug, k=R, valid=valid,
+                           use_kernel=use_kernel, lut_dtype=lut_dtype)
+    s, ids = D.mask_invalid_ids(s, ids)
+    if refine:
+        return _exact_rerank(corpus, corpus_sq, ids, q, metric=metric, k=k)
+    return _pad_to_k(s[:, :k], ids[:, :k], k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "nprobe", "steps_per_probe",
+                                    "pad_block", "adaptive"))
+def _ivf_probe_stage(codebooks, centroids, q, block_table, threshold, *,
+                     metric: str, nprobe: int, steps_per_probe: int,
+                     pad_block: int, adaptive: bool):
+    """Coarse stage of ivf_pq_search: score centroids, pick probes, expand
+    the visit table, build (luts, coarse). One jitted program so the whole
+    coarse path fuses; the ADC dispatch that follows runs OUTSIDE jit with
+    this stage's concrete outputs — that host boundary is what lets
+    ``ops.ivf_adc_topk`` build the blocked segmented schedule.
+
+    ``adaptive`` applies query-adaptive nprobe as pure masking on the
+    fixed-width table: probes whose coarse-score gap to the query's best
+    probe exceeds ``threshold`` have their visit steps retargeted at the
+    pad block (so the blocked schedule drops the work entirely) and their
+    coarse entry set to NEG_INF (so the per-query grid knocks them out).
+    Probe 0 always survives. Returns (visit, luts, coarse, eff_nprobe)
+    with eff_nprobe the per-query count of surviving probes."""
+    c_scores = D.pairwise_scores(q, centroids,
+                                 metric if metric == "dot" else "l2")
+    c_top, probe = jax.lax.top_k(c_scores, nprobe)  # (Q, nprobe), descending
+    visit = expand_visit(probe, block_table, steps_per_probe=steps_per_probe,
+                         pad_block=pad_block)
+    luts, coarse = probe_luts(codebooks, centroids, q, probe, c_scores,
+                              metric=metric)
+    Q = q.shape[0]
+    if coarse is None:
+        coarse = jnp.zeros((Q, nprobe), jnp.float32)
+    if adaptive:
+        active = (c_top[:, :1] - c_top) <= threshold
+        active = active.at[:, 0].set(True)
+        visit = jnp.where(jnp.repeat(active, steps_per_probe, axis=1),
+                          visit, pad_block)
+        coarse = jnp.where(active, coarse, kops.NEG_INF)
+        eff = jnp.sum(active, axis=1).astype(jnp.int32)
+    else:
+        eff = jnp.full((Q,), nprobe, jnp.int32)
+    return visit, luts, coarse, eff
+
+
 def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
                   metric: str, k: int, nprobe: int, refine: int = 0,
                   corpus_sq=None, assign=None, valid=None, block_lists=None,
                   steps_per_probe: int = 1, use_kernel=None,
-                  lut_dtype: str = "float32", scan_all: bool = False):
+                  lut_dtype: str = "float32", scan_all: bool = False,
+                  adaptive_nprobe=None, adc_mode: str = "auto",
+                  qblk: int = 8, adc_stats=None):
     """IVF-ADC: probe nprobe coarse buckets, ADC-score their residual codes.
 
     codes are PQ codes of (x - centroid[assign]); scoring must therefore use
@@ -312,6 +382,23 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
 
     ``lut_dtype`` ('float32'/'bfloat16'/'int8') applies to either backend's
     tables. Returns (scores (Q, k), ids (Q, k)); pad slots are -inf / -1.
+
+    Deliberately NOT one monolithic jit (the pq_search precedent): an
+    orchestrator over jitted stages — coarse probe stage -> host-level
+    ``kops.ivf_adc_topk`` dispatch -> jitted exact re-rank. The host
+    boundary after the probe stage is what makes the visit table CONCRETE,
+    which is what lets the dispatcher sort it into the blocked segmented
+    schedule (``adc_mode``/``qblk``; 'auto' picks blocked when the
+    measured block-sharing factor pays, see kernels/ops). Callers that
+    must stay inside one jit (the distributed plan) call the stages
+    themselves and always serve the per-query grid.
+
+    ``adaptive_nprobe`` (float threshold, None = off) enables
+    query-adaptive probing: probes whose coarse-score gap to the best
+    probe exceeds the threshold are masked off the fixed-width visit
+    table before any ADC work (see _ivf_probe_stage). ``adc_stats`` (dict,
+    optional) receives the dispatch decision, schedule stats, and
+    'eff_nprobe' — the mean per-query surviving probe count.
     """
     q = jnp.asarray(q, jnp.float32)
 
@@ -321,29 +408,13 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
         assert codes is not None and assign is not None, \
             "scan_all needs row-major codes + assignments (IVFPQIndex keeps " \
             "them only when constructed with scan_all=True)"
-        N = codes.shape[0]
-        ksub = codebooks.shape[1]
-        C = centroids.shape[0]
-        qc = jnp.einsum("qd,cd->qc", q, centroids.astype(jnp.float32),
-                        preferred_element_type=jnp.float32)  # (Q, C)
-        width = max(ksub, C)
-        luts = adc_tables(codebooks, q, metric="dot")  # (Q, m, ksub)
-        luts = jnp.pad(luts, ((0, 0), (0, 0), (0, width - ksub)))
-        coarse = jnp.pad(qc, ((0, 0), (0, width - C)))[:, None, :]
-        luts_aug = jnp.concatenate([luts, coarse], axis=1)  # (Q, m+1, width)
-        codes_aug = jnp.concatenate(
-            [codes.astype(jnp.int32), assign.astype(jnp.int32)[:, None]],
-            axis=1)  # (N, m+1)
-        R = min(max(refine, k), N)
-        s, ids = kops.adc_topk(codes_aug, luts_aug, k=R, valid=valid,
-                               use_kernel=use_kernel, lut_dtype=lut_dtype)
-        s, ids = D.mask_invalid_ids(s, ids)
-        if refine:
-            return _exact_rerank(corpus, corpus_sq, ids, q, metric=metric, k=k)
-        return _pad_to_k(s[:, :k], ids[:, :k], k)
+        return _ivf_scan_all(codebooks, codes, centroids, corpus, corpus_sq,
+                             assign, valid, q, metric=metric, k=k,
+                             refine=refine, use_kernel=use_kernel,
+                             lut_dtype=lut_dtype)
 
     if block_lists is None:
-        # in-graph fallback: the fixed-cap bucket table IS a block layout
+        # eager fallback: the fixed-cap bucket table IS a block layout
         # with one cap-wide block per cluster (+ the shared all-pad block)
         C, cap = buckets.shape
         bucket_ids = jnp.concatenate(
@@ -360,17 +431,21 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
         bucket_codes, bucket_ids, block_table = block_lists
         spp = steps_per_probe
     blk = bucket_codes.shape[1]
-    c_scores = D.pairwise_scores(q, centroids,
-                                 metric if metric == "dot" else "l2")
-    _, probe = jax.lax.top_k(c_scores, nprobe)  # (Q, nprobe)
-    visit = expand_visit(probe, block_table, steps_per_probe=spp,
-                         pad_block=bucket_ids.shape[0] - 1)
-    luts, coarse = probe_luts(codebooks, centroids, q, probe, c_scores,
-                              metric=metric)
+    pad_block = bucket_ids.shape[0] - 1
+    adaptive = adaptive_nprobe is not None
+    threshold = jnp.float32(adaptive_nprobe if adaptive else 0.0)
+    visit, luts, coarse, eff = _ivf_probe_stage(
+        codebooks, centroids, q, block_table, threshold, metric=metric,
+        nprobe=nprobe, steps_per_probe=spp, pad_block=pad_block,
+        adaptive=adaptive)
     R = min(max(refine, k), nprobe * spp * blk)
     s, ids = kops.ivf_adc_topk(bucket_codes, bucket_ids, visit, luts, k=R,
                                coarse=coarse, steps_per_probe=spp,
-                               use_kernel=use_kernel, lut_dtype=lut_dtype)
+                               use_kernel=use_kernel, lut_dtype=lut_dtype,
+                               mode=adc_mode, qblk=qblk,
+                               pad_block=pad_block, stats=adc_stats)
+    if adc_stats is not None:
+        adc_stats["eff_nprobe"] = float(jnp.mean(eff))
     if refine:
         return _exact_rerank(corpus, corpus_sq, ids, q, metric=metric, k=k)
     return _pad_to_k(s[:, :k], ids[:, :k], k)
@@ -621,9 +696,11 @@ class IVFPQIndex(MutationMixin):
                  kmeans_iters: int = 10, refine: int = 32, seed: int = 0,
                  use_kernel=None, lut_dtype: str = "float32",
                  scan_all: bool = False, block_size: int = 32,
-                 compact_threshold: float = 0.3):
+                 compact_threshold: float = 0.3, adc_mode: str = "auto",
+                 adaptive_nprobe=None, qblk: int = 8):
         assert metric in D.METRICS
         assert lut_dtype in kops.ADC_LUT_DTYPES, lut_dtype
+        assert adc_mode in kops.ADC_MODES, adc_mode
         self.metric = metric
         self.n_clusters = n_clusters  # 0 => sqrt(N) at load time
         self.nprobe = nprobe
@@ -637,6 +714,14 @@ class IVFPQIndex(MutationMixin):
         self.scan_all = scan_all  # True: PR-2 all-codes augmented-LUT scan
         self.block_size = block_size  # inverted-list block width (x8)
         self.compact_threshold = compact_threshold
+        self.adc_mode = adc_mode  # grid dispatch: auto/blocked/per_query
+        self.adaptive_nprobe = adaptive_nprobe  # coarse-gap threshold, None=off
+        self.qblk = qblk  # blocked-mode query-group width
+        # dispatch telemetry: batches served per grid, running sums for the
+        # mean sharing factor / effective nprobe (serve.engine surfaces them)
+        self.adc_stats = {"blocked": 0, "per_query": 0,
+                          "sharing_sum": 0.0, "eff_nprobe_sum": 0.0,
+                          "batches": 0}
         self.codebooks = self.codes = self.centroids = None
         self.codes_bm = self.bucket_ids = self.block_table = None
         self.layout = None
@@ -810,14 +895,24 @@ class IVFPQIndex(MutationMixin):
             q = D.l2_normalize(q)
             metric = "dot"
         nprobe = min(self.nprobe, self.centroids.shape[0])
-        return ivf_pq_search(
+        batch_stats = {} if not self.scan_all else None
+        out = ivf_pq_search(
             self.codebooks, self.codes, self.centroids, None, self.corpus, q,
             metric=metric, k=min(k, max(self.size, 1)), nprobe=nprobe,
             refine=self.refine, corpus_sq=self.corpus_sq, assign=self.assign,
             valid=self.valid,
             block_lists=(self.codes_bm, self.bucket_ids, self.block_table),
             steps_per_probe=self.spp, use_kernel=self.use_kernel,
-            lut_dtype=self.lut_dtype, scan_all=self.scan_all)
+            lut_dtype=self.lut_dtype, scan_all=self.scan_all,
+            adaptive_nprobe=self.adaptive_nprobe, adc_mode=self.adc_mode,
+            qblk=self.qblk, adc_stats=batch_stats)
+        if batch_stats:
+            st = self.adc_stats
+            st[batch_stats["mode"]] += 1
+            st["sharing_sum"] += batch_stats["sharing"]
+            st["eff_nprobe_sum"] += batch_stats["eff_nprobe"]
+            st["batches"] += 1
+        return out
 
     # ------------------------------------------------------- persistence
     def _host_assign(self):

@@ -14,10 +14,11 @@ are the backend-aware ADC dispatchers (TPU -> Pallas kernel, CPU/GPU ->
 fused jnp twin) that the PQ engines query through.
 """
 from repro.kernels.ops import (adc_topk, adc_topk_jnp, flash_attention,
-                               hamming, ivf_adc_topk, ivf_adc_topk_jnp,
-                               pq_adc, quantize_lut_int8,
+                               hamming, ivf_adc_blocked_jnp, ivf_adc_topk,
+                               ivf_adc_topk_jnp, pq_adc, quantize_lut_int8,
                                resolve_adc_backend, topk_distance)
 
 __all__ = ["adc_topk", "adc_topk_jnp", "flash_attention", "hamming",
-           "ivf_adc_topk", "ivf_adc_topk_jnp", "pq_adc", "quantize_lut_int8",
-           "resolve_adc_backend", "topk_distance"]
+           "ivf_adc_blocked_jnp", "ivf_adc_topk", "ivf_adc_topk_jnp",
+           "pq_adc", "quantize_lut_int8", "resolve_adc_backend",
+           "topk_distance"]

@@ -47,6 +47,22 @@ int32 partials on the MXU, exact), then the m partials are scaled and summed
 in f32: score = sum_j scale[q, j] * lut_i8[q, j, codes[n, j]]. vs bf16 that
 is another 2x off the resident table bytes; the quantization error per
 subspace is <= scale/2 = max|lut_j| / 254.
+
+Two grid modes share the scoring math:
+
+  * per-query (``ivf_adc``) — grid (Q, T), one (query, probe-step) per
+    program: a block probed by s queries is DMA'd s times and each
+    contraction is a (1, m*ksub) matvec (MXU at 1/8-1/128 utilization).
+  * blocked (``ivf_adc_blocked``) — grid (G,) over the SEGMENTED schedule
+    built by ``repro.core.ivf.build_block_schedule``: program g DMAs block
+    ``sched_block[g]`` ONCE and contracts it against that group's
+    pre-gathered (qblk, m*ksub) LUT panel — a genuine MXU matmul — then
+    folds each slot's (1, blk) scores into its query's row of a
+    (Q + 1, k) VMEM scoreboard (row Q is the trash row that knockout-
+    sentinel slots land in). Panel HBM traffic matches the per-query
+    grid's LUT traffic (each pair still reads one LUT row); the win is
+    the shared code-block DMA, the dropped pad-block pairs, and the
+    matmul-shaped contraction.
 """
 from __future__ import annotations
 
@@ -188,3 +204,151 @@ def ivf_adc(bucket_codes, bucket_ids, visit, luts, coarse, *, k: int,
         ],
         interpret=interpret,
     )(visit.astype(jnp.int32), *args)
+
+
+def _ivf_adc_blocked_kernel(sb_ref, qrow_ref, c_ref, id_ref, panel_ref,
+                            cpan_ref, *refs, n_groups: int, n_q: int, k: int,
+                            ksub: int, int8: bool):
+    if int8:
+        scp_ref, s_out, i_out, bs_ref, bi_ref = refs
+    else:
+        scp_ref = None
+        s_out, i_out, bs_ref, bi_ref = refs
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        bs_ref[...] = jnp.full_like(bs_ref, NEG_INF)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    codes = c_ref[...][0]   # (blk, m) int32 — the group's SHARED code block
+    ids = id_ref[...]       # (1, blk) int32 global row ids, -1 = pad slot
+    blk, m = codes.shape
+    sub = jax.lax.broadcasted_iota(jnp.int32, (blk, m, ksub), 2)
+    sel = codes[:, :, None] == sub
+    panel = panel_ref[...][0]  # (qblk, m*ksub) — the group's LUT rows
+    if int8:
+        scale = scp_ref[...][0]  # (qblk, m) f32
+        sel8 = sel.astype(jnp.int8)
+        s = None
+        for j in range(m):
+            pj = jax.lax.dot_general(
+                panel[:, j * ksub:(j + 1) * ksub], sel8[:, j, :],
+                (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+            pj = pj.astype(jnp.float32) * scale[:, j][:, None]
+            s = pj if s is None else s + pj
+    else:
+        sel_f = sel.astype(panel.dtype).reshape(blk, m * ksub)
+        s = jax.lax.dot_general(panel, sel_f, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # cpan folds the per-pair coarse term, the caller's probe knockout, and
+    # the sentinel knockout (NEG_INF for padded slots of a partial group)
+    s = s + cpan_ref[...][0][:, None]   # (qblk, blk)
+    s = jnp.where(ids >= 0, s, NEG_INF)
+
+    qblk = s.shape[0]
+    for slot in range(qblk):  # static unroll: qblk dynamic-row RMWs
+        row = qrow_ref[g, slot]  # scoreboard row; n_q = the trash row
+        comb_s = jnp.concatenate([bs_ref[pl.ds(row, 1), :],
+                                  s[slot:slot + 1, :]], axis=1)
+        comb_i = jnp.concatenate([bi_ref[pl.ds(row, 1), :], ids], axis=1)
+        ns, ni = _select_topk(comb_s, comb_i, k)
+        bs_ref[pl.ds(row, 1), :] = ns
+        bi_ref[pl.ds(row, 1), :] = ni
+
+    @pl.when(g == n_groups - 1)
+    def _finalize():
+        s_out[...] = bs_ref[0:n_q, :]
+        i_out[...] = bi_ref[0:n_q, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "steps_per_probe", "interpret",
+                                    "lut_dtype"))
+def ivf_adc_blocked(bucket_codes, bucket_ids, sched_block, sched_q, sched_t,
+                    luts, coarse, *, k: int, steps_per_probe: int = 1,
+                    interpret: bool = False, lut_dtype: str = "float32"):
+    """Blocked-mode twin of ``ivf_adc`` over a segmented schedule.
+
+    sched_block: (G,) int32 block ids; sched_q/sched_t: (G, qblk) int32
+    (query, visit-step) pairs, -1 in sched_q = knockout sentinel (see
+    ``repro.core.ivf.build_block_schedule``). luts/coarse as in
+    ``ivf_adc``. Program g fetches block sched_block[g] once, contracts it
+    against the group's (qblk, m*ksub) LUT panel (pre-gathered in-graph —
+    uniform across shared and per-probe LUT geometry), and merges each
+    slot's scores into a per-query (1, k) scoreboard row.
+
+    Scores are bit-identical to the per-query grid: the f32/bf16 panel
+    contraction reduces over the same m*ksub order, and the int8 path
+    accumulates the same per-subspace f32 partials in the same j order.
+    -> (scores (Q, k) f32, ids (Q, k) int32), NEG_INF/-1 sentinels as in
+    ``ivf_adc`` (the ops.py dispatcher normalizes).
+    """
+    B, blk, m = bucket_codes.shape
+    G, qblk = sched_q.shape
+    Q, nprobe = coarse.shape
+    spp = steps_per_probe
+    per_probe = luts.ndim == 4
+    ksub = luts.shape[-1]
+    scales = None
+    if lut_dtype == "int8":
+        luts, scales = quantize_lut_int8(luts)
+    elif jnp.dtype(lut_dtype) != jnp.float32:
+        luts = luts.astype(jnp.dtype(lut_dtype))
+
+    # pre-gather the (G, qblk, m*ksub) LUT panels: one row per (q, probe)
+    # pair — the same per-pair LUT traffic the per-query grid pays, laid
+    # out so the contraction is a matmul. Sentinel slots read row 0 and are
+    # knocked out via cpan.
+    qs = jnp.clip(sched_q, 0)
+    p_of = sched_t // spp
+    n_rows = Q * nprobe if per_probe else Q
+    row = qs * nprobe + p_of if per_probe else qs
+    luts_rows = luts.reshape(n_rows, m * ksub)
+    panel = jnp.take(luts_rows, row.reshape(-1), axis=0
+                     ).reshape(G, qblk, m * ksub)
+    cpan = jnp.take(coarse.astype(jnp.float32).reshape(-1),
+                    (qs * nprobe + p_of).reshape(-1)).reshape(G, qblk)
+    cpan = jnp.where(sched_q >= 0, cpan, NEG_INF)
+    qrow = jnp.where(sched_q >= 0, sched_q, Q).astype(jnp.int32)
+
+    in_specs = [
+        pl.BlockSpec((1, blk, m), lambda g, sb, qr: (sb[g], 0, 0)),
+        pl.BlockSpec((1, blk), lambda g, sb, qr: (sb[g], 0)),
+        pl.BlockSpec((1, qblk, m * ksub), lambda g, sb, qr: (g, 0, 0)),
+        pl.BlockSpec((1, qblk), lambda g, sb, qr: (g, 0)),
+    ]
+    args = [bucket_codes.astype(jnp.int32), bucket_ids.astype(jnp.int32),
+            panel, cpan]
+    if scales is not None:
+        scale_rows = scales.reshape(n_rows, m)
+        scpan = jnp.take(scale_rows, row.reshape(-1), axis=0
+                         ).reshape(G, qblk, m)
+        in_specs.append(
+            pl.BlockSpec((1, qblk, m), lambda g, sb, qr: (g, 0, 0)))
+        args.append(scpan)
+
+    kernel = functools.partial(_ivf_adc_blocked_kernel, n_groups=G, n_q=Q,
+                               k=k, ksub=ksub, int8=scales is not None)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(G,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((Q, k), lambda g, sb, qr: (0, 0)),
+            pl.BlockSpec((Q, k), lambda g, sb, qr: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Q + 1, k), jnp.float32),  # row Q = sentinel trash
+            pltpu.VMEM((Q + 1, k), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sched_block.astype(jnp.int32), qrow, *args)

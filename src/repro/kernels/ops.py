@@ -14,6 +14,14 @@ Pallas executes the kernel body block-by-block in Python and is a debugging
 tool, not a serving path. Engines expose the choice as a ``use_kernel``
 kwarg (None = auto by backend) and LUT precision as ``lut_dtype``
 ('float32' / 'bfloat16' / 'int8' with per-(query, subspace) scales).
+
+``ivf_adc_topk`` additionally dispatches between two GRIDS (orthogonal to
+the backend choice): the per-query (Q, T) grid, and the blocked mode that
+re-sorts the visit table by block id so each code block is fetched once
+for a whole query group (``repro.core.ivf.build_block_schedule``). The
+``mode`` kwarg ('auto'/'blocked'/'per_query') + the sharing-factor
+heuristic pick the grid; both grids exist for both backends and are
+bit-identical per backend.
 """
 from __future__ import annotations
 
@@ -32,6 +40,17 @@ from repro.kernels.pq_adc import quantize_lut_int8
 from repro.kernels.topk_distance import NEG_INF
 
 ADC_LUT_DTYPES = ("float32", "bfloat16", "int8")
+ADC_MODES = ("auto", "blocked", "per_query")
+
+# auto-mode heuristic for the blocked ivf_adc grid: the block-sharing
+# schedule only pays when enough (query, step) pairs land on each block to
+# amortize its fetch (sharing = pairs / distinct blocks), and the host-side
+# sort is only worth running for real batches. The board bound caps the
+# blocked twin's (Q+1, T, blk) scatter target (slots, i.e. ~8 bytes each).
+BLOCKED_MIN_SHARING = 2.0
+BLOCKED_MIN_QUERIES = 32
+BLOCKED_MAX_BOARD_SLOTS = 1 << 25
+DEFAULT_QBLK = 8  # f32 sublane tile — groups land MXU-aligned
 
 
 def _auto_interpret(interpret):
@@ -344,9 +363,79 @@ def ivf_adc_topk_jnp(bucket_codes, bucket_ids, visit, luts, coarse, *,
     return best_s, best_i
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("k", "steps_per_probe", "lut_dtype"))
+def ivf_adc_blocked_jnp(bucket_codes, bucket_ids, sched_block, sched_q,
+                        sched_t, luts, coarse, *, k: int,
+                        steps_per_probe: int = 1,
+                        lut_dtype: str = "float32"):
+    """Fused jnp twin of the BLOCKED ivf_adc mode, over a segmented
+    schedule from ``repro.core.ivf.build_block_schedule``.
+
+    Where ``ivf_adc_topk_jnp`` gathers codes per (query, step) pair — Q*T
+    block fetches — this path fetches each scheduled block once (G rows),
+    scores it against its qblk-wide query group with the same per-subspace
+    flat LUT gathers in the same j order (bit-identical sums), scatters
+    the (G, qblk, blk) scores back into a (Q+1, T, blk) board keyed by the
+    schedule's (query, step) coordinates (row Q is the sentinel trash
+    row), and runs ONE top-k per query over the board. Pairs the schedule
+    dropped (pad blocks) simply stay at the board's NEG_INF init — the
+    same knockout the per-query grid applies slot by slot.
+
+    sched_block: (G,) int32; sched_q/sched_t: (G, qblk) int32, -1 in
+    sched_q = knockout sentinel. Other args/results as ``ivf_adc_topk_jnp``.
+    """
+    B, blk, m = bucket_codes.shape
+    G, qblk = sched_q.shape
+    Q, nprobe = coarse.shape
+    T = nprobe * steps_per_probe
+    per_probe = luts.ndim == 4
+    ksub = luts.shape[-1]
+    scales = None
+    if lut_dtype == "bfloat16":
+        luts = _round_lut_bf16(luts)
+    elif lut_dtype == "int8":
+        luts, scales = quantize_lut_int8(luts)
+    codes_g = jnp.take(bucket_codes.astype(jnp.int32), sched_block, axis=0)
+    ids_g = jnp.take(bucket_ids, sched_block, axis=0)        # (G, blk)
+    qs = jnp.clip(sched_q, 0)                                # sentinel -> 0
+    p_of = sched_t // steps_per_probe
+    n_rows = Q * nprobe if per_probe else Q
+    row = qs * nprobe + p_of if per_probe else qs            # LUT row per pair
+    luts_flat = luts.reshape(n_rows, m, ksub)
+    s = None
+    for j in range(m):
+        g = jnp.take(luts_flat[:, j, :].reshape(-1),
+                     row[:, :, None] * ksub + codes_g[:, None, :, j])
+        if scales is not None:
+            sc = jnp.take(scales.reshape(n_rows, m)[:, j], row)
+            g = g.astype(jnp.float32) * sc[:, :, None]
+        s = g if s is None else s + g                        # (G, qblk, blk)
+    cpair = jnp.take(coarse.astype(jnp.float32).reshape(-1),
+                     qs * nprobe + p_of)                     # (G, qblk)
+    cpair = jnp.where(sched_q >= 0, cpair, NEG_INF)          # sentinel knockout
+    s = s.astype(jnp.float32) + cpair[:, :, None]
+    s = jnp.where(ids_g[:, None, :] >= 0, s, NEG_INF)
+    qrow = jnp.where(sched_q >= 0, sched_q, Q)
+    board_s = jnp.full((Q + 1, T, blk), NEG_INF, jnp.float32)
+    board_i = jnp.full((Q + 1, T, blk), -1, jnp.int32)
+    board_s = board_s.at[qrow, sched_t].set(s)
+    board_i = board_i.at[qrow, sched_t].set(
+        jnp.broadcast_to(ids_g[:, None, :], s.shape))
+    kk = min(k, T * blk)
+    bs, pos = jax.lax.top_k(board_s[:Q].reshape(Q, T * blk), kk)
+    bi = jnp.take_along_axis(board_i[:Q].reshape(Q, T * blk), pos, axis=1)
+    if kk < k:
+        bs = jnp.pad(bs, ((0, 0), (0, k - kk)), constant_values=NEG_INF)
+        bi = jnp.pad(bi, ((0, 0), (0, k - kk)), constant_values=-1)
+    return bs, bi
+
+
 def ivf_adc_topk(bucket_codes, bucket_ids, visit, luts, *, k: int,
                  coarse=None, steps_per_probe: int = 1, use_kernel=None,
-                 lut_dtype: str = "float32", interpret=None):
+                 lut_dtype: str = "float32", interpret=None,
+                 mode: str = "auto", qblk: int = DEFAULT_QBLK,
+                 pad_block=None, stats=None):
     """Backend-aware bucket-resident IVF-ADC top-k — the IVF-PQ hot-path
     entry. Work scales with the probed candidate count, not N.
 
@@ -368,13 +457,68 @@ def ivf_adc_topk(bucket_codes, bucket_ids, visit, luts, *, k: int,
     treated as knocked out (real ADC scores live many orders of magnitude
     above). Returns (scores (Q, k) f32, ids (Q, k) int32) with global row
     ids.
+
+    ``mode`` selects the grid: 'per_query' is the (Q, T) grid above;
+    'blocked' re-sorts the (concrete) visit table into a segmented
+    block-sharing schedule (``repro.core.ivf.build_block_schedule`` with
+    group width ``qblk``; ``pad_block`` names the all-pad block so its
+    pairs are dropped) and runs the group-per-program grid — each code
+    block is fetched once per qblk queries and contracted as a real
+    matmul. 'auto' builds the schedule when the visit table is concrete
+    and the batch is big enough, then picks blocked iff the measured
+    sharing factor clears BLOCKED_MIN_SHARING (inside jit the visit table
+    is traced, so 'auto' silently serves per-query; 'blocked' raises).
+    Both modes are bit-identical per backend on the same visit table.
+    If ``stats`` is a dict, the dispatch decision and schedule stats
+    ('mode', 'sharing', 'pairs', 'blocks', 'groups') are written into it.
     """
     assert lut_dtype in ADC_LUT_DTYPES, lut_dtype
+    assert mode in ADC_MODES, mode
     Q, T = visit.shape
     nprobe = T // steps_per_probe
     if coarse is None:
         coarse = jnp.zeros((Q, nprobe), jnp.float32)
-    if resolve_adc_backend(use_kernel) == "kernel":
+    traced = isinstance(visit, jax.core.Tracer)
+    if mode == "blocked" and traced:
+        raise ValueError(
+            "mode='blocked' needs a concrete visit table (the segmented "
+            "schedule is built on the host); under jit use mode='auto' "
+            "(falls back to the per-query grid) or hoist the dispatch out "
+            "of the traced region.")
+    backend = resolve_adc_backend(use_kernel)
+    sched = None
+    sstats = {"mode": "per_query", "sharing": 0.0, "pairs": 0,
+              "blocks": 0, "groups": 0}
+    if (mode != "per_query" and not traced
+            and (mode == "blocked" or Q >= BLOCKED_MIN_QUERIES)):
+        from repro.core.ivf import build_block_schedule  # lazy: layering
+        blk = bucket_codes.shape[1]
+        sb, sq, st, sstats = build_block_schedule(
+            np.asarray(visit), qblk=qblk, pad_block=pad_block)
+        board_ok = (Q + 1) * T * blk <= BLOCKED_MAX_BOARD_SLOTS
+        if (mode == "blocked"
+                or (sstats["sharing"] >= BLOCKED_MIN_SHARING and board_ok)):
+            sched = (jnp.asarray(sb), jnp.asarray(sq), jnp.asarray(st))
+        sstats["mode"] = "blocked" if sched is not None else "per_query"
+    if stats is not None:
+        stats.update(sstats)
+    if sched is not None:
+        sb, sq, st = sched
+        if backend == "kernel":
+            s, i = _ivf.ivf_adc_blocked(
+                bucket_codes, bucket_ids.astype(jnp.int32), sb, sq, st,
+                luts, coarse, k=k, steps_per_probe=steps_per_probe,
+                interpret=_auto_interpret(interpret), lut_dtype=lut_dtype)
+        else:
+            if (lut_dtype == "bfloat16"
+                    and not isinstance(luts, jax.core.Tracer)):
+                luts = _round_lut_bf16(luts)
+                lut_dtype = "float32"
+            s, i = ivf_adc_blocked_jnp(
+                bucket_codes, bucket_ids.astype(jnp.int32), sb, sq, st,
+                luts, coarse, k=k, steps_per_probe=steps_per_probe,
+                lut_dtype=lut_dtype)
+    elif backend == "kernel":
         s, i = _ivf.ivf_adc(bucket_codes, bucket_ids.astype(jnp.int32),
                             visit.astype(jnp.int32), luts, coarse, k=k,
                             steps_per_probe=steps_per_probe,

@@ -157,6 +157,15 @@ def summarize_latencies(latencies_ms, writes_applied: int, db,
     if wal is not None:  # durability counters (records vs fsyncs = the
         # group-commit amortization; synced_lsn lags last_lsn by held acks)
         stats.update({f"wal_{k}": int(v) for k, v in wal.items()})
+    adc = getattr(db, "adc_stats", None)
+    if adc is not None and adc.get("batches"):
+        # ADC grid dispatch: which path served each batch, and the mean
+        # block-sharing factor / effective nprobe the heuristic measured
+        b = adc["batches"]
+        stats["adc_blocked"] = int(adc["blocked"])
+        stats["adc_per_query"] = int(adc["per_query"])
+        stats["adc_sharing_factor"] = float(adc["sharing_sum"] / b)
+        stats["adc_effective_nprobe"] = float(adc["eff_nprobe_sum"] / b)
     if extra:
         stats.update(extra)
     return stats

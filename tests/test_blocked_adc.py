@@ -1,0 +1,311 @@
+"""Blocked multi-query IVF-ADC mode (PR 8): segmented-schedule invariants,
+bit-exact parity with the per-query grid across LUT layouts/dtypes and both
+backends, dispatch-heuristic boundaries (including the traced-visit rules),
+query-adaptive nprobe, and the counters the mode surfaces through
+``adc_stats`` / ``latency_stats``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import VectorDB, build_block_lists
+from repro.core.ivf import build_block_schedule
+from repro.kernels import ops as kops
+from repro.kernels.ops import ivf_adc_topk
+
+
+def _clustered(rng, n, d, n_clusters, scale=2.0):
+    centers = rng.normal(size=(n_clusters, d)).astype(np.float32) * scale
+    return (centers[rng.integers(0, n_clusters, n)]
+            + rng.normal(size=(n, d)).astype(np.float32))
+
+
+def _random_layout(rng, N, C, blk=8):
+    assign = rng.integers(0, C, N)
+    slots, bstart, bcnt, spp = build_block_lists(assign, C, blk=blk)
+    return assign, jnp.asarray(slots), jnp.asarray(bstart), \
+        jnp.asarray(bcnt), spp
+
+
+def _expand_visit(probe, bstart, bcnt, spp, n_blocks):
+    base = np.asarray(bstart)[np.asarray(probe)]
+    cnt = np.asarray(bcnt)[np.asarray(probe)]
+    r = np.arange(spp)[None, None, :]
+    visit = np.where(r < cnt[:, :, None], base[:, :, None] + r, n_blocks - 1)
+    return jnp.asarray(visit.reshape(probe.shape[0], -1).astype(np.int32))
+
+
+def _problem(rng, N=600, C=15, blk=8, Q=40, nprobe=5, m=8, ksub=32,
+             per_probe=False):
+    """A parity-grade problem: m=8 subspaces over ksub>=32 codewords keeps
+    continuous scores tie-free, so id equality is meaningful."""
+    _, slots, bstart, bcnt, spp = _random_layout(rng, N, C, blk=blk)
+    codes = jnp.asarray(
+        rng.integers(0, ksub, (slots.shape[0], blk, m)).astype(np.int32))
+    probe = jnp.asarray(np.stack(
+        [rng.choice(C, nprobe, replace=False) for _ in range(Q)]
+    ).astype(np.int32))
+    visit = _expand_visit(probe, bstart, bcnt, spp, slots.shape[0])
+    lshape = (Q, nprobe, m, ksub) if per_probe else (Q, m, ksub)
+    luts = jnp.asarray(rng.normal(size=lshape).astype(np.float32))
+    coarse = jnp.asarray(rng.normal(size=(Q, nprobe)).astype(np.float32))
+    return codes, slots, visit, luts, coarse, spp
+
+
+# ------------------------------------------------------- schedule invariants
+
+def test_schedule_covers_every_real_pair_exactly_once(rng):
+    Q, T, B = 37, 12, 50
+    visit = rng.integers(0, B, (Q, T)).astype(np.int32)
+    pad = B - 1
+    visit[rng.random((Q, T)) < 0.3] = pad  # sprinkle pad-block visits
+    sb, sq, st, stats = build_block_schedule(visit, qblk=8, pad_block=pad)
+    G, qblk = sq.shape
+    assert sb.shape == (G,) and st.shape == (G, qblk)
+    real = sq >= 0
+    # every non-pad (q, t) pair lands in exactly one (group, slot)
+    want = {(q, t) for q in range(Q) for t in range(T)
+            if visit[q, t] != pad}
+    got = list(zip(sq[real].tolist(), st[real].tolist()))
+    assert len(got) == len(set(got)) == stats["pairs"] == len(want)
+    assert set(got) == want
+    # each real slot's block is its group's block; pad pairs were dropped
+    gi, si = np.nonzero(real)
+    np.testing.assert_array_equal(visit[sq[gi, si], st[gi, si]], sb[gi])
+    assert not np.any(sb[gi] == pad)
+    # sentinel slots only pad PARTIAL groups; fully-sentinel tail groups
+    # point at the pad block so their DMA is the shared all-pad fetch
+    assert np.all(sb[~real.any(axis=1)] == pad)
+    assert stats["blocks"] == len(np.unique(sb[gi]))
+    assert stats["sharing"] == pytest.approx(
+        stats["pairs"] / stats["blocks"])
+
+
+def test_schedule_quarter_octave_grid_padding():
+    """G pads to the next quarter-octave bucket: O(log P) distinct
+    executables with <= ~25% wasted grid (vs 2x for pow2 rounding)."""
+    visit = np.zeros((1, 1), np.int32)  # 1 real group
+    seen = set()
+    for n in [1, 5, 8, 9, 13, 17, 100, 1000]:
+        # n groups: n distinct blocks, one (q, t) pair each
+        visit = np.arange(n, dtype=np.int32).reshape(1, n)
+        sb, sq, _, stats = build_block_schedule(visit, qblk=8)
+        G = sb.shape[0]
+        assert stats["groups"] == n and G >= max(8, n)
+        assert G < max(8, n) * 1.26, (n, G)  # waste capped near 25%
+        if G > 8:  # multiple of 2^(e-2) within its octave
+            e = (G - 1).bit_length() - 3
+            assert G % (1 << e) == 0, (n, G)
+        seen.add(G)
+    assert len(seen) < 8  # buckets collapse shapes
+
+
+# ------------------------------------------------------- bit-exact parity
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("lut_dtype", ["float32", "bfloat16", "int8"])
+@pytest.mark.parametrize("per_probe", [False, True])
+def test_blocked_bit_identical_to_per_query(rng, per_probe, lut_dtype,
+                                            use_kernel):
+    """The acceptance bar: ids AND scores bit-identical between the two
+    grid modes on the same visit table, for shared (dot) and per-probe
+    (l2) LUT layouts, every LUT dtype, jnp twin and Pallas kernel."""
+    codes, slots, visit, luts, coarse, spp = _problem(
+        rng, per_probe=per_probe)
+    kw = dict(k=9, coarse=coarse, steps_per_probe=spp,
+              use_kernel=use_kernel, lut_dtype=lut_dtype,
+              pad_block=slots.shape[0] - 1)
+    s0, i0 = ivf_adc_topk(codes, slots, visit, luts, mode="per_query", **kw)
+    s1, i1 = ivf_adc_topk(codes, slots, visit, luts, mode="blocked", **kw)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_blocked_parity_low_sharing_and_ragged(rng):
+    """Degenerate schedules: near-zero sharing (every query probes its own
+    cluster), empty clusters, ragged tail blocks, and k larger than any
+    candidate set — the blocked mode must reproduce the per-query
+    knockout (-inf score, -1 id) bit for bit."""
+    C, blk, m, ksub = 24, 8, 8, 32
+    assign = rng.integers(0, C, 90)
+    assign[assign == 2] = 3  # cluster 2 empty
+    slots, bstart, bcnt, spp = build_block_lists(assign, C, blk=blk)
+    slots = jnp.asarray(slots)
+    codes = jnp.asarray(
+        rng.integers(0, ksub, (slots.shape[0], blk, m)).astype(np.int32))
+    # low sharing: query q probes clusters {q mod C, 2} — mostly disjoint
+    Q = 24
+    probe = jnp.asarray(np.stack(
+        [[q % C, 2] for q in range(Q)]).astype(np.int32))
+    visit = _expand_visit(probe, jnp.asarray(bstart), jnp.asarray(bcnt),
+                          spp, slots.shape[0])
+    luts = jnp.asarray(rng.normal(size=(Q, m, ksub)).astype(np.float32))
+    coarse = jnp.asarray(rng.normal(size=(Q, 2)).astype(np.float32))
+    for use_kernel in (False, True):
+        kw = dict(k=40, coarse=coarse, steps_per_probe=spp,
+                  use_kernel=use_kernel, pad_block=slots.shape[0] - 1)
+        s0, i0 = ivf_adc_topk(codes, slots, visit, luts,
+                              mode="per_query", **kw)
+        s1, i1 = ivf_adc_topk(codes, slots, visit, luts,
+                              mode="blocked", **kw)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        assert (np.asarray(i0) == -1).any()  # the knockout actually fires
+
+
+@pytest.mark.parametrize("qblk", [1, 3, 8, 16])
+def test_blocked_parity_across_group_widths(rng, qblk):
+    """Group width only changes the schedule's shape, never the results —
+    partial sentinel-padded groups at every width fold into the trash
+    row."""
+    codes, slots, visit, luts, coarse, spp = _problem(rng, Q=13, nprobe=4)
+    kw = dict(k=7, coarse=coarse, steps_per_probe=spp, use_kernel=False,
+              pad_block=slots.shape[0] - 1)
+    s0, i0 = ivf_adc_topk(codes, slots, visit, luts, mode="per_query", **kw)
+    s1, i1 = ivf_adc_topk(codes, slots, visit, luts, mode="blocked",
+                          qblk=qblk, **kw)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+# ------------------------------------------------------- dispatch heuristic
+
+def test_auto_dispatch_boundaries(rng):
+    """auto goes blocked only when the batch is worth scheduling: Q >=
+    BLOCKED_MIN_QUERIES AND measured sharing >= BLOCKED_MIN_SHARING."""
+    # high sharing, large batch -> blocked
+    codes, slots, visit, luts, coarse, spp = _problem(
+        rng, C=6, Q=kops.BLOCKED_MIN_QUERIES, nprobe=4)
+    stats = {}
+    ivf_adc_topk(codes, slots, visit, luts, k=5, coarse=coarse,
+                 steps_per_probe=spp, use_kernel=False, stats=stats,
+                 pad_block=slots.shape[0] - 1)
+    assert stats["mode"] == "blocked"
+    assert stats["sharing"] >= kops.BLOCKED_MIN_SHARING
+    # same problem, one query short of the floor -> per_query
+    stats = {}
+    ivf_adc_topk(codes, slots, visit[:-1], luts[:-1], k=5,
+                 coarse=coarse[:-1], steps_per_probe=spp, use_kernel=False,
+                 stats=stats, pad_block=slots.shape[0] - 1)
+    assert stats["mode"] == "per_query"
+    # low sharing at full batch size -> per_query (scheduling won't pay)
+    codes, slots, visit, luts, coarse, spp = _problem(
+        rng, N=2000, C=256, Q=kops.BLOCKED_MIN_QUERIES, nprobe=1, blk=8)
+    stats = {}
+    ivf_adc_topk(codes, slots, visit, luts, k=5, coarse=coarse,
+                 steps_per_probe=spp, use_kernel=False, stats=stats,
+                 pad_block=slots.shape[0] - 1)
+    assert stats["mode"] == "per_query"
+    assert stats["sharing"] < kops.BLOCKED_MIN_SHARING
+
+
+def test_traced_visit_rules(rng):
+    """The schedule is host-side: forcing mode='blocked' under jit is an
+    error, while auto silently serves the per-query grid (the distributed
+    front jits its whole search body and must keep working)."""
+    codes, slots, visit, luts, coarse, spp = _problem(rng, Q=34, C=6,
+                                                     nprobe=4)
+
+    def run(visit, mode):
+        return ivf_adc_topk(codes, slots, visit, luts, k=5, coarse=coarse,
+                            steps_per_probe=spp, use_kernel=False,
+                            mode=mode, pad_block=slots.shape[0] - 1)
+
+    with pytest.raises(ValueError, match="traced"):
+        jax.jit(lambda v: run(v, "blocked"))(visit)
+    s_jit, i_jit = jax.jit(lambda v: run(v, "auto"))(visit)
+    s0, i0 = run(visit, "per_query")
+    np.testing.assert_array_equal(np.asarray(i_jit), np.asarray(i0))
+    np.testing.assert_array_equal(np.asarray(s_jit), np.asarray(s0))
+
+
+def test_bad_mode_rejected(rng):
+    codes, slots, visit, luts, coarse, spp = _problem(rng, Q=4)
+    with pytest.raises(AssertionError):
+        ivf_adc_topk(codes, slots, visit, luts, k=3, coarse=coarse,
+                     steps_per_probe=spp, mode="sideways")
+
+
+# ------------------------------------------------------- engine integration
+
+def test_db_modes_identical_and_counted(rng):
+    """VectorDB('ivf_pq') serves bit-identical results under per_query /
+    blocked / auto, and adc_stats counts which grid served each batch."""
+    corpus = _clustered(rng, 1200, 32, 12)
+    q = _clustered(rng, 64, 32, 12)
+    kw = dict(metric="cosine", m=8, refine=0, nprobe=4)
+    out = {}
+    for mode in ("per_query", "blocked", "auto"):
+        db = VectorDB("ivf_pq", adc_mode=mode, **kw).load(corpus)
+        out[mode] = tuple(np.asarray(x)
+                          for x in db.query(q, k=10, bucketize=False))
+        st = db.adc_stats
+        assert st["batches"] == 1
+        if mode == "per_query":
+            # forced per-query never builds a schedule, so sharing goes
+            # unmeasured — the counter records the decision, not a guess
+            assert st["per_query"] == 1 and st["sharing_sum"] == 0
+        else:
+            assert st["blocked"] == 1 and st["sharing_sum"] > 0
+    for mode in ("blocked", "auto"):
+        np.testing.assert_array_equal(out[mode][1], out["per_query"][1])
+        np.testing.assert_array_equal(out[mode][0], out["per_query"][0])
+
+
+def test_adaptive_nprobe_recall_floor_and_stats(rng):
+    """Query-adaptive probing prunes probes whose coarse score trails the
+    leader by more than the threshold: effective nprobe drops below the
+    cap while recall stays within a small delta of the full sweep, and a
+    0 threshold degenerates to nprobe=1-quality probing."""
+    corpus = _clustered(rng, 3000, 64, 30)
+    q = _clustered(rng, 128, 64, 30)
+    kw = dict(metric="cosine", m=8, refine=0, nprobe=8)
+    eids = np.asarray(VectorDB("flat", metric="cosine").load(corpus)
+                      .query(q, k=10, bucketize=False)[1])
+
+    def run(**extra):
+        db = VectorDB("ivf_pq", **kw, **extra).load(corpus)
+        ids = np.asarray(db.query(q, k=10, bucketize=False)[1])
+        rec = np.mean([len(set(ids[i]) & set(eids[i])) / 10
+                       for i in range(len(q))])
+        eff = db.adc_stats["eff_nprobe_sum"] / db.adc_stats["batches"]
+        return rec, eff
+
+    r_full, eff_full = run()
+    r_ad, eff_ad = run(adaptive_nprobe=0.1)
+    assert eff_full == 8.0
+    assert 1.0 < eff_ad < 8.0  # actually pruned something, kept something
+    assert r_ad >= r_full - 0.05, (r_ad, r_full)
+    _, eff_zero = run(adaptive_nprobe=0.0)
+    assert eff_zero == 1.0  # only the leading probe survives
+
+
+def test_latency_stats_surface_adc_counters(rng):
+    from repro.serve.engine import QueryEngine
+
+    corpus = _clustered(rng, 900, 32, 10)
+    db = VectorDB("ivf_pq", metric="cosine", m=8, refine=0, nprobe=4,
+                  adc_mode="auto", adaptive_nprobe=0.5).load(corpus)
+    eng = QueryEngine(db, max_batch=64)
+    for row in _clustered(rng, 48, 32, 10):
+        eng.submit(row, k=5)
+    eng.drain()
+    st = eng.latency_stats()
+    assert st["adc_blocked"] + st["adc_per_query"] >= 1
+    assert st["adc_sharing_factor"] > 0
+    assert 1.0 <= st["adc_effective_nprobe"] <= 4.0
+
+
+def test_adc_mode_salts_the_plan_key(rng):
+    """Changing adc_mode or adaptive_nprobe must not silently reuse a
+    compiled plan keyed only on (engine, bucket, k, dtype)."""
+    corpus = _clustered(rng, 500, 16, 8)
+    db = VectorDB("ivf_pq", metric="cosine", refine=0, nprobe=4,
+                  adc_mode="per_query").load(corpus)
+    db.query(corpus[:4], k=5)
+    misses = db.plan_stats["misses"]
+    db.index.adc_mode = "blocked"  # same geometry, different grid
+    db.query(corpus[:4], k=5)
+    assert db.plan_stats["misses"] == misses + 1
+    db.query(corpus[:4], k=5)  # and the new key is itself cached
+    assert db.plan_stats["misses"] == misses + 1

@@ -294,6 +294,90 @@ def test_torn_wal_tail_recovers_prefix(base_snapshot, tmp_path):
         np.asarray(oracle.query(q, k=5)[1]))
 
 
+# ------------------------------------------------- snapshot cadence
+
+def test_auto_snapshot_by_bytes_truncates_and_recovers(base_snapshot,
+                                                       tmp_path):
+    """The ROADMAP cadence item: with ``snapshot_every_bytes`` set, the
+    front snapshots (and truncates the log) on its own once the log grows
+    past the bound — recovery then replays nothing, and the auto-snapshot
+    chain numbers steps monotonically."""
+    work = str(tmp_path / "db")
+    shutil.copytree(base_snapshot, work)
+    db = _mk_db().restore_index(work)
+    db.attach_wal(work, snapshot_every_bytes=1)  # every mutation trips it
+    rng = np.random.default_rng(13)
+    rows = rng.normal(size=(3, D)).astype(np.float32)
+    for r in rows:
+        db.insert(r[None])
+    assert db.wal_stats["auto_snapshots"] == 3
+    assert ckpt.valid_steps(work) == [0, 1, 2, 3]  # one step per trip
+    # each snapshot stamped the lsn it covers and truncated behind itself
+    assert ckpt.load_meta(work, 3)["wal_lsn"] == 3
+    del db
+    recovered = _mk_db().restore_index(work, durable=True)
+    assert recovered.wal.recovered_records == 0  # nothing left to replay
+    oracle = _mk_db().restore_index(base_snapshot)
+    oracle.insert(rows)
+    q = rng.normal(size=(5, D)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(recovered.query(q, k=5)[1]),
+                                  np.asarray(oracle.query(q, k=5)[1]))
+
+
+def test_snapshot_cadence_thresholds_and_explicit_save_reset(base_snapshot,
+                                                             tmp_path):
+    """The byte bound measures growth SINCE the last snapshot: mutations
+    below it never trip, and an explicit durable ``save_index`` resets the
+    mark (no double snapshot right after a manual one)."""
+    work = str(tmp_path / "db")
+    shutil.copytree(base_snapshot, work)
+    db = _mk_db().restore_index(work)
+    rng = np.random.default_rng(17)
+    rows = rng.normal(size=(8, D)).astype(np.float32)
+    one = len(encode_record(1, "insert", vectors=rows[:1],
+                            ids=np.array([0])))
+    db.attach_wal(work, snapshot_every_bytes=int(one * 2.5))
+    db.insert(rows[0:1])
+    db.insert(rows[1:2])  # grown = 2 records < 2.5 -> no trip yet
+    assert db.wal_stats["auto_snapshots"] == 0
+    db.insert(rows[2:3])  # 3 records >= 2.5 -> snapshot + reset
+    assert db.wal_stats["auto_snapshots"] == 1
+    assert max(ckpt.valid_steps(work)) == 1
+    db.insert(rows[3:4])  # fresh mark: 1 record < 2.5 again
+    assert db.wal_stats["auto_snapshots"] == 1
+    db.insert(rows[4:5])
+    db.save_index(work, step=7, durable=True)  # explicit save resets too
+    db.insert(rows[5:6])
+    db.insert(rows[6:7])  # 2 records since the EXPLICIT snapshot: no trip
+    assert db.wal_stats["auto_snapshots"] == 1
+    db.insert(rows[7:8])  # ...and the chain resumes past the manual step
+    assert db.wal_stats["auto_snapshots"] == 2
+    assert max(ckpt.valid_steps(work)) == 8
+
+
+def test_auto_snapshot_by_age(base_snapshot, tmp_path):
+    """snapshot_every_s=0 degenerates to snapshot-after-every-mutation —
+    the age clock restarts at each snapshot."""
+    work = str(tmp_path / "db")
+    shutil.copytree(base_snapshot, work)
+    db = _mk_db().restore_index(work)
+    db.attach_wal(work, snapshot_every_s=0.0)
+    rng = np.random.default_rng(19)
+    db.insert(rng.normal(size=(2, D)).astype(np.float32))
+    db.delete(np.array([3]))
+    assert db.wal_stats["auto_snapshots"] == 2
+
+
+def test_snapshot_cadence_requires_persistence(rng):
+    """A cadence policy on an engine that cannot snapshot is a config
+    error at attach time, not a crash at the first trip."""
+    db = VectorDB("flat", metric="l2").load(
+        rng.normal(size=(10, D)).astype(np.float32))
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(NotImplementedError, match="cadence"):
+            db.attach_wal(d, snapshot_every_bytes=1024)
+
+
 # ------------------------------------------------- snapshot-dir fallback
 
 def test_restore_skips_partial_and_corrupt_steps(tmp_path, rng):
