@@ -100,6 +100,65 @@ def ivf_adc_agreement():
     return rows
 
 
+def ivf_adc_run_resident_agreement():
+    """Run-resident grid (PR 9): Pallas kernel (interpret) vs jnp twin vs
+    the gather oracle on the same visit table. The run-resident kernel
+    shares the blocked kernel's one-hot contraction, so those two grids
+    are bit-exact (scores AND ids) on any geometry; against the per-query
+    grid and across executors (kernel vs twin, twin vs oracle) ids must
+    agree while scores may differ in the last ulp when the reduction
+    reassociates (large m*ksub). Sizes stay small — interpret mode
+    executes per-run Python."""
+    from repro.core import build_block_lists
+    from repro.kernels import ivf_adc_topk
+
+    rng = np.random.default_rng(4)
+    rows = []
+    for (N, C, blk, m, ksub, Q, nprobe, k) in [
+            (2048, 32, 8, 8, 64, 16, 4, 10)]:
+        assign = rng.integers(0, C, N)
+        slots, bstart, bcnt, spp = build_block_lists(assign, C, blk=blk)
+        slots = jnp.asarray(slots)
+        codes_flat = jnp.asarray(rng.integers(0, ksub, (N, m)).astype(np.int32))
+        codes = jnp.take(codes_flat, jnp.clip(slots, 0), axis=0)
+        luts = jnp.asarray(rng.normal(size=(Q, m, ksub)).astype(np.float32))
+        probe = jnp.asarray(np.stack(
+            [rng.choice(C, nprobe, replace=False) for _ in range(Q)]
+        ).astype(np.int32))
+        base = jnp.take(jnp.asarray(bstart), probe, axis=0)
+        cnt = jnp.take(jnp.asarray(bcnt), probe, axis=0)
+        r = jnp.arange(spp, dtype=jnp.int32)[None, None, :]
+        visit = jnp.where(r < cnt[:, :, None], base[:, :, None] + r,
+                          slots.shape[0] - 1).reshape(Q, nprobe * spp)
+        kw = dict(k=k, steps_per_probe=spp, pad_block=slots.shape[0] - 1)
+        st, it = ivf_adc_topk(codes, slots, visit, luts, use_kernel=False,
+                              mode="run_resident", **kw)
+        sk, ik = ivf_adc_topk(codes, slots, visit, luts, use_kernel=True,
+                              interpret=True, mode="run_resident", **kw)
+        sp, ip = ivf_adc_topk(codes, slots, visit, luts, use_kernel=True,
+                              interpret=True, mode="per_query", **kw)
+        sb, ib = ivf_adc_topk(codes, slots, visit, luts, use_kernel=True,
+                              interpret=True, mode="blocked", **kw)
+        rs, ri = R.ivf_adc_ref(codes, slots, visit, luts, k=k,
+                               steps_per_probe=spp)
+        twin_vs_oracle = bool((np.asarray(it) == np.asarray(ri)).all())
+        kernel_vs_blocked = bool(
+            (np.asarray(ik) == np.asarray(ib)).all()
+            and (np.asarray(sk) == np.asarray(sb)).all())
+        kernel_ids_vs_per_query = bool(
+            (np.asarray(ik) == np.asarray(ip)).all())
+        kernel_vs_twin_ids = bool((np.asarray(ik) == np.asarray(it)).all())
+        rows.append({"N": N, "nprobe": nprobe,
+                     "match": (twin_vs_oracle and kernel_vs_blocked
+                               and kernel_ids_vs_per_query
+                               and kernel_vs_twin_ids),
+                     "twin_vs_oracle": twin_vs_oracle,
+                     "kernel_vs_blocked": kernel_vs_blocked,
+                     "kernel_ids_vs_per_query": kernel_ids_vs_per_query,
+                     "kernel_vs_twin_ids": kernel_vs_twin_ids})
+    return rows
+
+
 def hamming_agreement():
     rng = np.random.default_rng(1)
     rows = []
@@ -117,7 +176,9 @@ def hamming_agreement():
 def main(quick: bool = False):
     print("name,case,match,oracle_s")
     rows = {"topk": topk_agreement(), "pq_adc": pq_adc_agreement(),
-            "ivf_adc": ivf_adc_agreement(), "hamming": hamming_agreement()}
+            "ivf_adc": ivf_adc_agreement(),
+            "ivf_adc_run_resident": ivf_adc_run_resident_agreement(),
+            "hamming": hamming_agreement()}
     for r in rows["topk"]:
         print(f"kernels,topk_N{r['N']}d{r['d']},{r['match']},{r['oracle_s']:.4f}")
     for r in rows["pq_adc"]:
@@ -126,6 +187,11 @@ def main(quick: bool = False):
         print(f"kernels,ivf_adc_N{r['N']}np{r['nprobe']},{r['match']},"
               f"bucket={r['bucket_s']:.4f},all_codes={r['all_codes_s']:.4f},"
               f"gather={r['gather_s']:.4f}")
+    for r in rows["ivf_adc_run_resident"]:
+        print(f"kernels,ivf_adc_runres_N{r['N']}np{r['nprobe']},{r['match']},"
+              f"twin_vs_oracle={r['twin_vs_oracle']},"
+              f"kernel_vs_blocked={r['kernel_vs_blocked']},"
+              f"kernel_vs_twin_ids={r['kernel_vs_twin_ids']}")
     for r in rows["hamming"]:
         print(f"kernels,hamming_N{r['N']},{r['match']},{r['oracle_s']:.4f}")
     return rows

@@ -51,8 +51,8 @@ from repro.core import distances as D
 from repro.core import distributed as dist
 from repro.core.flat import FlatIndex
 from repro.core.graph import GraphIndex
-from repro.core.ivf import (BlockListLayout, IVFIndex, assign_clusters,
-                            kmeans)
+from repro.core.ivf import (BlockListLayout, IVFIndex, ScheduleCache,
+                            assign_clusters, kmeans)
 from repro.core.lsh import LSHIndex
 from repro.core.mutable import MutationMixin
 from repro.core.pq import (IVFPQIndex, PQIndex, adc_tables, expand_visit,
@@ -124,6 +124,11 @@ class _PlanLedger:
         self.plan_generation = 0
         self._plans = set()
         self.plan_stats = {"hits": 0, "misses": 0}
+        # host-side twin of the jit-plan cache: built block schedules for
+        # the grouped ADC grids, keyed (bucket, generation, nprobe) by the
+        # engine (repro.core.ivf.ScheduleCache — content-verified, so a
+        # changed batch or mutated index just misses)
+        self.sched_cache = ScheduleCache()
 
     def _bucket(self, n: int) -> int:
         for b in self.plan_buckets:
@@ -344,6 +349,11 @@ class VectorDB(_PlanLedger, _WriteFront):
         if not bucketize:
             return self.index.query(q, k=kk)
         q, Q = self._plan_batch(q, kk)
+        if hasattr(self.index, "sched_cache"):
+            # hand the engine the ledger's schedule cache + this batch's
+            # plan context; the engine appends nprobe to complete the key
+            self.index.sched_cache = self.sched_cache
+            self.index._sched_ctx = (self._bucket(Q), self.plan_generation)
         scores, ids = self.index.query(q, k=kk)
         return scores[:Q], ids[:Q]
 
@@ -520,10 +530,16 @@ class VectorDB(_PlanLedger, _WriteFront):
 
     @property
     def adc_stats(self) -> Optional[dict]:
-        """ADC grid-dispatch telemetry (blocked vs per_query batch counts,
-        running sharing-factor / effective-nprobe sums) when the engine
-        keeps it (IVF-PQ); None otherwise."""
-        return getattr(self.index, "adc_stats", None)
+        """ADC grid-dispatch telemetry (batch counts per grid — blocked /
+        per_query / run_resident — plus autotuner probe count + fitted
+        crossover, schedule-cache hit/miss, and running sharing-factor /
+        effective-nprobe sums) when the engine keeps it (IVF-PQ); None
+        otherwise."""
+        st = getattr(self.index, "adc_stats", None)
+        if st is None:
+            return None
+        return dict(st, sched_cache_hits=self.sched_cache.stats["hits"],
+                    sched_cache_misses=self.sched_cache.stats["misses"])
 
 
 class DistributedVectorDB(_PlanLedger):

@@ -138,6 +138,21 @@ def build_block_lists(assign, n_clusters: int, blk: int = 32):
             bcnt.astype(np.int32), spp)
 
 
+def visit_sharing(visit, *, pad_block=None):
+    """Cheap sharing probe: ``{pairs, blocks, sharing}`` of a visit table
+    WITHOUT building the segmented schedule. One ``np.unique`` over the
+    (Q*T,) block ids instead of the full sort-and-segment — the auto
+    dispatch reads this first and only pays ``build_block_schedule`` when a
+    grouped grid can actually use the result."""
+    visit = np.asarray(visit).reshape(-1)
+    if pad_block is not None:
+        visit = visit[visit != pad_block]
+    pairs = int(visit.size)
+    blocks = int(np.unique(visit).size)
+    return {"pairs": pairs, "blocks": blocks,
+            "sharing": float(pairs) / max(1, blocks)}
+
+
 def build_block_schedule(visit, *, qblk: int = 8, pad_block=None):
     """Host-side SEGMENTED schedule for the blocked multi-query ADC mode.
 
@@ -168,6 +183,22 @@ def build_block_schedule(visit, *, qblk: int = 8, pad_block=None):
     blocks visited), ``sharing`` (pairs / blocks — the dispatch heuristic's
     estimate of how many queries each block DMA amortizes over), and
     ``groups`` (real groups, before the bucket pad).
+
+    Because the sort is by block id, all of a block's groups are already
+    CONTIGUOUS in the flat group list — ``stats`` additionally carries the
+    run-length view the block-resident executors consume:
+
+    * ``stats["runs"] = (run_block (R,), run_start (R,), run_len (R,))``
+      int32 — run r covers groups ``[run_start[r], run_start[r] +
+      run_len[r])``, all visiting block ``run_block[r]``. R pads up to a
+      quarter-octave bucket of ``n_runs + 1`` so there is always at least
+      one pad run (``run_len == 0``, ``run_block == pad``, ``run_start ==
+      groups`` — a no-op program in the run grid).
+    * ``stats["grun"] (G,) int32`` — inverse map group -> run; the G-pad
+      sentinel groups point at the first pad run, so a per-group gather
+      through ``grun`` lands on the pad block exactly like ``sched_block``
+      does.
+    * ``stats["n_runs"]`` — real runs (== ``blocks``, before the R pad).
     """
     assert qblk >= 1, qblk
     visit = np.asarray(visit)
@@ -210,9 +241,67 @@ def build_block_schedule(visit, *, qblk: int = 8, pad_block=None):
         sched_block[gid] = b
         sched_q[gid, slot] = q_of
         sched_t[gid, slot] = t_of
+    # run-length view: one entry per distinct block, padded on the same
+    # quarter-octave ladder (of n_runs + 1, so >= 1 pad run always exists)
+    n_runs = n_blocks
+    R = n_runs + 1
+    if R > 8:
+        e = (R - 1).bit_length() - 3
+        R = -(-R >> e) << e
+    else:
+        R = 8
+    run_block = np.full(R, fill, np.int32)
+    run_start = np.full(R, n_groups, np.int32)     # pad runs: empty tail
+    run_len = np.zeros(R, np.int32)
+    grun = np.full(G, n_runs, np.int32)            # sentinel groups -> pad run
+    if P:
+        run_block[:n_runs] = b[starts]
+        run_start[:n_runs] = gbase[:-1]
+        run_len[:n_runs] = groups_per_run
+        grun[:n_groups] = np.repeat(np.arange(n_runs, dtype=np.int32),
+                                    groups_per_run)
     stats = {"pairs": int(P), "blocks": int(n_blocks),
-             "sharing": float(P) / max(1, n_blocks), "groups": n_groups}
+             "sharing": float(P) / max(1, n_blocks), "groups": n_groups,
+             "runs": (run_block, run_start, run_len), "grun": grun,
+             "n_runs": int(n_runs)}
     return sched_block, sched_q, sched_t, stats
+
+
+class ScheduleCache:
+    """Content-verified LRU over built block schedules.
+
+    ``build_block_schedule`` is a host-side sort of Q*T pairs plus a
+    device upload of the result — steady-state serving that re-queries the
+    same plan bucket re-pays it every call. The plan ledger
+    (``repro.core.db._PlanLedger``) owns one of these, keyed by
+    ``(plan bucket, plan generation, nprobe)`` + the dispatcher's
+    ``(qblk, Q, T)``; a hit additionally verifies the raw visit bytes
+    match what was cached, so a hash-free key can never alias a mutated
+    index or a different batch onto a stale schedule (it just misses and
+    rebuilds). Entries hold the DEVICE arrays, so a hit also skips the
+    host->device transfer.
+    """
+
+    def __init__(self, cap: int = 8):
+        from collections import OrderedDict
+        self.cap = int(cap)
+        self._entries = OrderedDict()
+        self.stats = {"hits": 0, "misses": 0}
+
+    def get(self, key, visit_bytes: bytes):
+        ent = self._entries.get(key)
+        if ent is not None and ent[0] == visit_bytes:
+            self._entries.move_to_end(key)
+            self.stats["hits"] += 1
+            return ent[1]
+        self.stats["misses"] += 1
+        return None
+
+    def put(self, key, visit_bytes: bytes, built) -> None:
+        self._entries[key] = (visit_bytes, built)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.cap:
+            self._entries.popitem(last=False)
 
 
 class BlockListLayout:

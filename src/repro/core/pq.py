@@ -345,7 +345,8 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
                   steps_per_probe: int = 1, use_kernel=None,
                   lut_dtype: str = "float32", scan_all: bool = False,
                   adaptive_nprobe=None, adc_mode: str = "auto",
-                  qblk: int = 8, adc_stats=None):
+                  qblk=None, adc_stats=None, autotune=None,
+                  sched_cache=None, sched_key=()):
     """IVF-ADC: probe nprobe coarse buckets, ADC-score their residual codes.
 
     codes are PQ codes of (x - centroid[assign]); scoring must therefore use
@@ -387,18 +388,22 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
     orchestrator over jitted stages — coarse probe stage -> host-level
     ``kops.ivf_adc_topk`` dispatch -> jitted exact re-rank. The host
     boundary after the probe stage is what makes the visit table CONCRETE,
-    which is what lets the dispatcher sort it into the blocked segmented
-    schedule (``adc_mode``/``qblk``; 'auto' picks blocked when the
-    measured block-sharing factor pays, see kernels/ops). Callers that
-    must stay inside one jit (the distributed plan) call the stages
-    themselves and always serve the per-query grid.
+    which is what lets the dispatcher sort it into the blocked/run-resident
+    segmented schedules (``adc_mode``/``qblk``; 'auto' consults the
+    measured autotuner ledger — ``autotune`` overrides it, see
+    kernels/ops and kernels/autotune). ``sched_cache``/``sched_key`` pass
+    the plan ledger's ScheduleCache context through so repeated batches
+    skip the host sort. Callers that must stay inside one jit (the
+    distributed plan) call the stages themselves and always serve the
+    per-query grid.
 
     ``adaptive_nprobe`` (float threshold, None = off) enables
     query-adaptive probing: probes whose coarse-score gap to the best
     probe exceeds the threshold are masked off the fixed-width visit
     table before any ADC work (see _ivf_probe_stage). ``adc_stats`` (dict,
     optional) receives the dispatch decision, schedule stats, and
-    'eff_nprobe' — the mean per-query surviving probe count.
+    'eff_nprobe' — the mean per-query surviving probe count (== nprobe,
+    sync-free, when adaptive probing is off).
     """
     q = jnp.asarray(q, jnp.float32)
 
@@ -443,9 +448,14 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
                                coarse=coarse, steps_per_probe=spp,
                                use_kernel=use_kernel, lut_dtype=lut_dtype,
                                mode=adc_mode, qblk=qblk,
-                               pad_block=pad_block, stats=adc_stats)
+                               pad_block=pad_block, stats=adc_stats,
+                               autotune=autotune, sched_cache=sched_cache,
+                               sched_key=sched_key)
     if adc_stats is not None:
-        adc_stats["eff_nprobe"] = float(jnp.mean(eff))
+        # only the adaptive path has a data-dependent probe count worth a
+        # host sync; with masking off every query keeps all nprobe probes
+        adc_stats["eff_nprobe"] = (float(jnp.mean(eff)) if adaptive
+                                   else float(nprobe))
     if refine:
         return _exact_rerank(corpus, corpus_sq, ids, q, metric=metric, k=k)
     return _pad_to_k(s[:, :k], ids[:, :k], k)
@@ -697,7 +707,7 @@ class IVFPQIndex(MutationMixin):
                  use_kernel=None, lut_dtype: str = "float32",
                  scan_all: bool = False, block_size: int = 32,
                  compact_threshold: float = 0.3, adc_mode: str = "auto",
-                 adaptive_nprobe=None, qblk: int = 8):
+                 adaptive_nprobe=None, qblk=None):
         assert metric in D.METRICS
         assert lut_dtype in kops.ADC_LUT_DTYPES, lut_dtype
         assert adc_mode in kops.ADC_MODES, adc_mode
@@ -714,14 +724,20 @@ class IVFPQIndex(MutationMixin):
         self.scan_all = scan_all  # True: PR-2 all-codes augmented-LUT scan
         self.block_size = block_size  # inverted-list block width (x8)
         self.compact_threshold = compact_threshold
-        self.adc_mode = adc_mode  # grid dispatch: auto/blocked/per_query
+        self.adc_mode = adc_mode  # grid: auto/blocked/per_query/run_resident
         self.adaptive_nprobe = adaptive_nprobe  # coarse-gap threshold, None=off
-        self.qblk = qblk  # blocked-mode query-group width
-        # dispatch telemetry: batches served per grid, running sums for the
+        self.qblk = qblk  # grouped-grid query-group width; None = autotuned
+        # dispatch telemetry: batches served per grid (probe batches counted
+        # both under their grid and under 'probes'), running sums for the
         # mean sharing factor / effective nprobe (serve.engine surfaces them)
-        self.adc_stats = {"blocked": 0, "per_query": 0,
+        self.adc_stats = {"blocked": 0, "per_query": 0, "run_resident": 0,
+                          "probes": 0, "crossover": None,
                           "sharing_sum": 0.0, "eff_nprobe_sum": 0.0,
                           "batches": 0}
+        # installed by the owning VectorDB front: the plan ledger's
+        # ScheduleCache + its (bucket, generation) context for this batch
+        self.sched_cache = None
+        self._sched_ctx = ()
         self.codebooks = self.codes = self.centroids = None
         self.codes_bm = self.bucket_ids = self.block_table = None
         self.layout = None
@@ -905,10 +921,15 @@ class IVFPQIndex(MutationMixin):
             steps_per_probe=self.spp, use_kernel=self.use_kernel,
             lut_dtype=self.lut_dtype, scan_all=self.scan_all,
             adaptive_nprobe=self.adaptive_nprobe, adc_mode=self.adc_mode,
-            qblk=self.qblk, adc_stats=batch_stats)
+            qblk=self.qblk, adc_stats=batch_stats,
+            sched_cache=self.sched_cache,
+            sched_key=self._sched_ctx + (nprobe,))
         if batch_stats:
             st = self.adc_stats
             st[batch_stats["mode"]] += 1
+            st["probes"] += bool(batch_stats.get("probe"))
+            if batch_stats.get("crossover") is not None:
+                st["crossover"] = batch_stats["crossover"]
             st["sharing_sum"] += batch_stats["sharing"]
             st["eff_nprobe_sum"] += batch_stats["eff_nprobe"]
             st["batches"] += 1

@@ -48,7 +48,7 @@ in f32: score = sum_j scale[q, j] * lut_i8[q, j, codes[n, j]]. vs bf16 that
 is another 2x off the resident table bytes; the quantization error per
 subspace is <= scale/2 = max|lut_j| / 254.
 
-Two grid modes share the scoring math:
+Three grid modes share the scoring math:
 
   * per-query (``ivf_adc``) — grid (Q, T), one (query, probe-step) per
     program: a block probed by s queries is DMA'd s times and each
@@ -63,6 +63,17 @@ Two grid modes share the scoring math:
     grid's LUT traffic (each pair still reads one LUT row); the win is
     the shared code-block DMA, the dropped pad-block pairs, and the
     matmul-shaped contraction.
+  * run-resident (``ivf_adc_run_resident``) — grid (R,) over the
+    schedule's per-block RUNS (``stats["runs"]``): a block shared by s
+    queries still costs the blocked grid ceil(s/qblk) DMAs (one per
+    group); here program r DMAs block ``run_block[r]`` once for the WHOLE
+    batch, expands its one-hot selector once, and an inner
+    ``jax.lax.fori_loop`` walks the run's ``run_len[r]`` groups — each
+    group's LUT panel is manually DMA'd into a double-buffered VMEM
+    scratch so the NEXT panel's fetch overlaps the current contraction,
+    while the grid pipeline overlaps the next RUN's block DMA the same
+    way. Code-block HBM traffic drops from G to R fetches; panel traffic
+    is unchanged (each pair still reads one LUT row).
 """
 from __future__ import annotations
 
@@ -352,3 +363,198 @@ def ivf_adc_blocked(bucket_codes, bucket_ids, sched_block, sched_q, sched_t,
         ],
         interpret=interpret,
     )(sched_block.astype(jnp.int32), qrow, *args)
+
+
+def _ivf_adc_run_resident_kernel(rb_ref, rs_ref, rl_ref, qrow_ref, c_ref,
+                                 id_ref, panel_hbm, cpan_ref, *refs,
+                                 n_runs: int, n_q: int, k: int, ksub: int,
+                                 qblk: int, int8: bool):
+    if int8:
+        (scp_hbm, s_out, i_out,
+         bs_ref, bi_ref, pbuf, psem, sbuf, ssem) = refs
+    else:
+        scp_hbm = sbuf = ssem = None
+        s_out, i_out, bs_ref, bi_ref, pbuf, psem = refs
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _init():
+        bs_ref[...] = jnp.full_like(bs_ref, NEG_INF)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    codes = c_ref[...][0]   # (blk, m) int32 — THE run's code block
+    ids = id_ref[...]       # (1, blk) int32 global row ids, -1 = pad slot
+    blk, m = codes.shape
+    # the amortization: the block's one-hot selector expands ONCE per run;
+    # every group in the run contracts against it
+    sub = jax.lax.broadcasted_iota(jnp.int32, (blk, m, ksub), 2)
+    sel = codes[:, :, None] == sub
+    if int8:
+        sel_c = sel.astype(jnp.int8)
+    else:
+        sel_c = sel.astype(pbuf.dtype).reshape(blk, m * ksub)
+
+    g0 = rs_ref[r]
+    L = rl_ref[r]           # groups in this run (0 for pad runs)
+
+    def dma_panel(slot, g):
+        return pltpu.make_async_copy(panel_hbm.at[pl.ds(g, 1)],
+                                     pbuf.at[slot], psem.at[slot])
+
+    def dma_scale(slot, g):
+        return pltpu.make_async_copy(scp_hbm.at[pl.ds(g, 1)],
+                                     sbuf.at[slot], ssem.at[slot])
+
+    @pl.when(L > 0)
+    def _warm():                      # first panel in flight before the loop
+        dma_panel(0, g0).start()
+        if int8:
+            dma_scale(0, g0).start()
+
+    def body(j, carry):
+        slot = jax.lax.rem(j, 2)
+        g = g0 + j
+
+        @pl.when(j + 1 < L)
+        def _prefetch():              # next panel races the contraction
+            dma_panel(1 - slot, g + 1).start()
+            if int8:
+                dma_scale(1 - slot, g + 1).start()
+
+        dma_panel(slot, g).wait()
+        panel = pbuf[slot, 0]         # (qblk, m*ksub)
+        if int8:
+            dma_scale(slot, g).wait()
+            scale = sbuf[slot, 0]     # (qblk, m) f32
+            s = None
+            for j_sub in range(m):
+                pj = jax.lax.dot_general(
+                    panel[:, j_sub * ksub:(j_sub + 1) * ksub],
+                    sel_c[:, j_sub, :], (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                pj = pj.astype(jnp.float32) * scale[:, j_sub][:, None]
+                s = pj if s is None else s + pj
+        else:
+            s = jax.lax.dot_general(panel, sel_c, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        s = s + cpan_ref[pl.ds(g, 1), :][0][:, None]   # (qblk, blk)
+        s = jnp.where(ids >= 0, s, NEG_INF)
+
+        for slot_i in range(qblk):    # static unroll: qblk dynamic-row RMWs
+            row = qrow_ref[g, slot_i]
+            comb_s = jnp.concatenate([bs_ref[pl.ds(row, 1), :],
+                                      s[slot_i:slot_i + 1, :]], axis=1)
+            comb_i = jnp.concatenate([bi_ref[pl.ds(row, 1), :], ids], axis=1)
+            ns, ni = _select_topk(comb_s, comb_i, k)
+            bs_ref[pl.ds(row, 1), :] = ns
+            bi_ref[pl.ds(row, 1), :] = ni
+        return carry
+
+    jax.lax.fori_loop(0, L, body, 0)
+
+    @pl.when(r == n_runs - 1)
+    def _finalize():
+        s_out[...] = bs_ref[0:n_q, :]
+        i_out[...] = bi_ref[0:n_q, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "steps_per_probe", "interpret",
+                                    "lut_dtype"))
+def ivf_adc_run_resident(bucket_codes, bucket_ids, run_block, run_start,
+                         run_len, sched_q, sched_t, luts, coarse, *, k: int,
+                         steps_per_probe: int = 1, interpret: bool = False,
+                         lut_dtype: str = "float32"):
+    """Block-RESIDENT run-length twin of ``ivf_adc_blocked``.
+
+    run_block/run_start/run_len: (R,) int32 — the per-block runs from
+    ``build_block_schedule``'s ``stats["runs"]`` (run r covers schedule
+    groups [run_start[r], run_start[r] + run_len[r]), all on block
+    ``run_block[r]``; pad runs have run_len 0). sched_q/sched_t: the
+    (G, qblk) group tables the runs index into. luts/coarse as in
+    ``ivf_adc``.
+
+    Program r fetches block run_block[r] ONCE for the whole batch (the
+    grid pipeline double-buffers the next run's block against the current
+    run's work), expands its one-hot selector once, then loops the run's
+    groups with an inner fori_loop, manually double-buffering each group's
+    (qblk, m*ksub) LUT panel DMA against the previous group's contraction
+    + scoreboard merge. Scores are bit-identical to the per-query and
+    blocked grids (same contraction orders; the int8 path accumulates the
+    same per-subspace f32 partials in the same j order).
+    -> (scores (Q, k) f32, ids (Q, k) int32), NEG_INF/-1 sentinels as in
+    ``ivf_adc`` (the ops.py dispatcher normalizes).
+    """
+    B, blk, m = bucket_codes.shape
+    G, qblk = sched_q.shape
+    R = run_block.shape[0]
+    Q, nprobe = coarse.shape
+    spp = steps_per_probe
+    per_probe = luts.ndim == 4
+    ksub = luts.shape[-1]
+    scales = None
+    if lut_dtype == "int8":
+        luts, scales = quantize_lut_int8(luts)
+    elif jnp.dtype(lut_dtype) != jnp.float32:
+        luts = luts.astype(jnp.dtype(lut_dtype))
+
+    # same pre-gathered panel geometry as the blocked grid; here it stays
+    # in HBM (memory_space=ANY) and the kernel streams it per group
+    qs = jnp.clip(sched_q, 0)
+    p_of = sched_t // spp
+    n_rows = Q * nprobe if per_probe else Q
+    row = qs * nprobe + p_of if per_probe else qs
+    luts_rows = luts.reshape(n_rows, m * ksub)
+    panel = jnp.take(luts_rows, row.reshape(-1), axis=0
+                     ).reshape(G, qblk, m * ksub)
+    cpan = jnp.take(coarse.astype(jnp.float32).reshape(-1),
+                    (qs * nprobe + p_of).reshape(-1)).reshape(G, qblk)
+    cpan = jnp.where(sched_q >= 0, cpan, NEG_INF)
+    qrow = jnp.where(sched_q >= 0, sched_q, Q).astype(jnp.int32)
+
+    in_specs = [
+        pl.BlockSpec((1, blk, m), lambda r, rb, rs, rl, qr: (rb[r], 0, 0)),
+        pl.BlockSpec((1, blk), lambda r, rb, rs, rl, qr: (rb[r], 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),         # panel: streamed
+        pl.BlockSpec((G, qblk), lambda r, rb, rs, rl, qr: (0, 0)),
+    ]
+    args = [bucket_codes.astype(jnp.int32), bucket_ids.astype(jnp.int32),
+            panel, cpan]
+    scratch = [
+        pltpu.VMEM((Q + 1, k), jnp.float32),  # row Q = sentinel trash
+        pltpu.VMEM((Q + 1, k), jnp.int32),
+        pltpu.VMEM((2, 1, qblk, m * ksub), panel.dtype),
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+    if scales is not None:
+        scale_rows = scales.reshape(n_rows, m)
+        scpan = jnp.take(scale_rows, row.reshape(-1), axis=0
+                         ).reshape(G, qblk, m)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+        args.append(scpan)
+        scratch += [pltpu.VMEM((2, 1, qblk, m), jnp.float32),
+                    pltpu.SemaphoreType.DMA((2,))]
+
+    kernel = functools.partial(_ivf_adc_run_resident_kernel, n_runs=R,
+                               n_q=Q, k=k, ksub=ksub, qblk=qblk,
+                               int8=scales is not None)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(R,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((Q, k), lambda r, rb, rs, rl, qr: (0, 0)),
+            pl.BlockSpec((Q, k), lambda r, rb, rs, rl, qr: (0, 0)),
+        ],
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(run_block.astype(jnp.int32), run_start.astype(jnp.int32),
+      run_len.astype(jnp.int32), qrow, *args)

@@ -600,7 +600,9 @@ class AsyncQueryEngine:
 
     # ---------------------------------------------------------------- stats
     def latency_stats(self) -> dict:
-        """The shared summary (p50/p99/mean, plan + mutation counters; see
+        """The shared summary (p50/p99/mean, plan + mutation counters, and
+        the ADC grid-dispatch telemetry — per-grid batch counts, autotuner
+        probes + fitted crossover, schedule-cache reuse; see
         ``QueryEngine.latency_stats``) plus the continuous-batching gauges:
         ``queue_depth`` (now), ``queue_depth_max`` (high-water mark),
         ``rejected`` (backpressure refusals), ``inflight`` (batches

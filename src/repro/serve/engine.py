@@ -159,11 +159,20 @@ def summarize_latencies(latencies_ms, writes_applied: int, db,
         stats.update({f"wal_{k}": int(v) for k, v in wal.items()})
     adc = getattr(db, "adc_stats", None)
     if adc is not None and adc.get("batches"):
-        # ADC grid dispatch: which path served each batch, and the mean
-        # block-sharing factor / effective nprobe the heuristic measured
+        # ADC grid dispatch: which grid served each batch, how many
+        # batches went to the autotuner's measured probe, the fitted
+        # sharing crossover it dispatches on, schedule-cache reuse, and
+        # the mean block-sharing factor / effective nprobe observed
         b = adc["batches"]
         stats["adc_blocked"] = int(adc["blocked"])
         stats["adc_per_query"] = int(adc["per_query"])
+        stats["adc_run_resident"] = int(adc.get("run_resident", 0))
+        stats["adc_probes"] = int(adc.get("probes", 0))
+        if adc.get("crossover") is not None:
+            stats["adc_crossover_sharing"] = float(adc["crossover"])
+        if "sched_cache_hits" in adc:
+            stats["adc_sched_cache_hits"] = int(adc["sched_cache_hits"])
+            stats["adc_sched_cache_misses"] = int(adc["sched_cache_misses"])
         stats["adc_sharing_factor"] = float(adc["sharing_sum"] / b)
         stats["adc_effective_nprobe"] = float(adc["eff_nprobe_sum"] / b)
     if extra:

@@ -1,7 +1,9 @@
-"""Blocked multi-query IVF-ADC mode (PR 8): segmented-schedule invariants,
-bit-exact parity with the per-query grid across LUT layouts/dtypes and both
-backends, dispatch-heuristic boundaries (including the traced-visit rules),
-query-adaptive nprobe, and the counters the mode surfaces through
+"""Grouped multi-query IVF-ADC modes (PR 8 blocked + PR 9 run-resident):
+segmented-schedule and run-length invariants, bit-exact parity with the
+per-query grid across LUT layouts/dtypes and both backends, the measured
+autotuner dispatch (probe phase, fitted crossover, legacy-constant escape
+hatch, traced-visit rules), the plan ledger's schedule cache,
+query-adaptive nprobe, and the counters the modes surface through
 ``adc_stats`` / ``latency_stats``."""
 import jax
 import jax.numpy as jnp
@@ -9,9 +11,12 @@ import numpy as np
 import pytest
 
 from repro.core import VectorDB, build_block_lists
-from repro.core.ivf import build_block_schedule
+from repro.core.ivf import ScheduleCache, build_block_schedule, visit_sharing
 from repro.kernels import ops as kops
+from repro.kernels.autotune import LEDGER, AutoTuner
 from repro.kernels.ops import ivf_adc_topk
+
+GROUPED_MODES = ("blocked", "run_resident")
 
 
 def _clustered(rng, n, d, n_clusters, scale=2.0):
@@ -100,23 +105,77 @@ def test_schedule_quarter_octave_grid_padding():
     assert len(seen) < 8  # buckets collapse shapes
 
 
+def test_schedule_run_length_view_partitions_groups(rng):
+    """PR-9 contract: the run-length view partitions the REAL group range
+    [0, n_groups) into contiguous per-block runs — run r covers groups
+    [run_start[r], run_start[r]+run_len[r]) and every group in a run
+    shares the run's block, so a run-resident executor may hold the block
+    in VMEM across the whole run. grun is the inverse map (group -> run)
+    with sentinel tail groups pointed at the pad run n_runs."""
+    Q, T, B = 29, 10, 40
+    visit = rng.integers(0, B, (Q, T)).astype(np.int32)
+    pad = B - 1
+    visit[rng.random((Q, T)) < 0.25] = pad
+    sb, sq, st, stats = build_block_schedule(visit, qblk=8, pad_block=pad)
+    rb, rs, rl = stats["runs"]
+    grun, n_runs = stats["grun"], stats["n_runs"]
+    G = sb.shape[0]
+    n_groups = stats["groups"]
+    assert rb.shape == rs.shape == rl.shape and grun.shape == (G,)
+    # real runs tile [0, n_groups) contiguously, in order, no gaps
+    ends = rs[:n_runs] + rl[:n_runs]
+    assert rs[0] == 0 and ends[-1] == n_groups
+    np.testing.assert_array_equal(rs[1:n_runs], ends[:-1])
+    assert np.all(rl[:n_runs] >= 1)
+    # each run's block matches every group it covers, and consecutive
+    # runs have distinct blocks (else they'd be one run)
+    for r in range(n_runs):
+        np.testing.assert_array_equal(sb[rs[r]:ends[r]], rb[r])
+        np.testing.assert_array_equal(grun[rs[r]:ends[r]], r)
+    assert np.all(rb[:n_runs][1:] != rb[:n_runs][:-1])
+    assert len(np.unique(rb[:n_runs])) == stats["blocks"] == n_runs
+    # pad runs are empty; sentinel tail groups map to the pad run
+    assert np.all(rl[n_runs:] == 0)
+    np.testing.assert_array_equal(grun[n_groups:], n_runs)
+
+
+def test_visit_sharing_matches_full_schedule(rng):
+    """The cheap dispatch probe (one np.unique, no sort) must agree with
+    the full schedule build on pairs/blocks/sharing — it is what 'auto'
+    consults every batch."""
+    Q, T, B = 21, 9, 30
+    visit = rng.integers(0, B, (Q, T)).astype(np.int32)
+    pad = B - 1
+    visit[rng.random((Q, T)) < 0.4] = pad
+    cheap = visit_sharing(visit, pad_block=pad)
+    _, _, _, full = build_block_schedule(visit, qblk=8, pad_block=pad)
+    assert cheap["pairs"] == full["pairs"]
+    assert cheap["blocks"] == full["blocks"]
+    assert cheap["sharing"] == pytest.approx(full["sharing"])
+    # all-pad table: zero pairs, sharing 0 (not a divide-by-zero)
+    allpad = visit_sharing(np.full((4, 3), pad, np.int32), pad_block=pad)
+    assert allpad == {"pairs": 0, "blocks": 0, "sharing": 0.0}
+
+
 # ------------------------------------------------------- bit-exact parity
 
+@pytest.mark.parametrize("mode", GROUPED_MODES)
 @pytest.mark.parametrize("use_kernel", [False, True])
 @pytest.mark.parametrize("lut_dtype", ["float32", "bfloat16", "int8"])
 @pytest.mark.parametrize("per_probe", [False, True])
-def test_blocked_bit_identical_to_per_query(rng, per_probe, lut_dtype,
-                                            use_kernel):
-    """The acceptance bar: ids AND scores bit-identical between the two
-    grid modes on the same visit table, for shared (dot) and per-probe
-    (l2) LUT layouts, every LUT dtype, jnp twin and Pallas kernel."""
+def test_grouped_bit_identical_to_per_query(rng, per_probe, lut_dtype,
+                                            use_kernel, mode):
+    """The acceptance bar: ids AND scores bit-identical between every
+    grouped grid and the per-query grid on the same visit table, for
+    shared (dot) and per-probe (l2) LUT layouts, every LUT dtype, jnp
+    twin and Pallas kernel."""
     codes, slots, visit, luts, coarse, spp = _problem(
         rng, per_probe=per_probe)
     kw = dict(k=9, coarse=coarse, steps_per_probe=spp,
               use_kernel=use_kernel, lut_dtype=lut_dtype,
               pad_block=slots.shape[0] - 1)
     s0, i0 = ivf_adc_topk(codes, slots, visit, luts, mode="per_query", **kw)
-    s1, i1 = ivf_adc_topk(codes, slots, visit, luts, mode="blocked", **kw)
+    s1, i1 = ivf_adc_topk(codes, slots, visit, luts, mode=mode, **kw)
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
     np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
 
@@ -146,47 +205,104 @@ def test_blocked_parity_low_sharing_and_ragged(rng):
                   use_kernel=use_kernel, pad_block=slots.shape[0] - 1)
         s0, i0 = ivf_adc_topk(codes, slots, visit, luts,
                               mode="per_query", **kw)
-        s1, i1 = ivf_adc_topk(codes, slots, visit, luts,
-                              mode="blocked", **kw)
-        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
-        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        for mode in GROUPED_MODES:
+            s1, i1 = ivf_adc_topk(codes, slots, visit, luts,
+                                  mode=mode, **kw)
+            np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+            np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
         assert (np.asarray(i0) == -1).any()  # the knockout actually fires
 
 
+@pytest.mark.parametrize("mode", GROUPED_MODES)
 @pytest.mark.parametrize("qblk", [1, 3, 8, 16])
-def test_blocked_parity_across_group_widths(rng, qblk):
+def test_grouped_parity_across_group_widths(rng, qblk, mode):
     """Group width only changes the schedule's shape, never the results —
     partial sentinel-padded groups at every width fold into the trash
-    row."""
+    row. qblk=16 > Q=13 exercises the whole-batch-in-one-group edge;
+    qblk=1 degenerates every group to a single query."""
     codes, slots, visit, luts, coarse, spp = _problem(rng, Q=13, nprobe=4)
     kw = dict(k=7, coarse=coarse, steps_per_probe=spp, use_kernel=False,
               pad_block=slots.shape[0] - 1)
     s0, i0 = ivf_adc_topk(codes, slots, visit, luts, mode="per_query", **kw)
-    s1, i1 = ivf_adc_topk(codes, slots, visit, luts, mode="blocked",
+    s1, i1 = ivf_adc_topk(codes, slots, visit, luts, mode=mode,
                           qblk=qblk, **kw)
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
     np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
 
 
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("mode", GROUPED_MODES)
+def test_grouped_parity_entirely_pad_visit(rng, mode, use_kernel):
+    """A visit table with zero real pairs (every probe landed on the
+    shared all-pad block) yields the same all-knocked-out (-inf, -1)
+    answer as the per-query grid — the schedule is pure sentinel groups
+    and the run view is pure pad runs."""
+    codes, slots, visit, luts, coarse, spp = _problem(rng, Q=9, nprobe=3)
+    pad = slots.shape[0] - 1
+    visit = jnp.full_like(visit, pad)
+    kw = dict(k=5, coarse=coarse, steps_per_probe=spp,
+              use_kernel=use_kernel, pad_block=pad)
+    s0, i0 = ivf_adc_topk(codes, slots, visit, luts, mode="per_query", **kw)
+    stats = {}
+    s1, i1 = ivf_adc_topk(codes, slots, visit, luts, mode=mode,
+                          stats=stats, **kw)
+    assert stats["pairs"] == 0
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    assert np.all(np.asarray(i1) == -1)
+    assert np.all(np.asarray(s1) == -np.inf)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("mode", GROUPED_MODES)
+def test_grouped_parity_single_block_corpus(rng, mode, use_kernel):
+    """A corpus that fits in ONE block collapses the schedule to a single
+    run — the run-resident grid fetches exactly one real block for the
+    whole batch and must still match per-query bit for bit (including the
+    ragged pad slots and k > candidate count knockout)."""
+    C, blk, m, ksub, Q = 1, 8, 8, 32, 11
+    assign = np.zeros(5, np.int64)  # 5 rows, one cluster, one block
+    slots, bstart, bcnt, spp = build_block_lists(assign, C, blk=blk)
+    slots = jnp.asarray(slots)
+    codes = jnp.asarray(
+        rng.integers(0, ksub, (slots.shape[0], blk, m)).astype(np.int32))
+    probe = jnp.zeros((Q, 1), jnp.int32)
+    visit = _expand_visit(probe, jnp.asarray(bstart), jnp.asarray(bcnt),
+                          spp, slots.shape[0])
+    luts = jnp.asarray(rng.normal(size=(Q, m, ksub)).astype(np.float32))
+    coarse = jnp.asarray(rng.normal(size=(Q, 1)).astype(np.float32))
+    kw = dict(k=8, coarse=coarse, steps_per_probe=spp,
+              use_kernel=use_kernel, pad_block=slots.shape[0] - 1)
+    s0, i0 = ivf_adc_topk(codes, slots, visit, luts, mode="per_query", **kw)
+    stats = {}
+    s1, i1 = ivf_adc_topk(codes, slots, visit, luts, mode=mode,
+                          stats=stats, **kw)
+    assert stats["blocks"] == 1
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    assert (np.asarray(i1) == -1).any()  # k=8 > 5 real rows
+
+
 # ------------------------------------------------------- dispatch heuristic
 
-def test_auto_dispatch_boundaries(rng):
-    """auto goes blocked only when the batch is worth scheduling: Q >=
-    BLOCKED_MIN_QUERIES AND measured sharing >= BLOCKED_MIN_SHARING."""
+def test_auto_dispatch_legacy_constants(rng):
+    """``autotune=False`` keeps the PR-8 constant thresholds as the
+    untuned escape hatch: blocked only when Q >= BLOCKED_MIN_QUERIES AND
+    measured sharing >= BLOCKED_MIN_SHARING."""
     # high sharing, large batch -> blocked
     codes, slots, visit, luts, coarse, spp = _problem(
         rng, C=6, Q=kops.BLOCKED_MIN_QUERIES, nprobe=4)
     stats = {}
     ivf_adc_topk(codes, slots, visit, luts, k=5, coarse=coarse,
                  steps_per_probe=spp, use_kernel=False, stats=stats,
-                 pad_block=slots.shape[0] - 1)
+                 autotune=False, pad_block=slots.shape[0] - 1)
     assert stats["mode"] == "blocked"
     assert stats["sharing"] >= kops.BLOCKED_MIN_SHARING
     # same problem, one query short of the floor -> per_query
     stats = {}
     ivf_adc_topk(codes, slots, visit[:-1], luts[:-1], k=5,
                  coarse=coarse[:-1], steps_per_probe=spp, use_kernel=False,
-                 stats=stats, pad_block=slots.shape[0] - 1)
+                 stats=stats, autotune=False, pad_block=slots.shape[0] - 1)
     assert stats["mode"] == "per_query"
     # low sharing at full batch size -> per_query (scheduling won't pay)
     codes, slots, visit, luts, coarse, spp = _problem(
@@ -194,9 +310,79 @@ def test_auto_dispatch_boundaries(rng):
     stats = {}
     ivf_adc_topk(codes, slots, visit, luts, k=5, coarse=coarse,
                  steps_per_probe=spp, use_kernel=False, stats=stats,
-                 pad_block=slots.shape[0] - 1)
+                 autotune=False, pad_block=slots.shape[0] - 1)
     assert stats["mode"] == "per_query"
     assert stats["sharing"] < kops.BLOCKED_MIN_SHARING
+
+
+def test_auto_dispatch_probes_then_follows_ledger(rng):
+    """Default 'auto': the first len(candidates)*reps batches of a new
+    (backend, m, ksub, blk, lut_dtype) key each time one candidate grid —
+    serving bit-identical answers — then the fitted decision drives a
+    probe-free ledger dispatch."""
+    codes, slots, visit, luts, coarse, spp = _problem(rng, C=6, Q=40,
+                                                     nprobe=4)
+    kw = dict(k=5, coarse=coarse, steps_per_probe=spp, use_kernel=False,
+              pad_block=slots.shape[0] - 1)
+    s0, i0 = ivf_adc_topk(codes, slots, visit, luts, mode="per_query", **kw)
+    tuner = AutoTuner()
+    n_probes = len(tuner.candidates) * tuner.reps
+    seen_modes = set()
+    for _ in range(n_probes):
+        stats = {}
+        s, i = ivf_adc_topk(codes, slots, visit, luts, mode="auto",
+                            autotune=tuner, stats=stats, **kw)
+        assert stats["probe"] is True
+        seen_modes.add(stats["mode"])
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i0))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s0))
+    # every grid family got measured
+    assert seen_modes == {"per_query", "blocked", "run_resident"}
+    decs = tuner.decisions()
+    assert len(decs) == 1
+    dec = next(iter(decs.values()))
+    assert dec["probes"] == n_probes
+    assert dec["grouped_mode"] in GROUPED_MODES and dec["crossover"] > 0
+    # steady state: no probe, dispatch follows the fitted crossover
+    stats = {}
+    s, i = ivf_adc_topk(codes, slots, visit, luts, mode="auto",
+                        autotune=tuner, stats=stats, **kw)
+    assert stats["probe"] is False
+    assert stats["crossover"] == pytest.approx(dec["crossover"])
+    want = (dec["grouped_mode"] if stats["sharing"] >= dec["crossover"]
+            else "per_query")
+    assert stats["mode"] == want
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i0))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s0))
+
+
+def test_auto_dispatch_seeded_ledger_crossover(rng):
+    """A seeded decision is honored without probing: sharing above the
+    crossover dispatches the ledger's grouped grid at the ledger's qblk,
+    below it stays per-query. This is the warm-started-serving path."""
+    codes, slots, visit, luts, coarse, spp = _problem(rng, C=6, Q=40,
+                                                     nprobe=4, m=8, ksub=32)
+    kw = dict(k=5, coarse=coarse, steps_per_probe=spp, use_kernel=False,
+              pad_block=slots.shape[0] - 1)
+    tkey = ("jnp", 8, 32, 8, "float32")  # backend, m, ksub, blk, lut_dtype
+    base = {"qblk": 4, "t_per_query": 1.0, "t_grouped": 0.5,
+            "sharing": 4.0, "probes": 0}
+    for gmode in GROUPED_MODES:
+        tuner = AutoTuner()
+        tuner.seed(tkey, dict(base, grouped_mode=gmode, crossover=1.5))
+        stats = {}
+        ivf_adc_topk(codes, slots, visit, luts, mode="auto",
+                     autotune=tuner, stats=stats, **kw)
+        assert stats["probe"] is False and stats["sharing"] >= 1.5
+        assert stats["mode"] == gmode and stats["qblk"] == 4
+    # crossover above this batch's sharing -> per_query, no schedule built
+    tuner = AutoTuner()
+    tuner.seed(tkey, dict(base, grouped_mode="run_resident",
+                          crossover=1e9))
+    stats = {}
+    ivf_adc_topk(codes, slots, visit, luts, mode="auto", autotune=tuner,
+                 stats=stats, **kw)
+    assert stats["mode"] == "per_query" and stats["groups"] == 0
 
 
 def test_traced_visit_rules(rng):
@@ -211,8 +397,9 @@ def test_traced_visit_rules(rng):
                             steps_per_probe=spp, use_kernel=False,
                             mode=mode, pad_block=slots.shape[0] - 1)
 
-    with pytest.raises(ValueError, match="traced"):
-        jax.jit(lambda v: run(v, "blocked"))(visit)
+    for forced in GROUPED_MODES:
+        with pytest.raises(ValueError, match="traced"):
+            jax.jit(lambda v: run(v, forced))(visit)
     s_jit, i_jit = jax.jit(lambda v: run(v, "auto"))(visit)
     s0, i0 = run(visit, "per_query")
     np.testing.assert_array_equal(np.asarray(i_jit), np.asarray(i0))
@@ -230,26 +417,128 @@ def test_bad_mode_rejected(rng):
 
 def test_db_modes_identical_and_counted(rng):
     """VectorDB('ivf_pq') serves bit-identical results under per_query /
-    blocked / auto, and adc_stats counts which grid served each batch."""
+    blocked / run_resident / auto, and adc_stats counts which grid served
+    each batch (auto's first batch is a measured probe)."""
     corpus = _clustered(rng, 1200, 32, 12)
     q = _clustered(rng, 64, 32, 12)
     kw = dict(metric="cosine", m=8, refine=0, nprobe=4)
     out = {}
-    for mode in ("per_query", "blocked", "auto"):
+    LEDGER.reset()  # auto must enter its probe phase deterministically
+    try:
+        for mode in ("per_query", "blocked", "run_resident", "auto"):
+            db = VectorDB("ivf_pq", adc_mode=mode, **kw).load(corpus)
+            out[mode] = tuple(np.asarray(x)
+                              for x in db.query(q, k=10, bucketize=False))
+            st = db.adc_stats
+            assert st["batches"] == 1
+            if mode == "per_query":
+                # forced per-query never builds a schedule, so sharing goes
+                # unmeasured — the counter records the decision, not a guess
+                assert st["per_query"] == 1 and st["sharing_sum"] == 0
+                assert st["probes"] == 0
+            elif mode == "auto":
+                # first batch of a fresh ledger key: one probe, one grid
+                assert st["probes"] == 1
+                assert (st["per_query"] + st["blocked"]
+                        + st["run_resident"]) == 1
+                assert st["sharing_sum"] > 0
+            else:
+                assert st[mode] == 1 and st["sharing_sum"] > 0
+                assert st["probes"] == 0
+    finally:
+        LEDGER.reset()  # don't leak half-probed state into other tests
+    for mode in ("blocked", "run_resident", "auto"):
+        np.testing.assert_array_equal(out[mode][1], out["per_query"][1])
+        np.testing.assert_array_equal(out[mode][0], out["per_query"][0])
+
+
+def test_schedule_cache_content_verified_lru(rng):
+    """ScheduleCache semantics the dispatcher leans on: same key + same
+    visit bytes hits and returns the cached build; same key with DIFFERENT
+    bytes (mutated index, different batch) misses instead of aliasing; the
+    LRU evicts the oldest key at capacity."""
+    cache = ScheduleCache(cap=2)
+    v1, v2 = b"batch-one", b"batch-two"
+    assert cache.get("k1", v1) is None  # cold
+    cache.put("k1", v1, {"built": 1})
+    assert cache.get("k1", v1) == {"built": 1}
+    assert cache.get("k1", v2) is None  # content mismatch -> miss, no alias
+    cache.put("k2", v1, {"built": 2})
+    cache.put("k3", v1, {"built": 3})  # evicts k1 (cap=2)
+    assert cache.get("k1", v1) is None
+    assert cache.get("k3", v1) == {"built": 3}
+    assert cache.stats == {"hits": 2, "misses": 3}
+
+
+def test_dispatcher_reuses_cached_schedule(rng):
+    """Repeating the same (sched_key, visit) through ivf_adc_topk builds
+    the schedule once; a changed key or table rebuilds; results are
+    unchanged either way."""
+    codes, slots, visit, luts, coarse, spp = _problem(rng, Q=24, nprobe=4)
+    cache = ScheduleCache()
+    kw = dict(k=5, coarse=coarse, steps_per_probe=spp, use_kernel=False,
+              pad_block=slots.shape[0] - 1, mode="run_resident",
+              sched_cache=cache)
+    s0, i0 = ivf_adc_topk(codes, slots, visit, luts,
+                          sched_key=("bucket", 0, 4), **kw)
+    assert cache.stats == {"hits": 0, "misses": 1}
+    s1, i1 = ivf_adc_topk(codes, slots, visit, luts,
+                          sched_key=("bucket", 0, 4), **kw)
+    assert cache.stats == {"hits": 1, "misses": 1}
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    # a generation bump (index mutated, schedule may be stale) re-keys
+    ivf_adc_topk(codes, slots, visit, luts, sched_key=("bucket", 1, 4),
+                 **kw)
+    assert cache.stats == {"hits": 1, "misses": 2}
+
+
+def test_db_schedule_cache_hits_and_generation_safety(rng):
+    """End to end through the plan ledger: steady-state repeat queries hit
+    the schedule cache, and a mutation (generation bump) never serves a
+    stale schedule — results after upsert match a fresh index."""
+    corpus = _clustered(rng, 800, 32, 10)
+    q = _clustered(rng, 48, 32, 10)
+    db = VectorDB("ivf_pq", metric="cosine", m=8, refine=0, nprobe=4,
+                  adc_mode="run_resident").load(corpus)
+    db.query(q, k=5)
+    st0 = db.adc_stats
+    db.query(q, k=5)
+    st1 = db.adc_stats
+    assert st1["sched_cache_hits"] > st0["sched_cache_hits"]
+    # mutate -> generation/content change re-keys the cache (miss, not
+    # stale reuse), and the grouped answer still matches per-query on the
+    # mutated index
+    extra = _clustered(rng, 200, 32, 10)
+    db.insert(extra)
+    misses_before = db.adc_stats["sched_cache_misses"]
+    s_mut, i_mut = (np.asarray(x) for x in db.query(q, k=5))
+    assert db.adc_stats["sched_cache_misses"] > misses_before
+    db.index.adc_mode = "per_query"
+    s_ref, i_ref = (np.asarray(x) for x in db.query(q, k=5))
+    np.testing.assert_array_equal(i_mut, i_ref)
+    np.testing.assert_array_equal(s_mut, s_ref)
+
+
+def test_adaptive_nprobe_run_resident_parity(rng):
+    """Satellite edge: query-adaptive probing emits knocked-out probes via
+    NEG_INF coarse entries AND pad-block visits — the run-resident grid
+    must reproduce the per-query answer under that masking too."""
+    corpus = _clustered(rng, 1500, 32, 16)
+    q = _clustered(rng, 64, 32, 16)
+    kw = dict(metric="cosine", m=8, refine=0, nprobe=6,
+              adaptive_nprobe=0.2)
+    out = {}
+    for mode in ("per_query", "run_resident"):
         db = VectorDB("ivf_pq", adc_mode=mode, **kw).load(corpus)
         out[mode] = tuple(np.asarray(x)
                           for x in db.query(q, k=10, bucketize=False))
         st = db.adc_stats
-        assert st["batches"] == 1
-        if mode == "per_query":
-            # forced per-query never builds a schedule, so sharing goes
-            # unmeasured — the counter records the decision, not a guess
-            assert st["per_query"] == 1 and st["sharing_sum"] == 0
-        else:
-            assert st["blocked"] == 1 and st["sharing_sum"] > 0
-    for mode in ("blocked", "auto"):
-        np.testing.assert_array_equal(out[mode][1], out["per_query"][1])
-        np.testing.assert_array_equal(out[mode][0], out["per_query"][0])
+        assert 1.0 <= st["eff_nprobe_sum"] / st["batches"] < 6.0
+    np.testing.assert_array_equal(out["run_resident"][1],
+                                  out["per_query"][1])
+    np.testing.assert_array_equal(out["run_resident"][0],
+                                  out["per_query"][0])
 
 
 def test_adaptive_nprobe_recall_floor_and_stats(rng):
@@ -291,9 +580,15 @@ def test_latency_stats_surface_adc_counters(rng):
         eng.submit(row, k=5)
     eng.drain()
     st = eng.latency_stats()
-    assert st["adc_blocked"] + st["adc_per_query"] >= 1
+    served = (st["adc_blocked"] + st["adc_per_query"]
+              + st["adc_run_resident"])
+    assert served >= 1
+    assert st["adc_probes"] >= 0  # surfaced even when the ledger is warm
     assert st["adc_sharing_factor"] > 0
     assert 1.0 <= st["adc_effective_nprobe"] <= 4.0
+    # the plan ledger's schedule cache telemetry rides along
+    assert st["adc_sched_cache_hits"] >= 0
+    assert st["adc_sched_cache_misses"] >= 0
 
 
 def test_adc_mode_salts_the_plan_key(rng):
