@@ -23,6 +23,12 @@ Measures (CPU walltime; the TPU numbers live in the dry-run roofline):
     walltime vs WAL tail length, and a crash-mid-ingest recovery whose
     top-k must match an uncrashed twin bit-for-bit (the recovery CI
     gate); the committed full-size run is ``BENCH_wal.json``,
+  * filtered + hybrid search (``filtered_paths``): filtered-vs-post-filter
+    exact-parity gate rows on a full-coverage ivf_pq, filtered QPS +
+    recall at ~1/10/50% predicate selectivity on the served engine, and
+    dense vs BM25 vs fused MRR on word-noised MarcoLike queries (the
+    hybrid CI gate); the committed full-size run is
+    ``BENCH_filtered.json``,
   * ``DistributedPQ`` per-device resident bytes vs a replicated f32 corpus
     on a forced multi-device host mesh (subprocess).
 
@@ -714,6 +720,172 @@ def wal_paths(n_writes: int = 400, wal_lengths=(200, 1000), N: int = 4096,
     return rows
 
 
+def filtered_paths(N: int = 10_000, d: int = 64, n_queries: int = 256,
+                   k: int = 10, m: int = 8, hybrid_passages: int = 400,
+                   seed: int = 0):
+    """Filtered + hybrid search (PR-10): what a metadata predicate costs
+    and what BM25 fusion buys.
+
+      * ``filtered_parity_sel{1,10,50}`` — the CI gate rows: on a
+        full-coverage ivf_pq (nprobe = n_clusters, refine=0) the filtered
+        top-k must EXACTLY equal the engine's own unfiltered full ranking
+        post-filtered on the host (``qps`` = identical-id fraction,
+        ``recall_at_10`` = bit-identical-score fraction; both must be 1.0
+        — invariant 6: a filter is a mask change, not a scoring change);
+        ``filtered_parity_alltrue`` pins the all-true bitmap bit-identical
+        to no filter at all,
+      * ``filtered_qps_sel{1,10,50}`` vs ``filtered_qps_unfiltered`` —
+        throughput of the served nprobe=8 engine as the predicate narrows
+        (the selectivity-aware nprobe boost is in play on the filtered
+        rows), with recall@10 against the exact FILTERED oracle — a flat
+        engine under the same predicate (min of 15 interleaved reps),
+      * ``hybrid_mrr`` — dense-only vs BM25-only vs fused (alpha=0.5) MRR
+        on MarcoLike with deliberately degraded dense queries (jittered
+        bag-of-words encoder + word-noised query texts): lexical evidence
+        must recover rank, so the CI gate is mrr_hybrid >= mrr_dense.
+    """
+    from repro.data.marco import simple_tokenizer
+    from repro.search import Eq, Range
+
+    rng = np.random.default_rng(seed)
+    rows = []
+
+    def post_filter(scores, ids, allowed, kk):
+        # host oracle: keep the engine's own ranking order, drop rows the
+        # bitmap rejects (stable — lax.top_k ties break by position)
+        out_s = np.full((ids.shape[0], kk), -np.inf, np.float32)
+        out_i = np.full((ids.shape[0], kk), -1, np.int32)
+        for r in range(ids.shape[0]):
+            keep = [(s, i) for s, i in zip(scores[r], ids[r])
+                    if i >= 0 and allowed[i]][:kk]
+            for c, (s, i) in enumerate(keep):
+                out_s[r, c] = s
+                out_i[r, c] = i
+        return out_s, out_i
+
+    # ---- exact-parity gate: fixed small corpus (functional, not perf)
+    Np, Qp = 2000, 32
+    n_cl_p = max(8, Np // 100)
+    corpus_p = _clustered(rng, Np, d, n_cl_p)
+    meta_p = {"tag": (np.arange(Np) % 100).tolist()}
+    db_gate = VectorDB("ivf_pq", metric="cosine", m=m, n_clusters=n_cl_p,
+                       nprobe=n_cl_p, refine=0).load(corpus_p, meta=meta_p)
+    qp = corpus_p[:Qp] + 0.01
+    full_s, full_i = map(np.asarray,
+                         db_gate.query(qp, k=Np, bucketize=False))
+    sels = [("sel1", Eq("tag", 7)), ("sel10", Range("tag", hi=9)),
+            ("sel50", Range("tag", hi=49))]
+    for label, pred in sels:
+        allowed = db_gate.metastore.mask(pred, Np)
+        want_s, want_i = post_filter(full_s, full_i, allowed, k)
+        got_s, got_i = map(np.asarray,
+                           db_gate.query(qp, k=k, bucketize=False,
+                                         where=pred))
+        rows.append({"path": f"filtered_parity_{label}", "N": Np,
+                     "selectivity": float(allowed.mean()),
+                     "qps": float(np.mean(got_i == want_i)),
+                     "recall_at_10": float(np.mean(got_s == want_s))})
+    s0, i0 = map(np.asarray, db_gate.query(qp, k=k, bucketize=False))
+    s1, i1 = map(np.asarray,
+                 db_gate.query(qp, k=k, bucketize=False,
+                               where=Range("tag", lo=0)))
+    rows.append({"path": "filtered_parity_alltrue", "N": Np,
+                 "selectivity": 1.0,
+                 "qps": float(np.mean(i0 == i1)),
+                 "recall_at_10": float(np.mean(s0 == s1))})
+
+    # ---- filtered QPS + recall on the served engine
+    n_clusters = max(8, N // 100)
+    corpus = _clustered(rng, N, d, n_clusters)
+    meta = {"tag": (np.arange(N) % 100).tolist()}
+    q = _clustered(rng, n_queries, d, n_clusters)
+    db = VectorDB("ivf_pq", metric="cosine", m=m, nprobe=8,
+                  refine=0).load(corpus, meta=meta)
+    exact = VectorDB("flat", metric="cosine").load(corpus, meta=meta)
+
+    def recall_vs(ids, ref):
+        ids, ref = np.asarray(ids), np.asarray(ref)
+        per = []
+        for r in range(ids.shape[0]):
+            want = set(int(x) for x in ref[r] if x >= 0)
+            if want:
+                got = set(int(x) for x in ids[r] if x >= 0)
+                per.append(len(got & want) / len(want))
+        return float(np.mean(per))
+
+    paths = {"filtered_qps_unfiltered":
+             (lambda: db.query(q, k=k, bucketize=False), None)}
+    for label, pred in sels:
+        paths[f"filtered_qps_{label}"] = (
+            lambda pred=pred: db.query(q, k=k, bucketize=False,
+                                       where=pred), pred)
+    for fn, _ in paths.values():
+        jax.block_until_ready(fn())  # compile (incl. the boosted nprobe)
+    walls = {name: float("inf") for name in paths}
+    for _ in range(15):  # interleaved min-of-reps (see pq_adc_paths)
+        for name, (fn, _) in paths.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            walls[name] = min(walls[name], time.perf_counter() - t0)
+    for name, (fn, pred) in paths.items():
+        ref = np.asarray(exact.query(q, k=k, bucketize=False,
+                                     **({"where": pred} if pred else {}))[1])
+        sel = (float(db.metastore.mask(pred, N).mean()) if pred is not None
+               else 1.0)
+        rows.append({"path": name, "N": N, "selectivity": sel,
+                     "qps": n_queries / walls[name],
+                     "recall_at_10": recall_vs(fn()[1], ref)})
+
+    # ---- hybrid fusion MRR on degraded dense queries (the CI gate)
+    mk = MarcoLike(n_passages=hybrid_passages, seed=2)
+    rng_h = np.random.default_rng(7)
+    d_h = 24
+    proj = rng_h.normal(size=(mk.vocab_size, d_h)).astype(np.float32) / 5.0
+    jitter = rng_h.normal(size=(hybrid_passages, d_h)).astype(np.float32) * 2.0
+
+    def enc_bow(texts, jit=None):
+        out = np.zeros((len(texts), d_h), np.float32)
+        for r, t in enumerate(texts):
+            toks = simple_tokenizer(t, mk.vocab_size, 64)
+            out[r] = proj[toks[toks >= 2]].sum(0)
+        return out if jit is None else out + jit
+
+    texts = mk.passage_texts()
+    hdb = VectorDB("flat", metric="cosine").load(enc_bow(texts))
+    hdb.enable_lexical(texts=texts)
+    qt = mk.query_texts(noise=0.5)
+    qv = enc_bow(qt, jitter)  # deliberately degraded dense queries
+
+    def mrr(ids):
+        out = 0.0
+        for r, row in enumerate(np.asarray(ids)):
+            hit = np.where(row == r)[0]
+            if hit.size:
+                out += 1.0 / (hit[0] + 1)
+        return out / len(ids)
+
+    arms = {
+        "dense": lambda: hdb.query(qv, k=k),
+        "hybrid": lambda: hdb.query(qv, k=k, hybrid=0.5, hybrid_texts=qt),
+        "lex": lambda: hdb.query(qv, k=k, hybrid=0.0, hybrid_texts=qt),
+    }
+    for fn in arms.values():
+        jax.block_until_ready(fn())  # compile
+    hwalls = {name: float("inf") for name in arms}
+    for _ in range(15):
+        for name, fn in arms.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            hwalls[name] = min(hwalls[name], time.perf_counter() - t0)
+    mrrs = {name: mrr(fn()[1]) for name, fn in arms.items()}
+    rows.append({"path": "hybrid_mrr", "N": hybrid_passages, "alpha": 0.5,
+                 "mrr_dense": mrrs["dense"], "mrr_hybrid": mrrs["hybrid"],
+                 "mrr_lex": mrrs["lex"],
+                 "qps_dense": hybrid_passages / hwalls["dense"],
+                 "qps_hybrid": hybrid_passages / hwalls["hybrid"]})
+    return rows
+
+
 _DIST_PQ_SNIPPET = """
 import json
 import jax, numpy as np
@@ -815,6 +987,15 @@ def main(quick: bool = False, json_path: str | None = None):
                           else f"{kk}={vv}" for kk, vv in r.items()
                           if kk != "path")
         print(f"wal,{r['path']},{extras}")
+    results["filtered"] = filtered_paths(
+        N=2000 if quick else 10_000, n_queries=64 if quick else 256,
+        hybrid_passages=80 if quick else 400)
+    print("name,path,fields")
+    for r in results["filtered"]:
+        extras = ",".join(f"{kk}={vv:.4f}" if isinstance(vv, float)
+                          else f"{kk}={vv}" for kk, vv in r.items()
+                          if kk != "path")
+        print(f"filtered,{r['path']},{extras}")
     results["distributed_pq"] = distributed_pq_memory(
         shards=4, N=2048 if quick else 4096)
     dp = results["distributed_pq"]

@@ -61,6 +61,8 @@ from repro.core.quant import Int8FlatIndex
 from repro.core.wal import WriteAheadLog
 from repro.ft.faults import crashpoint
 from repro.kernels import ops as kops
+from repro.search.lexical import BM25Index, hybrid_merge
+from repro.search.meta import MetadataStore, Predicate, filter_hash
 
 ENGINES: Dict[str, Type] = {
     "flat": FlatIndex,      # paper: Iterative (exact), cosine + l2
@@ -92,15 +94,21 @@ class _WriteFront:
 
     WRITE_KINDS = ("insert", "delete", "upsert", "compact")
 
-    def apply_write(self, kind: str, vectors=None, ids=None):
+    def apply_write(self, kind: str, vectors=None, ids=None, meta=None):
         """Apply one write batch by kind. Returns the mutation's native
         result: assigned ids (insert/upsert), live-row count (delete), or
-        the stats dict (compact)."""
+        the stats dict (compact). ``meta`` (optional columnar metadata
+        dict, the WAL form) is forwarded only when present, so fronts
+        whose mutation methods predate metadata stay compatible."""
         if kind == "insert":
+            if meta is not None:
+                return self.insert(vectors, ids, meta=meta)
             return self.insert(vectors, ids)
         if kind == "delete":
             return self.delete(ids)
         if kind == "upsert":
+            if meta is not None:
+                return self.upsert(vectors, ids, meta=meta)
             return self.upsert(vectors, ids)
         if kind == "compact":
             return self.compact()
@@ -202,21 +210,44 @@ class VectorDB(_PlanLedger, _WriteFront):
         self._snap_t_mark = time.monotonic()
         self._snap_step = 0
         self._auto_snapshots = 0
+        # filtered + hybrid search state (repro.search): metadata columns
+        # keyed by slot id, an optional frozen BM25 index, and the current
+        # batch's filter context (filter crc32, nprobe boost) for the plan
+        # ledger — None outside a filtered query
+        self.metastore = MetadataStore()
+        self.lexical = None
+        self._filter_ctx = None
+        self._filter_stats = {
+            "filtered_batches": 0, "bitmap_build_ms": 0.0,
+            "selectivity_hist": {"<=1%": 0, "<=10%": 0, "<=50%": 0,
+                                 ">50%": 0},
+            "hybrid_merges": 0, "nprobe_boosts": 0}
         self._plan_init()
 
     def _plan_salt(self) -> tuple:
         # the ADC grid mode and adaptive-nprobe masking each change the
-        # compiled search program on the same shapes — distinct plan keys
+        # compiled search program on the same shapes — distinct plan keys;
+        # the filter context separates filtered batches in the ledger (the
+        # nprobe boost really is a different compiled program; the bitmap
+        # itself is data, but per-filter counters are what serve reports)
         return (getattr(self.index, "adc_mode", None),
-                getattr(self.index, "adaptive_nprobe", None))
+                getattr(self.index, "adaptive_nprobe", None),
+                self._filter_ctx)
 
     # ----------------------------------------------------------- load
-    def load(self, vectors) -> "VectorDB":
+    def load(self, vectors, meta=None) -> "VectorDB":
+        """Index a corpus. ``meta`` (optional) attaches metadata to rows
+        0..N-1: either a columnar dict ({column: [v0..vN-1]}) or a list of
+        per-row dicts — see ``repro.search.meta``. Load is not WAL-logged
+        (it precedes durability), so its metadata rides snapshots only."""
         vectors = jnp.asarray(vectors)
         assert vectors.ndim == 2, vectors.shape
         self.index.load(vectors)
         self.n = vectors.shape[0]
         self._loaded = True
+        self.metastore = MetadataStore()  # fresh corpus, fresh id space
+        if meta is not None:
+            self.metastore.put(np.arange(self.n), meta)
         return self
 
     def load_texts(self, texts, encoder: Callable, batch_size: int = 128) -> "VectorDB":
@@ -228,7 +259,7 @@ class VectorDB(_PlanLedger, _WriteFront):
         return self.load(jnp.concatenate(embs, axis=0))
 
     # ----------------------------------------------------------- mutation
-    def _mutate(self, op: str, *args):
+    def _mutate(self, op: str, *args, meta=None):
         if not self._loaded:
             raise RuntimeError(f"{op} before load")
         fn = getattr(self.index, op, None)
@@ -242,9 +273,20 @@ class VectorDB(_PlanLedger, _WriteFront):
             # compiles fresh executables — make the ledger say so
             self.plan_generation += 1
         self.n = getattr(self.index, "size", self.n)
+        # metadata syncs with the id outcome of the mutation: insert/upsert
+        # attach rows at the engine-assigned ids (upsert replaces, so stale
+        # fields don't linger; upsert WITHOUT meta keeps the old metadata —
+        # replay re-applies the same choice), delete clears presence,
+        # compact is a no-op (ids are stable addresses)
+        norm_meta = None
+        if meta is not None and op in ("insert", "upsert"):
+            norm_meta = self.metastore.put(np.asarray(out), meta,
+                                           replace=(op == "upsert"))
+        elif op == "delete":
+            self.metastore.delete(np.asarray(args[0]))
         if (self.wal is not None and not self._wal_replaying
                 and op in WriteAheadLog.KINDS):
-            self._wal_log(op, args, out)
+            self._wal_log(op, args, out, norm_meta)
             self._maybe_auto_snapshot()
         return out
 
@@ -267,30 +309,34 @@ class VectorDB(_PlanLedger, _WriteFront):
                             durable=True)
             self._auto_snapshots += 1
 
-    def _wal_log(self, op: str, args, out) -> None:
+    def _wal_log(self, op: str, args, out, meta=None) -> None:
         """Append the applied mutation to the WAL. Insert logs the ids the
         engine ASSIGNED (not the caller's None), so replay re-applies with
-        explicit ids and the recovered id space is bit-identical. reserve
+        explicit ids and the recovered id space is bit-identical. ``meta``
+        is the NORMALIZED columnar metadata dict (MetadataStore.put's
+        return), so replay re-attaches exactly what was stored. reserve
         is not logged: capacity pre-sizing changes no query result, and
         replayed mutations re-grow capacity deterministically."""
         if op == "insert":
             self.wal.append("insert", vectors=np.asarray(args[0]),
-                            ids=np.asarray(out))
+                            ids=np.asarray(out), meta=meta)
         elif op == "delete":
             self.wal.append("delete", ids=np.asarray(args[0]))
         elif op == "upsert":
             self.wal.append("upsert", vectors=np.asarray(args[0]),
-                            ids=np.asarray(args[1]))
+                            ids=np.asarray(args[1]), meta=meta)
         elif op == "compact":
             self.wal.append("compact")
 
-    def insert(self, vectors, ids=None) -> np.ndarray:
+    def insert(self, vectors, ids=None, meta=None) -> np.ndarray:
         """Append rows online; returns the assigned (stable) ids — ids are
         never reused or renumbered, so results stay meaningful across
-        mutations. Applies to host mirrors immediately; the next query
-        uploads the dirty arrays once (lazy device sync). Not thread-safe:
-        serialize against queries (the serve fronts do)."""
-        return self._mutate("insert", vectors, ids)
+        mutations. ``meta`` (optional; columnar dict or per-row dicts)
+        attaches filterable metadata at the assigned ids. Applies to host
+        mirrors immediately; the next query uploads the dirty arrays once
+        (lazy device sync). Not thread-safe: serialize against queries
+        (the serve fronts do)."""
+        return self._mutate("insert", vectors, ids, meta=meta)
 
     def delete(self, ids) -> int:
         """Tombstone rows by id; returns how many were live. Deleted slots
@@ -299,10 +345,12 @@ class VectorDB(_PlanLedger, _WriteFront):
         forever. Same thread-safety rule as ``insert``."""
         return self._mutate("delete", ids)
 
-    def upsert(self, vectors, ids) -> np.ndarray:
-        """Re-encode existing ids in place (update-or-resurrect). Same
+    def upsert(self, vectors, ids, meta=None) -> np.ndarray:
+        """Re-encode existing ids in place (update-or-resurrect). With
+        ``meta``, the rows' metadata is REPLACED wholesale (no field
+        merge); without it the existing metadata is kept. Same
         thread-safety rule as ``insert``."""
-        return self._mutate("upsert", vectors, ids)
+        return self._mutate("upsert", vectors, ids, meta=meta)
 
     def compact(self) -> dict:
         """Reclaim tombstoned query work (engine-specific; see engines).
@@ -327,7 +375,89 @@ class VectorDB(_PlanLedger, _WriteFront):
         return getattr(self.index, "generation", 0)
 
     # ----------------------------------------------------------- query
-    def query(self, q, k: int = 10, *, bucketize: bool = True):
+    # engines whose query() composes the predicate bitmap into validity
+    # (invariant 6). graph/lsh candidate generation is structural (beam /
+    # hash probes), so post-hoc masking would silently return < k under
+    # selective filters — they refuse rather than degrade.
+    FILTERABLE = ("flat", "int8", "ivf", "pq", "ivf_pq")
+
+    def enable_lexical(self, texts=None, tokens=None, *,
+                       vocab_size: int = 30_000, seq_len: int = 64,
+                       k1: float = 1.5, b: float = 0.75) -> BM25Index:
+        """Build the BM25 half of hybrid search over the indexed corpus
+        (row i of ``texts``/``tokens`` = slot id i, the load order).
+        Defaults to the texts remembered by ``load_texts``. The lexical
+        index is FROZEN at build time (see repro.search.lexical); rebuild
+        after mutations if lexical coverage of new rows matters."""
+        if texts is None and tokens is None:
+            if self._texts is None:
+                raise ValueError(
+                    "enable_lexical needs texts/tokens (or a prior "
+                    "load_texts)")
+            texts = self._texts
+        if tokens is not None:
+            self.lexical = BM25Index.from_tokens(tokens, k1=k1, b=b)
+        else:
+            self.lexical = BM25Index.from_texts(
+                list(texts), vocab_size=vocab_size, seq_len=seq_len,
+                k1=k1, b=b)
+        return self.lexical
+
+    def _filter_bitmap(self, where: Predicate):
+        """Predicate -> (bitmap over the id space, engine kwargs). Also
+        decides the selectivity-aware nprobe boost for the IVF engines:
+        probing C/nprobe more lists roughly holds the CANDIDATE count
+        (survivors of the bitmap) steady as selectivity drops, clamped to
+        4x so a 0.1% filter can't recompile a 1000x-wider program."""
+        if self.engine_name not in self.FILTERABLE:
+            raise NotImplementedError(
+                f"engine {self.engine_name!r} does not support filtered "
+                f"queries (have {self.FILTERABLE})")
+        t0 = time.perf_counter()
+        n_ids = int(getattr(self.index, "next_id", self.n) or self.n)
+        allowed = self.metastore.mask(where, n_ids)
+        fs = self._filter_stats
+        fs["bitmap_build_ms"] += (time.perf_counter() - t0) * 1e3
+        fs["filtered_batches"] += 1
+        sel = float(allowed.sum()) / max(self.n, 1)
+        hist = fs["selectivity_hist"]
+        hist["<=1%" if sel <= 0.01 else "<=10%" if sel <= 0.10
+             else "<=50%" if sel <= 0.50 else ">50%"] += 1
+        extra = {"allowed": jnp.asarray(allowed)}
+        boost = 1
+        if self.engine_name in ("ivf", "ivf_pq"):
+            boost = int(np.clip(np.round(1.0 / max(sel, 1e-9)), 1, 4))
+            extra["nprobe_boost"] = boost
+            if boost > 1:
+                fs["nprobe_boosts"] += 1
+        self._filter_ctx = (filter_hash(where), boost)
+        return allowed, extra
+
+    def _hybrid_fuse(self, scores, ids, alpha, texts, tokens, allowed,
+                     kk: int):
+        """Fuse the dense result with BM25 over the same queries (and the
+        same predicate bitmap) via repro.search.lexical.hybrid_merge."""
+        if self.lexical is None:
+            raise RuntimeError(
+                "hybrid query before enable_lexical(...)")
+        Q = scores.shape[0]
+        if tokens is None:
+            if texts is None:
+                raise ValueError(
+                    "hybrid query needs hybrid_texts or hybrid_tokens")
+            tokens = self.lexical.tokenize(list(texts))
+        tokens = np.asarray(tokens)
+        assert tokens.shape[0] >= Q, (tokens.shape, Q)
+        lex_s, lex_i = self.lexical.score(tokens[:Q], k=kk,
+                                          allowed=allowed)
+        self._filter_stats["hybrid_merges"] += 1
+        return hybrid_merge(np.asarray(scores), np.asarray(ids),
+                            lex_s, lex_i, alpha=float(alpha), k=kk)
+
+    def query(self, q, k: int = 10, *, bucketize: bool = True,
+              where: Optional[Predicate] = None,
+              hybrid: Optional[float] = None, hybrid_texts=None,
+              hybrid_tokens=None):
         """q: (d,) or (Q, d) -> (scores (Q, k) f32, ids (Q, k) int32).
 
         ``bucketize`` pads Q up to the plan-bucket ladder so the engine's
@@ -335,6 +465,15 @@ class VectorDB(_PlanLedger, _WriteFront):
         once per caller batch size; rows are independent in every engine, so
         the padded rows (repeats of the last query) cannot change the first
         Q results, which are sliced back out lazily (no host sync).
+
+        ``where`` (a ``repro.search.meta`` Predicate) restricts results to
+        matching rows: the predicate compiles to one bitmap over the id
+        space, and filtered-out slots ride through the engines as the -1
+        pad sentinel the fused kernels already knock out (invariant 6) —
+        same compiled executables, bit-identical when the bitmap is
+        all-true. ``hybrid=alpha`` fuses the dense scores with BM25 over
+        ``hybrid_texts``/``hybrid_tokens`` (needs ``enable_lexical``):
+        alpha=1 is dense-only, 0 lexical-only.
 
         An empty index — never inserted into, or fully deleted — returns
         (Q, 0)-shaped results rather than erroring: emptiness is a normal
@@ -346,16 +485,31 @@ class VectorDB(_PlanLedger, _WriteFront):
         kk = min(k, self.n)
         if kk <= 0:
             return _empty_result(q.shape[0], k)
-        if not bucketize:
-            return self.index.query(q, k=kk)
-        q, Q = self._plan_batch(q, kk)
-        if hasattr(self.index, "sched_cache"):
-            # hand the engine the ledger's schedule cache + this batch's
-            # plan context; the engine appends nprobe to complete the key
-            self.index.sched_cache = self.sched_cache
-            self.index._sched_ctx = (self._bucket(Q), self.plan_generation)
-        scores, ids = self.index.query(q, k=kk)
-        return scores[:Q], ids[:Q]
+        allowed, extra = (None, {})
+        self._filter_ctx = None
+        if where is not None:
+            allowed, extra = self._filter_bitmap(where)
+        try:
+            if bucketize:
+                q, Q = self._plan_batch(q, kk)
+                if hasattr(self.index, "sched_cache"):
+                    # hand the engine the ledger's schedule cache + this
+                    # batch's plan context; the engine appends nprobe to
+                    # complete the key
+                    self.index.sched_cache = self.sched_cache
+                    self.index._sched_ctx = (self._bucket(Q),
+                                             self.plan_generation)
+            else:
+                Q = q.shape[0]
+            scores, ids = self.index.query(q, k=kk, **extra)
+            scores, ids = scores[:Q], ids[:Q]
+        finally:
+            self._filter_ctx = None
+        if hybrid is not None:
+            scores, ids = self._hybrid_fuse(scores, ids, hybrid,
+                                            hybrid_texts, hybrid_tokens,
+                                            allowed, kk)
+        return scores, ids
 
     def query_texts(self, texts, encoder: Callable, k: int = 10):
         q = jnp.asarray(encoder(list(texts)))
@@ -404,7 +558,7 @@ class VectorDB(_PlanLedger, _WriteFront):
             try:
                 for rec in records:
                     self.apply_write(rec.kind, vectors=rec.vectors,
-                                     ids=rec.ids)
+                                     ids=rec.ids, meta=rec.meta)
                     n += 1
             finally:
                 self._wal_replaying = False
@@ -447,7 +601,11 @@ class VectorDB(_PlanLedger, _WriteFront):
         if self.wal is not None:
             self.wal.sync()  # the snapshot must not outrun the log
             meta["wal_lsn"] = int(self.wal.last_lsn)
-        out = ckpt.save(state_dict(), directory, step, meta=meta)
+        tree = dict(state_dict())
+        # metadata columns ride the same snapshot as extra leaves, so a
+        # restore serves identical filtered results (invariant 6 durably)
+        tree.update(self.metastore.state_leaves())
+        out = ckpt.save(tree, directory, step, meta=meta)
         if self.wal is not None:
             crashpoint("wal.truncate.pre")
             self.wal.truncate_through(meta["wal_lsn"])
@@ -495,7 +653,12 @@ class VectorDB(_PlanLedger, _WriteFront):
                 _skip(e)
                 continue
             try:
+                # the metastore leaves are popped out FIRST so engines
+                # only ever see their own keys; a skipped step discards
+                # the half-built store along with the rebuilt engine
+                store = MetadataStore.from_leaves(arrays)
                 self.index.load_state(arrays)
+                self.metastore = store
                 chosen = s
                 break
             # ENGINE validation errors (metric/engine mismatch ValueError)
@@ -527,6 +690,18 @@ class VectorDB(_PlanLedger, _WriteFront):
         if self.wal is None:
             return None
         return dict(self.wal.stats, auto_snapshots=self._auto_snapshots)
+
+    @property
+    def filter_stats(self) -> Optional[dict]:
+        """Filtered/hybrid query telemetry — batch count, cumulative
+        bitmap-build time, a selectivity histogram, hybrid merge count,
+        and how often the IVF engines took an nprobe boost — when any
+        filtered or hybrid query ran; None otherwise. Surfaces in serve
+        ``latency_stats`` exactly like ``adc_stats``."""
+        fs = self._filter_stats
+        if not (fs["filtered_batches"] or fs["hybrid_merges"]):
+            return None
+        return dict(fs, selectivity_hist=dict(fs["selectivity_hist"]))
 
     @property
     def adc_stats(self) -> Optional[dict]:

@@ -171,10 +171,19 @@ class FlatIndex(MutationMixin):
         self.valid = jnp.asarray(mask)
         self._dirty = False
 
-    def query(self, q, k: int = 10):
+    def query(self, q, k: int = 10, *, allowed=None):
         self._sync()
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+        valid = self.valid
+        if allowed is not None:
+            # predicate bitmap over the id space ANDs into the live mask —
+            # filtered rows knock out exactly like tombstones (invariant 6)
+            a = jnp.asarray(allowed)
+            cap = valid.shape[0]
+            if a.shape[0] < cap:
+                a = jnp.pad(a, (0, cap - a.shape[0]))
+            valid = valid & a[:cap]
         s, i = flat_search(self.corpus, q.astype(self.dtype),
                            metric=self.metric, k=k, tile=self.tile,
-                           corpus_sq=self.corpus_sq, valid=self.valid)
+                           corpus_sq=self.corpus_sq, valid=valid)
         return D.mask_invalid_ids(s, i)

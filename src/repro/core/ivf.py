@@ -760,10 +760,18 @@ class IVFIndex(MutationMixin):
         self.buckets = jnp.asarray(self._buckets)
         self._dirty = False
 
-    def query(self, q, k: int = 10):
+    def query(self, q, k: int = 10, *, allowed=None, nprobe_boost: int = 1):
         self._sync()
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32)).astype(self.dtype)
-        nprobe = min(self.nprobe, self.centroids.shape[0])
-        return ivf_search(self.corpus, self.centroids, self.buckets, q,
+        nprobe = min(self.nprobe * max(1, int(nprobe_boost)),
+                     self.centroids.shape[0])
+        buckets = self.buckets
+        if allowed is not None:
+            # predicate bitmap -> -1 pad sentinel in the bucket table: the
+            # jitted ivf_search is unchanged (invariant 6 — a filter is a
+            # data change, not a shape change)
+            from repro.kernels import ops as kops  # lazy: layering
+            buckets = kops.mask_allowed_ids(buckets, jnp.asarray(allowed))
+        return ivf_search(self.corpus, self.centroids, buckets, q,
                           metric=self.metric, k=k, nprobe=nprobe, cap=self.cap,
                           corpus_sq=self.corpus_sq)

@@ -200,7 +200,7 @@ def _pad_to_k(s, ids, k: int):
 
 
 def pq_search(codebooks, codes, corpus, q, *, metric: str, k: int,
-              refine: int = 0, corpus_sq=None, valid=None,
+              refine: int = 0, corpus_sq=None, valid=None, allowed=None,
               use_kernel=None, lut_dtype: str = "float32"):
     """Flat ADC search (+ optional exact re-rank of the top ``refine``).
 
@@ -211,17 +211,18 @@ def pq_search(codebooks, codes, corpus, q, *, metric: str, k: int,
     gathered element (see kernels.ops._round_lut_bf16). Scoring goes
     through the backend dispatcher (Pallas kernel on TPU, fused jnp twin
     elsewhere; ``use_kernel``/``lut_dtype`` override). ``valid`` masks
-    tombstoned/pad rows of a mutable corpus out of the scan. corpus is only
-    touched (and may be None) when refine > 0.
+    tombstoned/pad rows of a mutable corpus out of the scan; ``allowed``
+    (the predicate engine's bitmap, invariant 6) ANDs into it inside the
+    dispatcher. corpus is only touched (and may be None) when refine > 0.
     """
     N = codes.shape[0]
     luts = adc_tables(codebooks, q, metric=metric)
     if not refine:
-        s, i = kops.adc_topk(codes, luts, k=k, valid=valid,
+        s, i = kops.adc_topk(codes, luts, k=k, valid=valid, allowed=allowed,
                              use_kernel=use_kernel, lut_dtype=lut_dtype)
         return D.mask_invalid_ids(s, i)
     R = min(max(refine, k), N)
-    s, cand = kops.adc_topk(codes, luts, k=R, valid=valid,
+    s, cand = kops.adc_topk(codes, luts, k=R, valid=valid, allowed=allowed,
                             use_kernel=use_kernel, lut_dtype=lut_dtype)
     _, cand = D.mask_invalid_ids(s, cand)
     return _exact_rerank(corpus, corpus_sq, cand, q, metric=metric, k=k)
@@ -341,7 +342,8 @@ def _ivf_probe_stage(codebooks, centroids, q, block_table, threshold, *,
 
 def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
                   metric: str, k: int, nprobe: int, refine: int = 0,
-                  corpus_sq=None, assign=None, valid=None, block_lists=None,
+                  corpus_sq=None, assign=None, valid=None, allowed=None,
+                  block_lists=None,
                   steps_per_probe: int = 1, use_kernel=None,
                   lut_dtype: str = "float32", scan_all: bool = False,
                   adaptive_nprobe=None, adc_mode: str = "auto",
@@ -404,8 +406,21 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
     optional) receives the dispatch decision, schedule stats, and
     'eff_nprobe' — the mean per-query surviving probe count (== nprobe,
     sync-free, when adaptive probing is off).
+
+    ``allowed`` (optional bool bitmap over the id space — the predicate
+    engine's output, invariant 6) reaches the bucket-resident dispatch as
+    a ``bucket_ids`` rewrite (filtered slots -> the -1 pad sentinel; see
+    kops.ivf_adc_topk) and the scan_all path as a ``valid`` AND — either
+    way the compiled programs are the unfiltered ones.
     """
     q = jnp.asarray(q, jnp.float32)
+    if allowed is not None and scan_all:
+        a = jnp.asarray(allowed)
+        N = codes.shape[0]
+        if a.shape[0] < N:
+            a = jnp.pad(a, (0, N - a.shape[0]))
+        a = a[:N]
+        valid = a if valid is None else valid & a
 
     if scan_all:
         assert metric == "dot", "scan_all folds the coarse term into the " \
@@ -450,7 +465,7 @@ def ivf_pq_search(codebooks, codes, centroids, buckets, corpus, q, *,
                                mode=adc_mode, qblk=qblk,
                                pad_block=pad_block, stats=adc_stats,
                                autotune=autotune, sched_cache=sched_cache,
-                               sched_key=sched_key)
+                               sched_key=sched_key, allowed=allowed)
     if adc_stats is not None:
         # only the adaptive path has a data-dependent probe count worth a
         # host sync; with masking off every query keeps all nprobe probes
@@ -621,7 +636,7 @@ class PQIndex(MutationMixin):
                           if self._sq is not None else None)
         self._dirty = False
 
-    def query(self, q, k: int = 10):
+    def query(self, q, k: int = 10, *, allowed=None):
         self._sync()
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
         metric = self.metric
@@ -631,7 +646,8 @@ class PQIndex(MutationMixin):
         return pq_search(self.codebooks, self.codes, self.corpus, q,
                          metric=metric, k=min(k, max(self.size, 1)),
                          refine=self.refine, corpus_sq=self.corpus_sq,
-                         valid=self.valid, use_kernel=self.use_kernel,
+                         valid=self.valid, allowed=allowed,
+                         use_kernel=self.use_kernel,
                          lut_dtype=self.lut_dtype)
 
     # ------------------------------------------------------- persistence
@@ -903,20 +919,21 @@ class IVFPQIndex(MutationMixin):
                           if self._sq is not None else None)
         self._dirty = False
 
-    def query(self, q, k: int = 10):
+    def query(self, q, k: int = 10, *, allowed=None, nprobe_boost: int = 1):
         self._sync()
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
         metric = self.metric
         if metric == "cosine":
             q = D.l2_normalize(q)
             metric = "dot"
-        nprobe = min(self.nprobe, self.centroids.shape[0])
+        nprobe = min(self.nprobe * max(1, int(nprobe_boost)),
+                     self.centroids.shape[0])
         batch_stats = {} if not self.scan_all else None
         out = ivf_pq_search(
             self.codebooks, self.codes, self.centroids, None, self.corpus, q,
             metric=metric, k=min(k, max(self.size, 1)), nprobe=nprobe,
             refine=self.refine, corpus_sq=self.corpus_sq, assign=self.assign,
-            valid=self.valid,
+            valid=self.valid, allowed=allowed,
             block_lists=(self.codes_bm, self.bucket_ids, self.block_table),
             steps_per_probe=self.spp, use_kernel=self.use_kernel,
             lut_dtype=self.lut_dtype, scan_all=self.scan_all,

@@ -33,8 +33,11 @@ def dequantize_rows(codes, scales):
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "k"))
-def int8_search(codes, scales, q, *, metric: str, k: int, corpus_sq=None):
-    """Asymmetric exact top-k over an int8 corpus. q stays f32."""
+def int8_search(codes, scales, q, *, metric: str, k: int, corpus_sq=None,
+                valid=None):
+    """Asymmetric exact top-k over an int8 corpus. q stays f32. ``valid``
+    (optional (N,) bool — the predicate engine's bitmap) knocks rows out
+    of the selection the same way the other exact engines do."""
     if metric == "cosine":
         q = D.l2_normalize(q)  # rows were normalized before quantization
         metric = "dot"
@@ -47,6 +50,8 @@ def int8_search(codes, scales, q, *, metric: str, k: int, corpus_sq=None):
     else:
         q_sq = jnp.sum(jnp.square(q.astype(jnp.float32)), -1)
         scores = -(q_sq[:, None] - 2.0 * dots + corpus_sq[None, :])
+    if valid is not None:
+        scores = jnp.where(valid[None, :], scores, -jnp.inf)
     return jax.lax.top_k(scores, k)
 
 
@@ -65,7 +70,18 @@ class Int8FlatIndex:
         self.codes, self.scales = quantize_rows(corpus)
         return self
 
-    def query(self, q, k: int = 10):
+    def query(self, q, k: int = 10, *, allowed=None):
         q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
-        return int8_search(self.codes, self.scales, q, metric=self.metric,
-                           k=min(k, self.codes.shape[0]), corpus_sq=self.corpus_sq)
+        valid = None
+        if allowed is not None:
+            N = self.codes.shape[0]
+            a = jnp.asarray(allowed)
+            if a.shape[0] < N:
+                a = jnp.pad(a, (0, N - a.shape[0]))
+            valid = a[:N]
+        s, i = int8_search(self.codes, self.scales, q, metric=self.metric,
+                           k=min(k, self.codes.shape[0]),
+                           corpus_sq=self.corpus_sq, valid=valid)
+        if valid is not None:
+            s, i = D.mask_invalid_ids(s, i)
+        return s, i

@@ -72,6 +72,11 @@ class WalRecord:
     kind: str
     vectors: Optional[np.ndarray] = None
     ids: Optional[np.ndarray] = None
+    # optional columnar metadata dict ({column: [values...]} aligned to
+    # ids — the MetadataStore.normalize form); rides the JSON header, so
+    # values are JSON scalars. None for records without metadata (every
+    # pre-PR-10 log decodes with meta=None).
+    meta: Optional[dict] = None
 
 
 def _arr_meta(arr) -> Tuple[Optional[dict], bytes]:
@@ -90,14 +95,20 @@ def _arr_read(meta, buf: bytes, off: int):
     return arr.copy(), off + n
 
 
-def encode_record(lsn: int, kind: str, vectors=None, ids=None) -> bytes:
+def encode_record(lsn: int, kind: str, vectors=None, ids=None,
+                  meta=None) -> bytes:
     """One CRC32-framed record. ``vectors``/``ids`` are optional arrays
-    (insert/upsert log both, delete logs ids, compact logs neither)."""
+    (insert/upsert log both, delete logs ids, compact logs neither);
+    ``meta`` is an optional columnar metadata dict carried in the JSON
+    header (absent from the header entirely when None, so pre-PR-10
+    records re-encode byte-identically through truncate_through)."""
     assert kind in WAL_KINDS, kind
     vmeta, vbytes = _arr_meta(vectors)
     imeta, ibytes = _arr_meta(ids)
-    header = json.dumps({"lsn": int(lsn), "kind": kind,
-                         "vectors": vmeta, "ids": imeta}).encode()
+    head = {"lsn": int(lsn), "kind": kind, "vectors": vmeta, "ids": imeta}
+    if meta is not None:
+        head["meta"] = meta
+    header = json.dumps(head).encode()
     payload = _HLEN.pack(len(header)) + header + vbytes + ibytes
     return _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
 
@@ -108,7 +119,8 @@ def decode_payload(payload: bytes) -> WalRecord:
     off = _HLEN.size + hlen
     vectors, off = _arr_read(header["vectors"], payload, off)
     ids, _off = _arr_read(header["ids"], payload, off)
-    return WalRecord(int(header["lsn"]), header["kind"], vectors, ids)
+    return WalRecord(int(header["lsn"]), header["kind"], vectors, ids,
+                     header.get("meta"))
 
 
 def _scan(raw: bytes):
@@ -216,11 +228,11 @@ class WriteAheadLog:
         return wal, replay
 
     # ----------------------------------------------------------- append
-    def append(self, kind: str, vectors=None, ids=None) -> int:
+    def append(self, kind: str, vectors=None, ids=None, meta=None) -> int:
         """Frame + write + flush one record; fsync per the group-commit
         policy. Returns the record's lsn."""
         lsn = self.last_lsn + 1
-        rec = encode_record(lsn, kind, vectors, ids)
+        rec = encode_record(lsn, kind, vectors, ids, meta)
         crashpoint("wal.append.pre")
         self._f.write(rec)
         self._f.flush()  # in the OS now: survives process death, not power
@@ -258,7 +270,8 @@ class WriteAheadLog:
         tmp = self.path + ".tmp"
         with open(tmp, "wb") as fh:
             for r in keep:
-                fh.write(encode_record(r.lsn, r.kind, r.vectors, r.ids))
+                fh.write(encode_record(r.lsn, r.kind, r.vectors, r.ids,
+                                       r.meta))
             fh.flush()
             os.fsync(fh.fileno())
         os.replace(tmp, self.path)

@@ -15,14 +15,19 @@ strings (for the load_texts path).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import List, Tuple
 
 import numpy as np
 
 
 def simple_tokenizer(text: str, vocab_size: int, seq_len: int) -> np.ndarray:
-    """Deterministic hash tokenizer: whitespace split -> stable ids (0 = pad)."""
-    ids = [hash(w) % (vocab_size - 2) + 2 for w in text.split()]
+    """Deterministic hash tokenizer: whitespace split -> stable ids (0 = pad).
+
+    crc32, not Python hash(): str hash is salted per process
+    (PYTHONHASHSEED), which made lexical/hybrid scores drift across runs.
+    """
+    ids = [zlib.crc32(w.encode()) % (vocab_size - 2) + 2 for w in text.split()]
     ids = ids[:seq_len]
     return np.asarray(ids + [0] * (seq_len - len(ids)), np.int32)
 

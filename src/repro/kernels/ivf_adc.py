@@ -35,6 +35,11 @@ metric geometry:
 
 ``coarse`` doubles as a probe knockout: callers mask a whole probe by
 adding NEG_INF to its coarse term; pad slots (id -1) knock out in-kernel.
+The -1 sentinel is also how PREDICATE FILTERS reach this kernel
+(invariant 6): ``ops.ivf_adc_topk(allowed=...)`` rewrites ``bucket_ids``
+so filtered-out slots read as -1 — the kernel itself never learns about
+filters, and an all-true bitmap leaves its inputs (hence outputs)
+bit-identical.
 
 Results fold into a per-query (1, k) VMEM scoreboard across the T grid
 steps (same unrolled knockout top-k as topk_distance), written out at the

@@ -67,6 +67,24 @@ def _auto_interpret(interpret):
     return jax.default_backend() != "tpu"
 
 
+@jax.jit
+def mask_allowed_ids(bucket_ids, allowed):
+    """Retarget slots whose id fails the predicate bitmap at the -1 pad
+    sentinel. bucket_ids: (..., ) int32 global ids (-1 = pad/tombstone);
+    allowed: (n,) bool over the id space (ids >= n read as disallowed).
+
+    This is invariant 6's implementation point for the bucket-resident
+    paths: a filtered batch rewrites the DATA the kernels consume — the
+    grids, schedules, and compiled executables never change, and slots a
+    predicate rejects are indistinguishable from tombstones. With an
+    all-true bitmap the output equals the input bit-for-bit.
+    """
+    n = allowed.shape[0]
+    safe = jnp.clip(bucket_ids, 0, n - 1)
+    ok = (bucket_ids >= 0) & (bucket_ids < n) & jnp.take(allowed, safe)
+    return jnp.where(ok, bucket_ids, -1)
+
+
 def resolve_adc_backend(use_kernel=None) -> str:
     """'kernel' (fused Pallas pq_adc) or 'jnp' (fused gather twin).
 
@@ -261,9 +279,9 @@ def adc_topk_jnp(codes, luts, *, k: int, valid=None, tile: int = 32768,
     return s, i
 
 
-def adc_topk(codes, luts, *, k: int, valid=None, use_kernel=None,
-             lut_dtype: str = "float32", blk_n: int = 256, tile: int = 32768,
-             interpret=None):
+def adc_topk(codes, luts, *, k: int, valid=None, allowed=None,
+             use_kernel=None, lut_dtype: str = "float32", blk_n: int = 256,
+             tile: int = 32768, interpret=None):
     """Backend-aware PQ ADC top-k dispatch — THE compressed hot-path entry.
 
     codes: (N, m) uint8/int32; luts: (Q, m, ksub) f32. TPU (or
@@ -272,6 +290,11 @@ def adc_topk(codes, luts, *, k: int, valid=None, use_kernel=None,
     ('float32'/'bfloat16'/'int8') and a row ``valid`` mask, and return
     (scores (Q, k) f32, ids (Q, k) int32) with identical semantics.
 
+    ``allowed`` is the predicate engine's bitmap over the id space
+    (invariant 6): it simply ANDs into ``valid`` — rows a filter rejects
+    are knocked out exactly like tombstones, by the same score bias, in
+    the same executables. None (the unfiltered hot path) changes nothing.
+
     When called with concrete (non-traced) arrays, the bf16 rounding runs
     as its own executable before the scan — see _round_lut_bf16; inside an
     enclosing jit the rounding inlines into the scan instead (same values,
@@ -279,6 +302,13 @@ def adc_topk(codes, luts, *, k: int, valid=None, use_kernel=None,
     output changes dtype, so there is no free f32-lane widening to exploit).
     """
     assert lut_dtype in ADC_LUT_DTYPES, lut_dtype
+    if allowed is not None:
+        N = codes.shape[0]
+        a = jnp.asarray(allowed)
+        if a.shape[0] < N:  # id space can trail the capacity bucket
+            a = jnp.pad(a, (0, N - a.shape[0]))
+        a = a[:N]
+        valid = a if valid is None else valid & a
     if resolve_adc_backend(use_kernel) == "kernel":
         s, i = pq_adc(codes, luts, k=k, valid=valid, blk_n=blk_n,
                       interpret=interpret, lut_dtype=lut_dtype)
@@ -550,7 +580,7 @@ def ivf_adc_topk(bucket_codes, bucket_ids, visit, luts, *, k: int,
                  lut_dtype: str = "float32", interpret=None,
                  mode: str = "auto", qblk=None,
                  pad_block=None, stats=None, autotune=None,
-                 sched_cache=None, sched_key=()):
+                 sched_cache=None, sched_key=(), allowed=None):
     """Backend-aware bucket-resident IVF-ADC top-k — the IVF-PQ hot-path
     entry. Work scales with the probed candidate count, not N.
 
@@ -601,9 +631,21 @@ def ivf_adc_topk(bucket_codes, bucket_ids, visit, luts, *, k: int,
     tables. If ``stats`` is a dict, the dispatch decision is written into
     it ('mode', 'sharing', 'pairs', 'blocks', 'groups', 'qblk', 'probe',
     'crossover').
+
+    ``allowed`` (optional (n,) bool bitmap over the id space — the
+    predicate engine's output) rewrites ``bucket_ids`` through
+    ``mask_allowed_ids`` before any grid runs: filtered-out slots become
+    the -1 pad sentinel every mode already knocks out, so the SAME
+    compiled executables serve filtered and unfiltered batches on every
+    adc_mode and backend (invariant 6). The visit table, schedule, and
+    schedule cache are untouched — a filter is a data change, not a
+    shape or program change.
     """
     assert lut_dtype in ADC_LUT_DTYPES, lut_dtype
     assert mode in ADC_MODES, mode
+    if allowed is not None:
+        bucket_ids = mask_allowed_ids(bucket_ids.astype(jnp.int32),
+                                      jnp.asarray(allowed))
     Q, T = visit.shape
     nprobe = T // steps_per_probe
     if coarse is None:

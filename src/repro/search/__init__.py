@@ -1,0 +1,10 @@
+"""Filtered + hybrid search: predicate bitmaps over the ADC knockout
+machinery (``repro.search.meta``) and BM25 fusion with dense scores
+(``repro.search.lexical``). Entry point: ``VectorDB.query(where=...,
+hybrid=...)``."""
+from repro.search.meta import (And, Eq, In, MetadataStore, Not, Or,
+                               Predicate, Range, filter_hash)
+from repro.search.lexical import BM25Index, hybrid_merge
+
+__all__ = ["And", "Eq", "In", "MetadataStore", "Not", "Or", "Predicate",
+           "Range", "filter_hash", "BM25Index", "hybrid_merge"]

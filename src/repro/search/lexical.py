@@ -1,0 +1,204 @@
+"""BM25-ish lexical scoring + dense/lexical hybrid fusion.
+
+Lin et al. (*Lucene Is All You Need*) argue hybrid dense+lexical
+retrieval is table stakes; MS MARCO — the source paper's own benchmark —
+ships the text to do it. This module is the lexical half: a classic
+BM25 inverted index over the same deterministic token path the encoders
+use (``repro.data.marco.simple_tokenizer`` / ``MarcoLike``), and
+``hybrid_merge`` — per-query min-max normalization of both score sets,
+convex combination under ``alpha``, final selection through the
+EXISTING ``repro.core.distributed.merge_candidate_sets`` (the mesh's
+top-k-of-top-ks merge, reused verbatim: fusing two retrievers is the
+same shape as fusing two shards).
+
+The index is host-side numpy and FROZEN at build time (built once via
+``VectorDB.enable_lexical``): scoring is a dense per-query accumulator
+over the corpus — exact BM25, no approximations — so it doubles as its
+own oracle in tests. Mutation sync is out of scope for this PR (the
+benchmark workloads build lexical state over the loaded corpus);
+``ids`` maps index rows to engine slot ids so a filtered ``allowed``
+bitmap from the predicate engine composes here too.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.marco import simple_tokenizer
+
+
+class BM25Index:
+    """Okapi BM25 over token-id documents (0 = pad, 1 = unk, ignored)."""
+
+    def __init__(self, k1: float = 1.5, b: float = 0.75):
+        self.k1 = float(k1)
+        self.b = float(b)
+        self.n_docs = 0
+        self.avgdl = 0.0
+        self.doc_len = np.zeros((0,), np.float64)
+        self.ids = np.zeros((0,), np.int64)  # index row -> engine slot id
+        # token -> (doc rows, term frequencies)
+        self.postings: Dict[int, tuple] = {}
+        self.idf: Dict[int, float] = {}
+        self.vocab_size = 0
+        self.seq_len = 0
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def from_tokens(cls, tokens, *, ids=None, k1: float = 1.5,
+                    b: float = 0.75) -> "BM25Index":
+        """tokens: (N, L) int32 (0/1 = pad/unk) or list of id lists."""
+        idx = cls(k1=k1, b=b)
+        docs = [np.asarray(row)[np.asarray(row) >= 2] for row in tokens]
+        N = len(docs)
+        idx.n_docs = N
+        idx.doc_len = np.asarray([len(d) for d in docs], np.float64)
+        idx.avgdl = float(idx.doc_len.mean()) if N else 0.0
+        idx.ids = (np.arange(N, dtype=np.int64) if ids is None
+                   else np.asarray(ids, np.int64).reshape(-1))
+        assert idx.ids.shape[0] == N
+        acc: Dict[int, List[tuple]] = {}
+        for r, d in enumerate(docs):
+            toks, tfs = np.unique(d, return_counts=True)
+            for t, tf in zip(toks, tfs):
+                acc.setdefault(int(t), []).append((r, int(tf)))
+        for t, posts in acc.items():
+            rows = np.asarray([p[0] for p in posts], np.int64)
+            tfs = np.asarray([p[1] for p in posts], np.float64)
+            idx.postings[t] = (rows, tfs)
+            df = rows.shape[0]
+            idx.idf[t] = float(np.log(1.0 + (N - df + 0.5) / (df + 0.5)))
+        return idx
+
+    @classmethod
+    def from_texts(cls, texts: Sequence[str], *, vocab_size: int = 30_000,
+                   seq_len: int = 64, ids=None, k1: float = 1.5,
+                   b: float = 0.75) -> "BM25Index":
+        tokens = np.stack([simple_tokenizer(t, vocab_size, seq_len)
+                           for t in texts])
+        idx = cls.from_tokens(tokens, ids=ids, k1=k1, b=b)
+        idx.vocab_size = vocab_size
+        idx.seq_len = seq_len
+        return idx
+
+    def tokenize(self, texts: Sequence[str]) -> np.ndarray:
+        assert self.vocab_size, "index was built from raw tokens; pass " \
+            "query tokens, not texts"
+        return np.stack([simple_tokenizer(t, self.vocab_size, self.seq_len)
+                         for t in texts])
+
+    # ------------------------------------------------------------- score
+    def score(self, q_tokens, *, k: int, allowed=None):
+        """BM25 top-k per query. q_tokens: (Q, L) ids or list of id lists;
+        ``allowed``: optional bool bitmap over the ENGINE id space (the
+        predicate engine's output) — rows outside it never surface.
+
+        Returns (scores (Q, k) f64, ids (Q, k) int64) in engine slot ids;
+        rows with no matching term pad out as (-inf, -1).
+        """
+        Q = len(q_tokens)
+        out_s = np.full((Q, k), -np.inf, np.float64)
+        out_i = np.full((Q, k), -1, np.int64)
+        if self.n_docs == 0 or self.avgdl == 0.0:
+            return out_s, out_i
+        row_ok = None
+        if allowed is not None:
+            allowed = np.asarray(allowed, bool).reshape(-1)
+            safe = np.clip(self.ids, 0, max(allowed.shape[0] - 1, 0))
+            row_ok = (self.ids < allowed.shape[0]) & allowed[safe]
+        norm = self.k1 * (1.0 - self.b
+                          + self.b * self.doc_len / self.avgdl)  # (N,)
+        for qi in range(Q):
+            qt = np.asarray(q_tokens[qi])
+            qt = np.unique(qt[qt >= 2])
+            acc = np.zeros((self.n_docs,), np.float64)
+            hit = np.zeros((self.n_docs,), bool)
+            for t in qt:
+                post = self.postings.get(int(t))
+                if post is None:
+                    continue
+                rows, tfs = post
+                acc[rows] += self.idf[int(t)] * tfs * (self.k1 + 1.0) \
+                    / (tfs + norm[rows])
+                hit[rows] = True
+            if row_ok is not None:
+                hit &= row_ok
+            n_hit = int(hit.sum())
+            if not n_hit:
+                continue
+            cand = np.flatnonzero(hit)
+            order = cand[np.argsort(-acc[cand], kind="stable")[:k]]
+            out_s[qi, : order.shape[0]] = acc[order]
+            out_i[qi, : order.shape[0]] = self.ids[order]
+        return out_s, out_i
+
+
+def _minmax(scores: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Per-query min-max over valid entries -> [0, 1]; invalid -> -inf.
+    A query whose valid scores are all equal maps them to 1.0 (rank holds
+    no information there; the other retriever decides)."""
+    valid = ids >= 0
+    s = np.where(valid, scores, np.nan)
+    with np.errstate(invalid="ignore"):
+        lo = np.nanmin(s, axis=1, keepdims=True)
+        hi = np.nanmax(s, axis=1, keepdims=True)
+    span = hi - lo
+    flat = ~(span > 0)  # degenerate or empty rows
+    span = np.where(flat, 1.0, span)
+    lo = np.where(flat, np.where(np.isnan(lo), 0.0, lo - 1.0), lo)
+    out = (np.where(np.isnan(s), 0.0, s) - lo) / span
+    return np.where(valid, out, -np.inf)
+
+
+def hybrid_merge(dense_s, dense_i, lex_s, lex_i, *, alpha: float, k: int):
+    """Fuse dense (ADC) and lexical (BM25) candidate sets.
+
+    Per query: min-max both score sets to [0, 1]; every candidate in the
+    union scores ``alpha * dense + (1 - alpha) * lex`` (a component the
+    candidate did not surface in contributes 0); duplicates are resolved
+    on the dense side (the lexical copy is knocked out); the union is
+    stacked (2, Q, k') and selected through the distributed front's
+    ``merge_candidate_sets`` — one top-k over both sets.
+
+    Returns (scores (Q, k) f32, ids (Q, k) int32), (-inf, -1) padded.
+    """
+    from repro.core.distributed import merge_candidate_sets  # lazy: layering
+    from repro.core import distances as D
+
+    dense_s = np.asarray(dense_s, np.float64)
+    dense_i = np.asarray(dense_i, np.int64)
+    lex_s = np.asarray(lex_s, np.float64)
+    lex_i = np.asarray(lex_i, np.int64)
+    dn = _minmax(dense_s, dense_i)
+    ln = _minmax(lex_s, lex_i)
+    # lexical score of each dense candidate (0 when it didn't surface)
+    same = dense_i[:, :, None] == np.where(lex_i < 0, -2, lex_i)[:, None, :]
+    lex_for_dense = np.where(same, np.where(np.isneginf(ln), 0.0, ln)[:, None, :],
+                             0.0).sum(axis=2)
+    fused_dense = np.where(dense_i >= 0,
+                           alpha * np.where(np.isneginf(dn), 0.0, dn)
+                           + (1.0 - alpha) * lex_for_dense, -np.inf)
+    # lexical-only candidates keep (1 - alpha) * lex; duplicates knock out
+    dup = same.any(axis=1)
+    lex_alive = (lex_i >= 0) & ~dup
+    fused_lex = np.where(lex_alive,
+                         (1.0 - alpha) * np.where(np.isneginf(ln), 0.0, ln),
+                         -np.inf)
+    lex_ids = np.where(lex_alive, lex_i, -1)
+    # pad both sets to one width and merge through the mesh's fuser
+    kp = max(dense_s.shape[1], lex_s.shape[1])
+
+    def pad(s, i):
+        w = kp - s.shape[1]
+        if w:
+            s = np.pad(s, ((0, 0), (0, w)), constant_values=-np.inf)
+            i = np.pad(i, ((0, 0), (0, w)), constant_values=-1)
+        return s, i
+
+    ds, di = pad(fused_dense, np.where(dense_i >= 0, dense_i, -1))
+    ls, li = pad(fused_lex, lex_ids)
+    s, i = merge_candidate_sets(
+        np.stack([ds, ls]).astype(np.float32),
+        np.stack([di, li]).astype(np.int32), k)
+    return D.mask_invalid_ids(s, i)

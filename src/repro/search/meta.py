@@ -1,0 +1,406 @@
+"""Metadata column store + predicate AST -> per-query slot bitmaps.
+
+Real traffic is rarely "pure ANN over everything": it is "nearest
+neighbors WHERE tenant=X AND date>Y". The PR-4 tombstone path proved the
+fused ADC kernels knock out arbitrary slots via the -1 pad sentinel —
+so a filter is a MASK change, not a shape change: compile the predicate
+to one boolean bitmap over the id space, AND it into each engine's
+validity story (see repro.core.db.VectorDB.query(where=...)), and every
+adc_mode / backend / metric serves the filtered result through the same
+compiled executables.
+
+The store is columnar and keyed by SLOT ID — the engines' stable,
+never-reused row addresses (repro.core.mutable.MutationMixin): typed
+columns (int / float / bool / categorical) with a presence mask, grown
+on the same power-of-two ladder as the engine mirrors. It syncs with
+the mutation lifecycle at the VectorDB layer: insert/upsert attach rows
+(upsert replaces), delete clears presence, compact is a no-op (ids are
+stable), and the columns ride snapshots as extra ``metastore__*``
+checkpoint leaves and the WAL as an optional per-record ``meta``
+segment — so filtered state survives crash recovery bit-for-bit.
+
+Predicates are a small AST (``Eq/Range/In/And/Or/Not``) with operator
+sugar (``&``, ``|``, ``~``). Evaluation semantics:
+
+* a row with no value in the referenced column matches nothing
+  (Eq/Range/In are all False there); ``Not`` flips the whole mask, so
+  ``~Eq("tenant", "a")`` DOES match rows with no tenant at all —
+  SQL-three-valued-logic purists should write
+  ``In("tenant", [...everything but a]) `` instead;
+* ``Range`` is numeric-only (int/float columns); lo/hi are inclusive,
+  None = unbounded;
+* categorical columns store int32 codes + a vocab; Eq/In against an
+  unseen category simply match nothing.
+
+``Predicate.key()`` is a stable, hashable structural key (the serving
+fronts group batches by it; the plan ledger salts plan keys with its
+crc32 so per-filter ledger counters stay separable).
+"""
+from __future__ import annotations
+
+import json
+import zlib
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+import numpy as np
+
+STATE_PREFIX = "metastore__"
+
+_KINDS = ("int", "float", "bool", "cat")
+_DTYPES = {"int": np.int64, "float": np.float64, "bool": np.bool_,
+           "cat": np.int32}
+
+
+def _kind_of(value) -> str:
+    """Column kind implied by a python value (bool before int: bool is a
+    subclass of int)."""
+    if isinstance(value, (bool, np.bool_)):
+        return "bool"
+    if isinstance(value, (int, np.integer)):
+        return "int"
+    if isinstance(value, (float, np.floating)):
+        return "float"
+    if isinstance(value, str):
+        return "cat"
+    raise TypeError(f"unsupported metadata value {value!r} "
+                    f"(int/float/bool/str only)")
+
+
+def _grow_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
+    """Power-of-two capacity growth, same ladder as the engine mirrors."""
+    if arr.shape[0] >= n:
+        return arr
+    cap = max(64, int(arr.shape[0]))
+    while cap < n:
+        cap *= 2
+    out = np.full((cap,), fill, arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+class Column:
+    """One typed column: values + presence, indexed by slot id."""
+
+    def __init__(self, kind: str):
+        assert kind in _KINDS, kind
+        self.kind = kind
+        self.values = np.zeros((0,), _DTYPES[kind])
+        self.present = np.zeros((0,), np.bool_)
+        # categorical: value <-> int32 code
+        self.vocab: Dict[str, int] = {}
+        self.rev: List[str] = []
+
+    def code_of(self, value: str, *, create: bool) -> Optional[int]:
+        code = self.vocab.get(value)
+        if code is None and create:
+            code = len(self.rev)
+            self.vocab[value] = code
+            self.rev.append(value)
+        return code
+
+    def set_rows(self, ids: np.ndarray, raw: Sequence) -> None:
+        """Write values for ``ids`` (presence True). None entries clear."""
+        hi = int(ids.max()) + 1 if ids.size else 0
+        self.values = _grow_to(self.values, hi, 0)
+        self.present = _grow_to(self.present, hi, False)
+        for i, v in zip(ids, raw):
+            if v is None:
+                self.present[i] = False
+                continue
+            got = _kind_of(v)
+            # ints are acceptable floats; anything else must match exactly
+            if got != self.kind and not (self.kind == "float" and got == "int"):
+                raise TypeError(
+                    f"column holds {self.kind!r} values, got {v!r}")
+            if self.kind == "cat":
+                self.values[i] = self.code_of(v, create=True)
+            else:
+                self.values[i] = v
+            self.present[i] = True
+
+    def clear_rows(self, ids: np.ndarray) -> None:
+        ids = ids[ids < self.present.shape[0]]
+        self.present[ids] = False
+
+    def view(self, n: int):
+        """(values, present) over id space [0, n), padding absent rows."""
+        m = min(n, self.values.shape[0])
+        values = np.zeros((n,), self.values.dtype)
+        present = np.zeros((n,), np.bool_)
+        values[:m] = self.values[:m]
+        present[:m] = self.present[:m]
+        return values, present
+
+
+class MetadataStore:
+    """Columnar metadata over the engine id space. See module docstring."""
+
+    def __init__(self):
+        self.cols: Dict[str, Column] = {}
+
+    def __len__(self) -> int:
+        return len(self.cols)
+
+    @property
+    def empty(self) -> bool:
+        return not self.cols
+
+    # ------------------------------------------------------------ writes
+    @staticmethod
+    def normalize(ids: np.ndarray, meta) -> Dict[str, list]:
+        """Row dicts or a columnar dict -> one columnar dict aligned to
+        ``ids`` (the WAL payload form; JSON-serializable). Missing keys
+        become None (absent)."""
+        n = len(ids)
+        if isinstance(meta, dict):
+            cols = {}
+            for name, vals in meta.items():
+                vals = list(vals)
+                if len(vals) != n:
+                    raise ValueError(
+                        f"meta column {name!r} has {len(vals)} values "
+                        f"for {n} ids")
+                cols[name] = vals
+            return cols
+        rows = list(meta)
+        if len(rows) != n:
+            raise ValueError(f"{len(rows)} meta rows for {n} ids")
+        names = set()
+        for r in rows:
+            names.update(r.keys())
+        return {name: [r.get(name) for r in rows] for name in sorted(names)}
+
+    def put(self, ids, meta, *, replace: bool = False) -> Dict[str, list]:
+        """Attach metadata for ``ids``. ``replace=True`` (upsert) first
+        clears every existing column at those ids so stale fields don't
+        linger. Returns the normalized columnar dict (the WAL form)."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        cols = self.normalize(ids, meta)
+        if replace:
+            self.delete(ids)
+        for name, vals in cols.items():
+            col = self.cols.get(name)
+            if col is None:
+                kind = None
+                for v in vals:
+                    if v is not None:
+                        kind = _kind_of(v)
+                        if kind == "int" and any(
+                                isinstance(x, (float, np.floating))
+                                and not isinstance(x, (bool, np.bool_))
+                                for x in vals if x is not None):
+                            kind = "float"
+                        break
+                if kind is None:
+                    continue  # all-None column: nothing to store
+                col = self.cols[name] = Column(kind)
+            col.set_rows(ids, vals)
+        return cols
+
+    def delete(self, ids) -> None:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        ids = ids[ids >= 0]
+        for col in self.cols.values():
+            col.clear_rows(ids)
+
+    # ------------------------------------------------------- evaluation
+    def mask(self, pred: "Predicate", n: int) -> np.ndarray:
+        """Evaluate ``pred`` over id space [0, n) -> (n,) bool bitmap."""
+        return pred.mask(self, n)
+
+    # ------------------------------------------------------ persistence
+    def state_leaves(self) -> Dict[str, np.ndarray]:
+        """Snapshot leaves (merged into the engine state_dict). Checkpoint
+        leaves must be arrays, so the schema and each categorical vocab
+        serialize as uint8 JSON bytes."""
+        leaves = {}
+        schema = {}
+        for name, col in self.cols.items():
+            n = int(col.present.shape[0])
+            schema[name] = {"kind": col.kind, "n": n}
+            leaves[f"{STATE_PREFIX}{name}__values"] = col.values[:n].copy()
+            leaves[f"{STATE_PREFIX}{name}__present"] = col.present[:n].copy()
+            if col.kind == "cat":
+                leaves[f"{STATE_PREFIX}{name}__vocab"] = np.frombuffer(
+                    json.dumps(col.rev).encode(), np.uint8).copy()
+        if schema:
+            leaves[f"{STATE_PREFIX}schema"] = np.frombuffer(
+                json.dumps(schema, sort_keys=True).encode(), np.uint8).copy()
+        return leaves
+
+    @classmethod
+    def from_leaves(cls, arrays: dict) -> "MetadataStore":
+        """Rebuild from (and pop) the ``metastore__*`` leaves of a loaded
+        checkpoint dict. Absent leaves -> empty store (old snapshots)."""
+        store = cls()
+        key = f"{STATE_PREFIX}schema"
+        if key not in arrays:
+            return store
+        schema = json.loads(bytes(np.asarray(arrays.pop(key), np.uint8)))
+        for name, info in schema.items():
+            col = Column(info["kind"])
+            vals = np.asarray(arrays.pop(f"{STATE_PREFIX}{name}__values"))
+            pres = np.asarray(arrays.pop(f"{STATE_PREFIX}{name}__present"))
+            col.values = vals.astype(_DTYPES[col.kind]).reshape(-1).copy()
+            col.present = pres.astype(np.bool_).reshape(-1).copy()
+            if col.kind == "cat":
+                col.rev = json.loads(bytes(np.asarray(
+                    arrays.pop(f"{STATE_PREFIX}{name}__vocab"), np.uint8)))
+                col.vocab = {v: i for i, v in enumerate(col.rev)}
+            store.cols[name] = col
+        return store
+
+
+# --------------------------------------------------------------- predicates
+class Predicate:
+    """Base AST node. Subclasses implement mask() and key()."""
+
+    def mask(self, store: MetadataStore, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def key(self) -> tuple:
+        raise NotImplementedError
+
+    def __and__(self, other: "Predicate") -> "And":
+        return And(self, other)
+
+    def __or__(self, other: "Predicate") -> "Or":
+        return Or(self, other)
+
+    def __invert__(self) -> "Not":
+        return Not(self)
+
+    def __repr__(self):
+        return f"{type(self).__name__}{self.key()[1:]}"
+
+
+def _column_view(store: MetadataStore, name: str, n: int):
+    col = store.cols.get(name)
+    if col is None:
+        return None, np.zeros((n,), _DTYPES["int"]), np.zeros((n,), np.bool_)
+    values, present = col.view(n)
+    return col, values, present
+
+
+class Eq(Predicate):
+    def __init__(self, column: str, value):
+        self.column = column
+        self.value = value
+
+    def mask(self, store, n):
+        col, values, present = _column_view(store, self.column, n)
+        if col is None:
+            return np.zeros((n,), np.bool_)
+        if col.kind == "cat":
+            if not isinstance(self.value, str):
+                return np.zeros((n,), np.bool_)
+            code = col.vocab.get(self.value)
+            if code is None:
+                return np.zeros((n,), np.bool_)
+            return present & (values == code)
+        try:
+            return present & (values == values.dtype.type(self.value))
+        except (TypeError, ValueError):
+            return np.zeros((n,), np.bool_)
+
+    def key(self):
+        return ("eq", self.column, repr(self.value))
+
+
+class Range(Predicate):
+    """lo <= value <= hi (inclusive; None = unbounded). Numeric columns
+    only — Range over a categorical/bool column raises."""
+
+    def __init__(self, column: str, lo=None, hi=None):
+        self.column = column
+        self.lo = lo
+        self.hi = hi
+
+    def mask(self, store, n):
+        col, values, present = _column_view(store, self.column, n)
+        if col is None:
+            return np.zeros((n,), np.bool_)
+        if col.kind not in ("int", "float"):
+            raise TypeError(
+                f"Range({self.column!r}) needs a numeric column, "
+                f"found {col.kind!r}")
+        out = present.copy()
+        if self.lo is not None:
+            out &= values >= self.lo
+        if self.hi is not None:
+            out &= values <= self.hi
+        return out
+
+    def key(self):
+        return ("range", self.column, repr(self.lo), repr(self.hi))
+
+
+class In(Predicate):
+    def __init__(self, column: str, values: Iterable):
+        self.column = column
+        self.values = tuple(values)
+
+    def mask(self, store, n):
+        col, values, present = _column_view(store, self.column, n)
+        if col is None:
+            return np.zeros((n,), np.bool_)
+        if col.kind == "cat":
+            codes = [col.vocab[v] for v in self.values
+                     if isinstance(v, str) and v in col.vocab]
+            if not codes:
+                return np.zeros((n,), np.bool_)
+            return present & np.isin(values, codes)
+        try:
+            wanted = np.asarray(self.values, values.dtype)
+        except (TypeError, ValueError):
+            return np.zeros((n,), np.bool_)
+        return present & np.isin(values, wanted)
+
+    def key(self):
+        return ("in", self.column, tuple(sorted(repr(v) for v in self.values)))
+
+
+class And(Predicate):
+    def __init__(self, *children: Predicate):
+        self.children = children
+
+    def mask(self, store, n):
+        out = np.ones((n,), np.bool_)
+        for c in self.children:
+            out &= c.mask(store, n)
+        return out
+
+    def key(self):
+        return ("and",) + tuple(c.key() for c in self.children)
+
+
+class Or(Predicate):
+    def __init__(self, *children: Predicate):
+        self.children = children
+
+    def mask(self, store, n):
+        out = np.zeros((n,), np.bool_)
+        for c in self.children:
+            out |= c.mask(store, n)
+        return out
+
+    def key(self):
+        return ("or",) + tuple(c.key() for c in self.children)
+
+
+class Not(Predicate):
+    def __init__(self, child: Predicate):
+        self.child = child
+
+    def mask(self, store, n):
+        return ~self.child.mask(store, n)
+
+    def key(self):
+        return ("not", self.child.key())
+
+
+def filter_hash(pred: Optional[Predicate]) -> int:
+    """Stable small int for plan-ledger salting (None -> 0)."""
+    if pred is None:
+        return 0
+    return zlib.crc32(json.dumps(pred.key()).encode())

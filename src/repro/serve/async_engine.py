@@ -81,6 +81,7 @@ import numpy as np
 from repro.core.db import PLAN_BUCKETS
 from repro.serve.engine import (WRITE_KINDS, Request, WriteRequest,
                                 apply_db_write, assemble_queries, bucket_of,
+                                query_kwargs, read_group,
                                 summarize_latencies)
 
 
@@ -316,12 +317,20 @@ class AsyncQueryEngine:
         return job.future
 
     def submit(self, query: np.ndarray, k: int = 10,
-               timeout: Optional[float] = None) -> Future:
+               timeout: Optional[float] = None, *, where=None,
+               hybrid: Optional[float] = None,
+               text: Optional[str] = None) -> Future:
         """Thread-safe read submission; returns a Future resolving to
         (scores (k,), ids (k,)) — bitwise the result the synchronous pump
         would produce for the same submission order. Blocks (or raises
-        ``BackpressureError``, per ``overflow``) when the queue is full."""
-        job = Request(-1, np.asarray(query), k, time.perf_counter())
+        ``BackpressureError``, per ``overflow``) when the queue is full.
+        ``where``/``hybrid``/``text`` thread through to
+        ``VectorDB.query``; reads co-batch only within one
+        (predicate, alpha) group (see ``read_group``)."""
+        if hybrid is not None and text is None:
+            raise ValueError("hybrid submit needs the query text")
+        job = Request(-1, np.asarray(query), k, where, hybrid, text,
+                      time.perf_counter())
         job.future = Future()
         return self._enqueue(job, timeout)
 
@@ -342,7 +351,7 @@ class AsyncQueryEngine:
         t = time.perf_counter()
         jobs = []
         for q in queries:
-            job = Request(next(self._rid), np.asarray(q), k, t)
+            job = Request(next(self._rid), np.asarray(q), k, t_enqueue=t)
             job.future = Future()
             jobs.append(job)
         with self._idle:
@@ -468,7 +477,8 @@ class AsyncQueryEngine:
         q = assemble_queries(batch, bucket_of(len(batch), self.BUCKETS))
         try:
             qv = self.encoder(q) if self.encoder is not None else q
-            scores, ids = self.db.query(qv, k=k)
+            scores, ids = self.db.query(qv, k=k,
+                                        **query_kwargs(batch, len(q)))
         except Exception as e:
             self._slots.release()
             for r in batch:
@@ -501,6 +511,7 @@ class AsyncQueryEngine:
             # batch-size behavior that keeps latency flat under load
             self._slots.acquire()
             batch = [job]
+            group = read_group(job)  # filter/hybrid batch-compat key
             deadline = None  # lazily armed: saturated queues never sleep
             closer = None  # the write (or sentinel) that closed the batch
             while len(batch) < self.max_batch and not self._discard.is_set():
@@ -525,6 +536,11 @@ class AsyncQueryEngine:
                 if isinstance(nxt, WriteRequest):
                     closer = nxt  # a write CLOSES the batch: reads ahead of
                     break         # it must not observe it (read-your-writes)
+                if read_group(nxt) != group:
+                    # a different (predicate, alpha) group also closes the
+                    # batch; the read stays at the head for the next one
+                    pending.appendleft(nxt)
+                    break
                 batch.append(nxt)
             self._dispatch(batch)
             if closer is not None:
@@ -563,6 +579,9 @@ class AsyncQueryEngine:
                     batch = []
                 self._apply_write(job)
             else:
+                if batch and read_group(job) != read_group(batch[0]):
+                    flush(batch)  # group change closes here too
+                    batch = []
                 batch.append(job)
                 if len(batch) >= self.max_batch:
                     flush(batch)

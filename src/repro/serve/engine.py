@@ -73,6 +73,9 @@ class Request:
     rid: int
     query: np.ndarray  # (d,) embedding or token ids, per engine mode
     k: int = 10
+    where: Optional[object] = None   # repro.search.meta.Predicate
+    hybrid: Optional[float] = None   # BM25 fusion alpha (None = dense)
+    text: Optional[str] = None       # raw query text for the lexical side
     t_enqueue: float = 0.0
     result: Optional[tuple] = None
     t_done: float = 0.0
@@ -94,6 +97,16 @@ class WriteRequest:
 # --------------------------------------------------------------- shared
 # batch machinery used by BOTH serving fronts (sync pump + async batcher)
 
+def read_group(r: Request) -> tuple:
+    """Batch-compatibility key for a read: requests only co-batch when
+    they share the same predicate (structural key) and the same hybrid
+    alpha — ``VectorDB.query`` takes ONE bitmap / one fusion weight per
+    batch. Both fronts close a read run at a group change, exactly like
+    they close it at a write."""
+    return (None if r.where is None else r.where.key(),
+            None if r.hybrid is None else float(r.hybrid))
+
+
 def bucket_of(n: int, buckets=PLAN_BUCKETS) -> int:
     """Smallest ladder bucket holding n requests (caps at the top rung —
     the fronts never assemble batches past max_batch anyway)."""
@@ -111,6 +124,23 @@ def assemble_queries(take: List[Request], bucket: int) -> np.ndarray:
     if bucket > len(take):
         q = np.concatenate([q, np.repeat(q[-1:], bucket - len(take), axis=0)])
     return q
+
+
+def query_kwargs(take: List[Request], n_rows: int) -> dict:
+    """Per-batch ``VectorDB.query`` kwargs from a group-homogeneous read
+    run (see ``read_group``): the shared predicate, and for hybrid the
+    shared alpha plus the batch's texts padded to ``n_rows`` by repeating
+    the last one (mirroring ``assemble_queries``)."""
+    head = take[0]
+    kw = {}
+    if head.where is not None:
+        kw["where"] = head.where
+    if head.hybrid is not None:
+        texts = [r.text for r in take]
+        texts += [texts[-1]] * (n_rows - len(texts))
+        kw["hybrid"] = head.hybrid
+        kw["hybrid_texts"] = texts
+    return kw
 
 
 def apply_db_write(db, kind: str, vectors=None, ids=None):
@@ -175,6 +205,17 @@ def summarize_latencies(latencies_ms, writes_applied: int, db,
             stats["adc_sched_cache_misses"] = int(adc["sched_cache_misses"])
         stats["adc_sharing_factor"] = float(adc["sharing_sum"] / b)
         stats["adc_effective_nprobe"] = float(adc["eff_nprobe_sum"] / b)
+    flt = getattr(db, "filter_stats", None)
+    if flt is not None:
+        # filtered/hybrid telemetry: batches that carried a predicate,
+        # cumulative bitmap compile time, where the selectivities landed,
+        # hybrid fusion count, and IVF nprobe boosts taken
+        stats["filtered_batches"] = int(flt["filtered_batches"])
+        stats["filter_bitmap_ms"] = float(flt["bitmap_build_ms"])
+        stats["hybrid_merges"] = int(flt["hybrid_merges"])
+        stats["filter_nprobe_boosts"] = int(flt["nprobe_boosts"])
+        for kk, v in flt["selectivity_hist"].items():
+            stats[f"filter_sel_{kk}"] = int(v)
     if extra:
         stats.update(extra)
     return stats
@@ -203,14 +244,21 @@ class QueryEngine:
         self.latencies_ms: List[float] = []
         self.writes_applied = 0
 
-    def submit(self, query: np.ndarray, k: int = 10) -> int:
+    def submit(self, query: np.ndarray, k: int = 10, *,
+               where=None, hybrid: Optional[float] = None,
+               text: Optional[str] = None) -> int:
         """Enqueue one read; returns the request id to poll via
         ``result``. The query is captured as-is ((d,) embedding, or token
         ids when the engine has an encoder); nothing runs until the next
-        ``pump``."""
+        ``pump``. ``where``/``hybrid``/``text`` thread through to
+        ``VectorDB.query(where=..., hybrid=...)``; reads only co-batch
+        with reads sharing the same (predicate, alpha) group."""
+        if hybrid is not None and text is None:
+            raise ValueError("hybrid submit needs the query text")
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(Request(rid, np.asarray(query), k, time.perf_counter()))
+        self.queue.append(Request(rid, np.asarray(query), k, where, hybrid,
+                                  text, time.perf_counter()))
         return rid
 
     def submit_write(self, kind: str, vectors=None, ids=None) -> int:
@@ -244,13 +292,15 @@ class QueryEngine:
         if not self.queue:
             return 0
         oldest_wait = (time.perf_counter() - self.queue[0].t_enqueue) * 1e3
-        n_reads = 0  # contiguous run of reads at the head
+        group = read_group(self.queue[0])
+        n_reads = 0  # contiguous same-group run of reads at the head
         while (n_reads < len(self.queue) and n_reads < self.max_batch
-               and isinstance(self.queue[n_reads], Request)):
+               and isinstance(self.queue[n_reads], Request)
+               and read_group(self.queue[n_reads]) == group):
             n_reads += 1
-        # a write right behind the run CLOSES the batch: the run can never
-        # grow past it, so waiting out max_wait_ms would only stall these
-        # reads and the write behind them
+        # a write (or a different filter/hybrid group) right behind the
+        # run CLOSES the batch: the run can never grow past it, so waiting
+        # out max_wait_ms would only stall these reads and what's behind
         closed = n_reads < len(self.queue) and n_reads < self.max_batch
         if (not force and not closed and n_reads < self.max_batch
                 and oldest_wait < self.max_wait_ms):
@@ -261,7 +311,7 @@ class QueryEngine:
         k = max(r.k for r in take)
         q = assemble_queries(take, bucket_of(n, self.BUCKETS))
         qv = self.encoder(q) if self.encoder is not None else q
-        scores, ids = self.db.query(qv, k=k)
+        scores, ids = self.db.query(qv, k=k, **query_kwargs(take, len(q)))
         scores, ids = jax.device_get((scores, ids))  # the batch's one host sync
         t = time.perf_counter()
         for i, r in enumerate(take):
